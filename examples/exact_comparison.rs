@@ -1,0 +1,70 @@
+//! Correctness against exact inference (paper §IV-E, Fig 5).
+//!
+//! Builds tractable 10x10 Ising grids, computes exact marginals by
+//! variable elimination, and reports the KL divergence of the converged
+//! BP marginals for every scheduling policy — demonstrating that the
+//! randomized scheduling changes *when* messages are updated, not *what*
+//! the algorithm converges to.
+//!
+//! ```bash
+//! cargo run --release --example exact_comparison
+//! ```
+
+use bp_sched::coordinator::{run, RunParams};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::pjrt::PjrtEngine;
+use bp_sched::exact;
+use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(1234);
+    let g = DatasetSpec::Ising { n: 10, c: 2.0 }.generate(&mut rng)?;
+    println!("exact marginals by variable elimination (treewidth ~10)...");
+    let exact_m = exact::exact_marginals(&g)?;
+
+    let params = RunParams { want_marginals: true, ..Default::default() };
+
+    println!("\n{:<22} {:>10} {:>12} {:>10}", "policy", "converged", "mean KL", "iters");
+    let mut policies: Vec<(String, Box<dyn Scheduler>)> = vec![
+        ("lbp".into(), Box::new(Lbp::new())),
+        ("rbp p=1/16".into(), Box::new(Rbp::new(1.0 / 16.0))),
+        ("rs p=1/16 h=2".into(), Box::new(ResidualSplash::new(1.0 / 16.0, 2))),
+        ("rnbp lowp=0.7".into(), Box::new(Rnbp::synthetic(0.7, 5))),
+    ];
+    for (label, sched) in policies.iter_mut() {
+        let mut eng = PjrtEngine::from_default_dir()?;
+        let r = run(&g, &mut eng, sched.as_mut(), &params)?;
+        let kl = exact::kl::mean_marginal_kl(
+            &exact_m,
+            r.marginals.as_ref().unwrap(),
+            g.max_arity,
+        );
+        println!(
+            "{:<22} {:>10} {:>12.3e} {:>10}",
+            label,
+            if r.converged() { "yes" } else { "no" },
+            kl,
+            r.iterations
+        );
+    }
+
+    // serial baseline
+    let sparams = RunParams {
+        want_marginals: true,
+        cost_model: None,
+        ..Default::default()
+    };
+    let r = srbp::run_serial(&g, &sparams)?;
+    let kl = exact::kl::mean_marginal_kl(&exact_m, r.marginals.as_ref().unwrap(), g.max_arity);
+    println!(
+        "{:<22} {:>10} {:>12.3e} {:>10}",
+        "srbp (serial)",
+        if r.converged() { "yes" } else { "no" },
+        kl,
+        r.iterations
+    );
+
+    println!("\nAll policies converge to the same fixed-point quality (paper Fig 5).");
+    Ok(())
+}

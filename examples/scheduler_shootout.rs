@@ -1,0 +1,88 @@
+//! Scheduler shootout: every scheduling policy on the same dataset.
+//!
+//! Reproduces the paper's qualitative story on one dataset in one command:
+//! LBP is fast but may not converge; RBP/RS converge more but pay
+//! selection overhead; RnBP gets both; SRBP is the serial baseline.
+//!
+//! ```bash
+//! cargo run --release --example scheduler_shootout -- [ising_n] [C] [graphs]
+//! ```
+
+use bp_sched::coordinator::campaign::{run_campaign, Speedup};
+use bp_sched::coordinator::{run, RunParams, TimeBasis};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::pjrt::PjrtEngine;
+use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::parallel::default_threads;
+use bp_sched::util::stats::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(40);
+    let c: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(2.5);
+    let count: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(5);
+
+    let spec = DatasetSpec::Ising { n, c };
+    let ds = spec.generate_many(count, 20_260_710)?;
+    println!(
+        "dataset: {} ({} graphs), threads={}",
+        ds.name,
+        ds.graphs.len(),
+        default_threads()
+    );
+    let params = RunParams { timeout: 30.0, ..Default::default() };
+
+    type MkSched = Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>;
+    let policies: Vec<(&str, MkSched)> = vec![
+        ("lbp", Box::new(|_| Box::new(Lbp::new()))),
+        ("rbp p=1/16", Box::new(|_| Box::new(Rbp::new(1.0 / 16.0)))),
+        ("rs p=1/16 h=2", Box::new(|_| Box::new(ResidualSplash::new(1.0 / 16.0, 2)))),
+        ("rnbp lowp=0.7", Box::new(|s| Box::new(Rnbp::synthetic(0.7, s)))),
+        ("rnbp lowp=0.1", Box::new(|s| Box::new(Rnbp::synthetic(0.1, s)))),
+    ];
+
+    println!(
+        "{:<16} {:>6} {:>11} {:>11} {:>12} {:>8} {:>8}",
+        "scheduler", "conv", "sim(V100)", "wallclock", "msg updates", "iters", "select%"
+    );
+
+    // serial baseline first (native engine, priority queue)
+    let base = run_campaign("srbp", &ds.graphs, default_threads(), |_, g| {
+        srbp::run_serial(g, &params)
+    })?;
+    print_row("srbp (serial)", &base);
+
+    let mut campaigns = Vec::new();
+    for (label, mk) in &policies {
+        let camp = run_campaign(*label, &ds.graphs, default_threads(), |i, g| {
+            let mut eng = PjrtEngine::from_default_dir()?;
+            let mut s = mk(i as u64 + 1);
+            run(g, &mut eng, s.as_mut(), &params)
+        })?;
+        print_row(label, &camp);
+        campaigns.push(camp);
+    }
+
+    println!("\nspeedups over SRBP (paper Tables I-III style):");
+    for camp in &campaigns {
+        println!(
+            "  {:<16} {}",
+            camp.label,
+            Speedup::compute(camp, &base, TimeBasis::Simulated).render()
+        );
+    }
+    Ok(())
+}
+
+fn print_row(label: &str, c: &bp_sched::coordinator::campaign::Campaign) {
+    println!(
+        "{:<16} {:>5.0}% {:>11} {:>11} {:>12} {:>8.0} {:>7.1}%",
+        label,
+        c.converged_fraction() * 100.0,
+        fmt_duration(c.mean_time_lower_bound(TimeBasis::Simulated)),
+        fmt_duration(c.mean_time_lower_bound(TimeBasis::Wallclock)),
+        c.total_message_updates(),
+        c.mean_iterations(),
+        100.0 * c.select_fraction(TimeBasis::Simulated)
+    );
+}

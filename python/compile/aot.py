@@ -1,0 +1,185 @@
+"""AOT compiler: lower the L2 candidate/marginal programs to HLO text.
+
+Python runs ONCE, here, at build time (`make artifacts`).  The rust
+coordinator loads the emitted HLO text through the PJRT C API and never
+touches python again.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the pinned xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Layout:
+  artifacts/manifest.txt                 one `config ...` line per class
+  artifacts/<class>/cand_k<K>.hlo.txt    candidate program per bucket
+  artifacts/<class>/marginals.hlo.txt    marginal program
+
+The manifest is a line-oriented `key=value` format parsed by
+rust/src/runtime/manifest.rs — keep in sync.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, GraphClassConfig
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_candidates(cfg: GraphClassConfig, bucket: int, semiring: str = "sum") -> str:
+    shapes = model.candidate_shapes(cfg, bucket)
+    fn = model.candidates_fn(semiring=semiring, interpret=True)
+    lowered = jax.jit(fn).lower(*shapes)
+    return to_hlo_text(lowered)
+
+
+def lower_marginals(cfg: GraphClassConfig) -> str:
+    shapes = model.marginal_shapes(cfg)
+    lowered = jax.jit(model.marginals_fn(interpret=True)).lower(*shapes)
+    return to_hlo_text(lowered)
+
+
+def _fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make` and aot.py skip
+    regeneration when nothing changed."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for rel in (
+        "configs.py",
+        "model.py",
+        "aot.py",
+        os.path.join("kernels", "msg_update.py"),
+    ):
+        with open(os.path.join(base, rel), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def manifest_lines(configs) -> list:
+    lines = [f"version={MANIFEST_VERSION}", f"fingerprint={_fingerprint()}"]
+    for cfg in configs:
+        buckets = ",".join(str(b) for b in cfg.buckets)
+        lines.append(
+            f"config name={cfg.name} V={cfg.num_vertices} M={cfg.num_edges} "
+            f"A={cfg.arity} D={cfg.max_in_degree} buckets={buckets}"
+        )
+    return lines
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="artifacts directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated class names to build"
+    )
+    ap.add_argument(
+        "--force", action="store_true", help="rebuild even if fingerprint matches"
+    )
+    args = ap.parse_args(argv)
+
+    out_dir = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"
+    )
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    configs = CONFIGS
+    if args.only:
+        names = set(args.only.split(","))
+        configs = [c for c in CONFIGS if c.name in names]
+        missing = names - {c.name for c in configs}
+        if missing:
+            print(f"unknown classes: {sorted(missing)}", file=sys.stderr)
+            return 2
+
+    manifest_path = os.path.join(out_dir, "manifest.txt")
+    want_manifest = "\n".join(manifest_lines(CONFIGS)) + "\n"
+    if (
+        not args.force
+        and not args.only
+        and os.path.exists(manifest_path)
+        and open(manifest_path).read() == want_manifest
+    ):
+        # Fingerprint covers all compile-path sources; nothing to do.
+        print(f"artifacts up to date in {out_dir}")
+        return 0
+
+    t_all = time.time()
+    n_built = 0
+    for cfg in configs:
+        cfg_dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(cfg_dir, exist_ok=True)
+        t0 = time.time()
+        for bucket in cfg.buckets:
+            for semiring, tag in (("sum", "sp"), ("max", "mp")):
+                text = lower_candidates(cfg, bucket, semiring)
+                path = os.path.join(cfg_dir, f"cand_{tag}_k{bucket}.hlo.txt")
+                if write_if_changed(path, text):
+                    n_built += 1
+        text = lower_marginals(cfg)
+        if write_if_changed(os.path.join(cfg_dir, "marginals.hlo.txt"), text):
+            n_built += 1
+        print(
+            f"  {cfg.shorthand}  ({time.time() - t0:.1f}s)",
+            flush=True,
+        )
+    if not args.only:
+        # A partial build must not stamp the full manifest, or a later full
+        # build would wrongly conclude everything is up to date.
+        write_if_changed(manifest_path, want_manifest)
+        # Drop artifacts for buckets/configs that no longer exist, so the
+        # rust runtime can never load a file that disagrees with the
+        # manifest.
+        expected = set()
+        for cfg in CONFIGS:
+            for bucket in cfg.buckets:
+                for tag in ("sp", "mp"):
+                    expected.add(
+                        os.path.join(out_dir, cfg.name, f"cand_{tag}_k{bucket}.hlo.txt")
+                    )
+            expected.add(os.path.join(out_dir, cfg.name, "marginals.hlo.txt"))
+        n_stale = 0
+        for root, _dirs, files in os.walk(out_dir):
+            for f in files:
+                path = os.path.join(root, f)
+                if f.endswith(".hlo.txt") and path not in expected:
+                    os.remove(path)
+                    n_stale += 1
+        if n_stale:
+            print(f"removed {n_stale} stale artifact(s)")
+    print(
+        f"wrote {n_built} artifact(s) to {out_dir} in {time.time() - t_all:.1f}s"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""Graph-class configurations shared by the AOT compiler and the tests.
+
+Every artifact is compiled for a *graph class*: a static shape envelope
+(V vertices, M directed edges, A max arity, D max in-degree) plus a ladder
+of frontier-capacity buckets.  The rust coordinator generates concrete
+graphs padded into the envelope and picks the smallest bucket that fits
+each frontier (vLLM-style bucketed batching).
+
+The manifest emitted by aot.py is the single source of truth the rust side
+parses; keep the field names in sync with `rust/src/runtime/manifest.rs`.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+# Stand-in for -inf that survives f32 arithmetic without NaNs (inf - inf).
+NEG: float = -1.0e30
+
+# Frontier buckets are multiples of BK so the Pallas grid always divides.
+# Must be a multiple of every kernels.msg_update.block_size() value.
+BK_ALIGN: int = 512
+
+
+def round_up(x: int, align: int = BK_ALIGN) -> int:
+    return ((x + align - 1) // align) * align
+
+
+def bucket_ladder(m: int) -> List[int]:
+    """Geometric ladder of frontier capacities, capped by (aligned) M.
+
+    Always contains the aligned full-frontier size so synchronous sweeps
+    (LBP, RnBP high-parallelism rounds) use a single exact-fit executable.
+    """
+    full = round_up(m)
+    ladder = [k for k in (512, 2048, 8192, 32768, 131072) if k < full]
+    ladder.append(full)
+    return ladder
+
+
+@dataclass(frozen=True)
+class GraphClassConfig:
+    """Static shape envelope for one class of PGMs."""
+
+    name: str
+    num_vertices: int  # V (padded)
+    num_edges: int  # M, directed (padded); undirected |E| = M/2
+    arity: int  # A, max vertex arity (states per variable)
+    max_in_degree: int  # D, max incoming directed edges per vertex
+    buckets: List[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.buckets:
+            object.__setattr__(self, "buckets", bucket_ladder(self.num_edges))
+
+    @property
+    def shorthand(self) -> str:
+        return (
+            f"{self.name}: V={self.num_vertices} M={self.num_edges} "
+            f"A={self.arity} D={self.max_in_degree} buckets={self.buckets}"
+        )
+
+
+def ising_config(name: str, n: int) -> GraphClassConfig:
+    """N x N Ising grid: binary variables, 4-neighbourhood."""
+    undirected = 2 * n * (n - 1)
+    return GraphClassConfig(
+        name=name,
+        num_vertices=n * n,
+        num_edges=2 * undirected,
+        arity=2,
+        max_in_degree=4,
+    )
+
+
+def chain_config(name: str, n: int) -> GraphClassConfig:
+    """Length-N chain of binary variables."""
+    return GraphClassConfig(
+        name=name,
+        num_vertices=n,
+        num_edges=2 * (n - 1),
+        arity=2,
+        max_in_degree=2,
+    )
+
+
+def potts_config(name: str, n: int, q: int) -> GraphClassConfig:
+    """N x N grid of q-state Potts variables (generalizes Ising to A=q)."""
+    undirected = 2 * n * (n - 1)
+    return GraphClassConfig(
+        name=name,
+        num_vertices=n * n,
+        num_edges=2 * undirected,
+        arity=q,
+        max_in_degree=4,
+    )
+
+
+def protein_config(name: str, v: int, e: int, arity: int, deg: int) -> GraphClassConfig:
+    """Envelope for the synthetic protein-like irregular graphs."""
+    return GraphClassConfig(
+        name=name,
+        num_vertices=v,
+        num_edges=2 * e,
+        arity=arity,
+        max_in_degree=deg,
+    )
+
+
+# The registry: every experiment in DESIGN.md §5 maps to one of these.
+# ▽-scaled classes keep the default bench suite CPU-friendly; the paper-size
+# classes (ising100/ising200/chain100k) are compiled too and selected with
+# --full on the rust side.
+CONFIGS: List[GraphClassConfig] = [
+    ising_config("ising10", 10),  # Fig 5 correctness (exact inference)
+    ising_config("ising40", 40),  # ▽ stand-in for Ising 100x100
+    ising_config("ising60", 60),  # ▽ stand-in for Ising 200x200
+    ising_config("ising100", 100),  # paper size (Figs 2a,4a-c; Tables I-III)
+    ising_config("ising200", 200),  # paper size (Figs 2b,4d)
+    chain_config("chain20k", 20_000),  # ▽ stand-in for Chain 100000
+    chain_config("chain100k", 100_000),  # paper size (Fig 2c,4e)
+    protein_config("protein", v=192, e=512, arity=81, deg=6),  # Fig 4f
+    potts_config("potts40_5", 40, 5),  # q-state extension (A=5 grid)
+]
+
+
+def by_name(name: str) -> GraphClassConfig:
+    for cfg in CONFIGS:
+        if cfg.name == name:
+            return cfg
+    raise KeyError(f"unknown graph class {name!r}")

@@ -1,0 +1,148 @@
+"""Layer-1 Pallas kernel: the BP message-update contraction.
+
+The compute hot-spot of belief propagation is, for every directed edge
+e = (u -> v) in the frontier, the log-sum-exp contraction
+
+    new_m[e, b] = LSE_a( log_pair[e, a, b] + cavity[e, a] )
+
+where `cavity[e, a] = belief_u(a) - log m_{v->u}(a)` has already been
+gathered by the L2 model.  This file implements that contraction as a
+Pallas kernel tiled over the frontier dimension.
+
+Hardware adaptation (DESIGN.md §2): the paper's CUDA kernel assigns one
+thread per message and walks neighbours from global memory.  On TPU the
+same insight — bulk-parallel, frontier-proportional work — is expressed as
+a BlockSpec pipeline: HBM->VMEM tiles of [BK, A, A] pairwise potentials and
+[BK, A] cavities, contracted on the VPU (A<=8) or staged for the MXU as a
+max-shifted exp-matmul (A=81 protein graphs).  `interpret=True` is
+mandatory here: the CPU PJRT plugin cannot execute Mosaic custom-calls, so
+the kernel lowers to plain HLO for the rust runtime while keeping the
+block structure that a real TPU build would use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def block_size(arity: int) -> int:
+    """Frontier-tile size: sized so the [BK, A, A] tile fits VMEM comfortably.
+
+    A<=8  -> BK=512: 512*8*8*4B   = 128 KiB tile — still far under VMEM
+             with double buffering, and 4x fewer grid steps than BK=128
+             (each grid step is a serialized while-loop iteration on the
+             CPU interpret path and a pipeline stage on real TPU, so
+             fewer/larger tiles win on both; see EXPERIMENTS.md §Perf).
+    A=81  -> BK=32:  32*81*81*4B  = 820 KiB tile.
+    """
+    return 512 if arity <= 8 else 32
+
+
+def _lse_contract_kernel(pair_ref, cavity_ref, out_ref):
+    """One [BK, A, A] x [BK, A] -> [BK, A] log-space contraction tile.
+
+    Numerically stable LSE over the source-arity axis `a`:
+        t[k, a, b] = pair[k, a, b] + cavity[k, a]
+        m[k, b]    = max_a t[k, a, b]
+        out[k, b]  = m + log(sum_a exp(t - m))
+    Padded arity lanes arrive as NEG (~-1e30); exp(t - m) underflows to 0
+    for them unless the whole column is padding, in which case the result
+    stays ~NEG and the L2 model masks it out.
+    """
+    pair = pair_ref[...]  # [BK, A, A]
+    cavity = cavity_ref[...]  # [BK, A]
+    t = pair + cavity[:, :, None]
+    m = jnp.max(t, axis=1)  # [BK, A]
+    # Clamp the shift so that all-padding columns (m ~ -1e30) do not produce
+    # exp(0)*A followed by a catastrophic re-add; the result is still ~NEG.
+    safe_m = jnp.maximum(m, -1.0e30)
+    s = jnp.sum(jnp.exp(t - safe_m[:, None, :]), axis=1)
+    out_ref[...] = safe_m + jnp.log(s)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lse_contract(pair: jax.Array, cavity: jax.Array, interpret: bool = True) -> jax.Array:
+    """Batched message contraction: [K, A, A] x [K, A] -> [K, A].
+
+    K must be a multiple of `block_size(A)`; the AOT bucket ladder
+    guarantees this (all buckets are multiples of 128).
+    """
+    k, a, a2 = pair.shape
+    assert a == a2, f"pairwise potential must be square, got {pair.shape}"
+    assert cavity.shape == (k, a), (pair.shape, cavity.shape)
+    bk = block_size(a)
+    assert k % bk == 0, f"frontier capacity {k} not a multiple of block {bk}"
+    return pl.pallas_call(
+        _lse_contract_kernel,
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((bk, a, a), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, a), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, a), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, a), pair.dtype),
+        interpret=interpret,
+    )(pair, cavity)
+
+
+def _max_contract_kernel(pair_ref, cavity_ref, out_ref):
+    """Max-product contraction tile (MAP inference):
+        out[k, b] = max_a( pair[k, a, b] + cavity[k, a] )
+    Same tiling as the sum-product kernel; the tropical semiring swaps
+    LSE for max, so padded NEG lanes fall out for free.
+    """
+    pair = pair_ref[...]
+    cavity = cavity_ref[...]
+    out_ref[...] = jnp.max(pair + cavity[:, :, None], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def max_contract(pair: jax.Array, cavity: jax.Array, interpret: bool = True) -> jax.Array:
+    """Batched max-product contraction: [K, A, A] x [K, A] -> [K, A]."""
+    k, a, a2 = pair.shape
+    assert a == a2, f"pairwise potential must be square, got {pair.shape}"
+    assert cavity.shape == (k, a), (pair.shape, cavity.shape)
+    bk = block_size(a)
+    assert k % bk == 0, f"frontier capacity {k} not a multiple of block {bk}"
+    return pl.pallas_call(
+        _max_contract_kernel,
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((bk, a, a), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, a), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, a), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, a), pair.dtype),
+        interpret=interpret,
+    )(pair, cavity)
+
+
+def _belief_kernel(unary_ref, msgsum_ref, out_ref):
+    """Vertex belief tile: log unary + sum of incoming log-messages."""
+    out_ref[...] = unary_ref[...] + msgsum_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def belief_combine(unary: jax.Array, msgsum: jax.Array, interpret: bool = True) -> jax.Array:
+    """Elementwise belief combination as a Pallas kernel: [V, A] + [V, A].
+
+    Kept as a kernel (rather than a bare jnp.add) so the whole L2 hot loop
+    is expressible through the Pallas pipeline; XLA fuses it away on CPU.
+    V may be arbitrary; pallas pads the trailing tile.
+    """
+    v, a = unary.shape
+    bk = 128 if v >= 128 else v
+    grid = (v + bk - 1) // bk
+    return pl.pallas_call(
+        _belief_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((bk, a), lambda i: (i, 0)),
+            pl.BlockSpec((bk, a), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, a), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, a), unary.dtype),
+        interpret=interpret,
+    )(unary, msgsum)

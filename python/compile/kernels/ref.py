@@ -1,0 +1,133 @@
+"""Pure-jnp/numpy correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is deliberately written in the most direct way possible —
+no tiling, no masking tricks beyond what the math requires — so the Pallas
+kernels and the gather-based candidate program can be checked against it
+(pytest + hypothesis, see python/tests/).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1.0e30
+
+
+def lse_contract_ref(pair, cavity):
+    """Reference for kernels.msg_update.lse_contract.
+
+    new[k, b] = logsumexp_a( pair[k, a, b] + cavity[k, a] )
+    computed with the same clamped max-shift as the kernel.
+    """
+    t = pair + cavity[:, :, None]
+    m = jnp.maximum(jnp.max(t, axis=1), NEG)
+    return m + jnp.log(jnp.sum(jnp.exp(t - m[:, None, :]), axis=1))
+
+
+def max_contract_ref(pair, cavity):
+    """Reference for kernels.msg_update.max_contract (tropical semiring)."""
+    return jnp.max(pair + cavity[:, :, None], axis=1)
+
+
+def candidates_ref(
+    logm, log_unary, log_pair, in_edges, src, dst, rev, arity, frontier,
+    semiring="sum", damping=0.0,
+):
+    """Dense numpy reference of the full candidate-update step.
+
+    For every frontier entry e = (u -> v):
+      belief_u  = log_unary[u] + sum_{k in in(u)} logm[k]
+      cavity    = belief_u - logm[rev[e]]
+      new[e,b]  = LSE_a( log_pair[e,a,b] + cavity[a] ),  normalized over the
+                  valid arity lanes of v, padding lanes stored as 0
+      res[e]    = max_b | new[e,b] - logm[e,b] |
+    Padded frontier lanes (id -1) return new=0, res=0.
+    """
+    logm = np.asarray(logm, dtype=np.float64)
+    log_unary = np.asarray(log_unary, dtype=np.float64)
+    log_pair = np.asarray(log_pair, dtype=np.float64)
+    k_cap = len(frontier)
+    a_max = logm.shape[1]
+    new = np.zeros((k_cap, a_max), dtype=np.float64)
+    res = np.zeros(k_cap, dtype=np.float64)
+    for slot, e in enumerate(np.asarray(frontier)):
+        if e < 0:
+            continue
+        u, v = src[e], dst[e]
+        belief = log_unary[u].copy()
+        for k in in_edges[u]:
+            if k >= 0:
+                belief += logm[k]
+        cavity = belief - logm[rev[e]]
+        au, av = arity[u], arity[v]
+        out = np.full(a_max, NEG)
+        for b in range(av):
+            t = log_pair[e, :au, b] + cavity[:au]
+            if semiring == "max":
+                out[b] = t.max()
+            else:
+                m = max(t.max(), NEG)
+                out[b] = m + np.log(np.exp(t - m).sum())
+        # normalize over valid lanes of v
+        m = out[:av].max()
+        z = m + np.log(np.exp(out[:av] - m).sum())
+        out[:av] -= z
+        out[av:] = 0.0
+        # log-domain damping: geometric mixing with the old message,
+        # then renormalize (the mix of two normalized distributions is
+        # not itself normalized)
+        if damping > 0.0:
+            out[:av] = (1.0 - damping) * out[:av] + damping * logm[e, :av]
+            m = out[:av].max()
+            z = m + np.log(np.exp(out[:av] - m).sum())
+            out[:av] -= z
+        new[slot] = out
+        res[slot] = np.abs(out - logm[e]).max()
+    return new.astype(np.float32), res.astype(np.float32)
+
+
+def marginals_ref(logm, log_unary, in_edges, arity):
+    """Dense numpy reference of the vertex-marginal computation.
+
+    b_i(x) proportional to psi_i(x) * prod_{k in in(i)} m_k(x), returned as
+    normalized probabilities over the valid lanes (padding lanes = 0).
+    """
+    logm = np.asarray(logm, dtype=np.float64)
+    log_unary = np.asarray(log_unary, dtype=np.float64)
+    v_cnt, a_max = log_unary.shape
+    out = np.zeros((v_cnt, a_max), dtype=np.float64)
+    for v in range(v_cnt):
+        b = log_unary[v].copy()
+        for k in in_edges[v]:
+            if k >= 0:
+                b += logm[k]
+        av = arity[v]
+        if av == 0:
+            continue
+        m = b[:av].max()
+        p = np.exp(b[:av] - m)
+        out[v, :av] = p / p.sum()
+    return out.astype(np.float32)
+
+
+def loopy_bp_ref(log_unary, log_pair, in_edges, src, dst, rev, arity,
+                 eps=1e-4, max_iters=2000):
+    """A tiny, trusted, synchronous loopy-BP solver used as an end-to-end
+    oracle in the python tests (and cross-checked against the rust native
+    engine through shared fixtures)."""
+    m_cnt = log_pair.shape[0]
+    a_max = log_unary.shape[1]
+    logm = np.zeros((m_cnt, a_max), dtype=np.float32)
+    # init: uniform over valid lanes of the destination vertex
+    for e in range(m_cnt):
+        av = arity[dst[e]]
+        logm[e, :av] = -np.log(av)
+        logm[e, av:] = 0.0
+    frontier = np.arange(m_cnt, dtype=np.int32)
+    for _ in range(max_iters):
+        new, res = candidates_ref(
+            logm, log_unary, log_pair, in_edges, src, dst, rev, arity, frontier
+        )
+        logm = new
+        if res.max() < eps:
+            break
+    return logm, marginals_ref(logm, log_unary, in_edges, arity)

@@ -1,0 +1,182 @@
+"""Layer-2 JAX model: the frontier candidate-update program.
+
+This is the compute graph the rust coordinator executes every iteration of
+Algorithm 1 (frontier-based BP).  It is a *pure function* of the PGM
+tensors plus a frontier index buffer, so a single AOT-compiled executable
+serves every random instance of a graph class and every scheduling policy:
+the policies differ only in which edge ids they place in the frontier.
+
+Inputs (shapes are the graph-class envelope, see configs.py):
+  logm      [M, A] f32   current log-messages, one row per directed edge;
+                         padded arity lanes are 0
+  log_unary [V, A] f32   log psi_i, padded lanes NEG
+  log_pair  [M, A, A]f32 log psi_ij laid out [src_state, dst_state] per
+                         directed edge, padded rows/cols NEG
+  in_edges  [V, D] i32   incoming directed-edge ids per vertex, pad -1
+  src, dst, rev [M] i32  edge endpoints and reverse-edge id
+  arity     [V] i32      valid state count per vertex
+  frontier  [K] i32      edge ids to update, pad -1  (K = bucket capacity)
+
+Outputs:
+  new_m    [K, A] f32    normalized candidate messages (pad lanes 0,
+                         pad slots 0)
+  residual [K]    f32    max-norm |new - old| per slot (pad slots 0)
+
+The pairwise contraction in the middle is the L1 Pallas kernel
+(kernels.msg_update.lse_contract).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import msg_update
+from .configs import NEG
+
+
+def gather_beliefs(logm, log_unary, in_edges, interpret=True):
+    """Vertex log-beliefs: log_unary[v] + sum of incoming log-messages.
+
+    in_edges is padded with -1; padded slots contribute 0.  Returns [V, A].
+    """
+    safe = jnp.maximum(in_edges, 0)  # [V, D]
+    rows = logm[safe]  # [V, D, A]
+    rows = jnp.where((in_edges >= 0)[:, :, None], rows, 0.0)
+    msgsum = jnp.sum(rows, axis=1)  # [V, A]
+    return msg_update.belief_combine(log_unary, msgsum, interpret=interpret)
+
+
+def candidates(
+    logm,
+    log_unary,
+    log_pair,
+    in_edges,
+    src,
+    dst,
+    rev,
+    arity,
+    frontier,
+    damping=None,
+    semiring="sum",
+    interpret=True,
+):
+    """Candidate updates + residuals for one frontier. See module docstring.
+
+    Beliefs are gathered *per frontier edge* (O(K·D·A) work), not per
+    vertex (O(V·D·A)): small-frontier buckets — the common case for the
+    greedy and randomized schedulings — must not pay a full-graph belief
+    sweep. (§Perf: this was the dominant cost of small-bucket calls.)
+    """
+    k_cap = frontier.shape[0]
+    a_max = logm.shape[1]
+    valid = frontier >= 0  # [K]
+    e = jnp.maximum(frontier, 0)  # [K] safe ids
+
+    u = src[e]  # [K]
+    ie = in_edges[u]  # [K, D] incoming edge ids of each source vertex
+    rows = logm[jnp.maximum(ie, 0)]  # [K, D, A]
+    rows = jnp.where((ie >= 0)[:, :, None], rows, 0.0)
+    msgsum = jnp.sum(rows, axis=1)  # [K, A]
+    beliefs_u = msg_update.belief_combine(
+        log_unary[u], msgsum, interpret=interpret
+    )  # [K, A]
+    cavity = beliefs_u - logm[rev[e]]  # [K, A]
+    pair = log_pair[e]  # [K, A, A]
+
+    if semiring == "max":
+        # tropical semiring: MAP / max-product inference
+        new = msg_update.max_contract(pair, cavity, interpret=interpret)
+    else:
+        new = msg_update.lse_contract(pair, cavity, interpret=interpret)
+
+    # Normalize over the valid arity lanes of the destination vertex and
+    # store padding lanes as exactly 0 (the storage convention).
+    av = arity[dst[e]]  # [K]
+    lane = jnp.arange(a_max, dtype=jnp.int32)[None, :]  # [1, A]
+    lanes_ok = lane < av[:, None]  # [K, A]
+
+    def normalize(rows):
+        rows = jnp.where(lanes_ok, rows, NEG)
+        shift = jnp.max(rows, axis=1, keepdims=True)  # [K, 1]
+        z = shift + jnp.log(jnp.sum(jnp.exp(rows - shift), axis=1, keepdims=True))
+        return jnp.where(lanes_ok, rows - z, 0.0)
+
+    new = normalize(new)
+    old = logm[e]  # [K, A]
+    if damping is not None:
+        # log-domain damping (geometric mixing), renormalized
+        lam = damping.reshape(())  # scalar input [1]
+        mixed = (1.0 - lam) * new + lam * jnp.where(lanes_ok, old, 0.0)
+        new = normalize(jnp.where(lanes_ok, mixed, NEG))
+
+    res = jnp.max(jnp.abs(new - old), axis=1)  # [K]
+
+    new = jnp.where(valid[:, None], new, 0.0)
+    res = jnp.where(valid, res, 0.0)
+    return new, res
+
+
+def marginals(logm, log_unary, in_edges, arity, interpret=True):
+    """Normalized vertex marginals [V, A] (probabilities, pad lanes 0)."""
+    a_max = log_unary.shape[1]
+    beliefs = gather_beliefs(logm, log_unary, in_edges, interpret=interpret)
+    lane = jnp.arange(a_max, dtype=jnp.int32)[None, :]
+    lanes_ok = lane < arity[:, None]
+    b = jnp.where(lanes_ok, beliefs, NEG)
+    shift = jnp.max(b, axis=1, keepdims=True)
+    p = jnp.exp(b - shift)
+    p = jnp.where(lanes_ok, p, 0.0)
+    total = jnp.sum(p, axis=1, keepdims=True)
+    return p / jnp.maximum(total, 1e-30)
+
+
+def candidate_shapes(cfg, bucket):
+    """ShapeDtypeStructs for jax.jit(...).lower of the candidate program."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    v, m, a, d = cfg.num_vertices, cfg.num_edges, cfg.arity, cfg.max_in_degree
+    s = jax.ShapeDtypeStruct
+    return (
+        s((m, a), f32),  # logm
+        s((v, a), f32),  # log_unary
+        s((m, a, a), f32),  # log_pair
+        s((v, d), i32),  # in_edges
+        s((m,), i32),  # src
+        s((m,), i32),  # dst
+        s((m,), i32),  # rev
+        s((v,), i32),  # arity
+        s((bucket,), i32),  # frontier
+        s((1,), f32),  # damping (scalar, in [0, 1))
+    )
+
+
+def marginal_shapes(cfg):
+    f32 = jnp.float32
+    i32 = jnp.int32
+    v, m, a, d = cfg.num_vertices, cfg.num_edges, cfg.arity, cfg.max_in_degree
+    s = jax.ShapeDtypeStruct
+    return (
+        s((m, a), f32),  # logm
+        s((v, a), f32),  # log_unary
+        s((v, d), i32),  # in_edges
+        s((v,), i32),  # arity
+    )
+
+
+def candidates_fn(semiring="sum", interpret=True):
+    """The traceable entrypoint lowered by aot.py (tuple output)."""
+
+    def fn(logm, log_unary, log_pair, in_edges, src, dst, rev, arity,
+           frontier, damping):
+        return candidates(
+            logm, log_unary, log_pair, in_edges, src, dst, rev, arity,
+            frontier, damping=damping, semiring=semiring, interpret=interpret,
+        )
+
+    return fn
+
+
+def marginals_fn(interpret=True):
+    def fn(logm, log_unary, in_edges, arity):
+        return (marginals(logm, log_unary, in_edges, arity, interpret=interpret),)
+
+    return fn

@@ -1,0 +1,121 @@
+"""AOT pipeline tests: manifest format, shape envelopes, HLO text sanity."""
+
+import os
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import (
+    CONFIGS,
+    BK_ALIGN,
+    bucket_ladder,
+    by_name,
+    chain_config,
+    ising_config,
+    round_up,
+)
+
+
+class TestConfigs:
+    def test_registry_names_unique(self):
+        names = [c.name for c in CONFIGS]
+        assert len(names) == len(set(names))
+
+    def test_by_name(self):
+        assert by_name("ising10").num_vertices == 100
+        with pytest.raises(KeyError):
+            by_name("nope")
+
+    def test_ising_shapes(self):
+        c = ising_config("x", 100)
+        assert c.num_vertices == 10_000
+        assert c.num_edges == 4 * 100 * 99  # 2 * undirected
+        assert c.arity == 2 and c.max_in_degree == 4
+
+    def test_chain_shapes(self):
+        c = chain_config("x", 1000)
+        assert c.num_vertices == 1000
+        assert c.num_edges == 1998
+        assert c.max_in_degree == 2
+
+    def test_bucket_ladder_alignment(self):
+        for m in (360, 39600, 199998, 1024):
+            ladder = bucket_ladder(m)
+            assert ladder == sorted(ladder)
+            assert all(k % BK_ALIGN == 0 for k in ladder)
+            assert ladder[-1] >= m  # full frontier always fits
+            assert ladder[-1] == round_up(m)
+
+    def test_all_config_buckets_cover_full_frontier(self):
+        for c in CONFIGS:
+            assert max(c.buckets) >= c.num_edges
+            assert all(k % BK_ALIGN == 0 for k in c.buckets)
+
+
+class TestManifest:
+    def test_lines_roundtrip_format(self):
+        lines = aot.manifest_lines(CONFIGS)
+        assert lines[0] == f"version={aot.MANIFEST_VERSION}"
+        assert re.fullmatch(r"fingerprint=[0-9a-f]{16}", lines[1])
+        cfg_lines = [l for l in lines if l.startswith("config ")]
+        assert len(cfg_lines) == len(CONFIGS)
+        pat = re.compile(
+            r"config name=(\w+) V=(\d+) M=(\d+) A=(\d+) D=(\d+) "
+            r"buckets=([\d,]+)"
+        )
+        for line in cfg_lines:
+            m = pat.fullmatch(line)
+            assert m, line
+            cfg = by_name(m.group(1))
+            assert int(m.group(2)) == cfg.num_vertices
+            assert int(m.group(3)) == cfg.num_edges
+            buckets = [int(b) for b in m.group(6).split(",")]
+            assert buckets == cfg.buckets
+
+    def test_fingerprint_stable(self):
+        assert aot._fingerprint() == aot._fingerprint()
+
+
+class TestLowering:
+    def test_candidate_program_lowers(self):
+        cfg = by_name("ising10")
+        text = aot.lower_candidates(cfg, cfg.buckets[0])
+        assert "ENTRY" in text
+        # 9 parameters in declared order
+        for i in range(9):
+            assert f"parameter({i})" in text, f"missing parameter({i})"
+
+    def test_marginals_program_lowers(self):
+        cfg = by_name("ising10")
+        text = aot.lower_marginals(cfg)
+        assert "ENTRY" in text
+        for i in range(4):
+            assert f"parameter({i})" in text
+
+    def test_candidate_shapes_match_envelope(self):
+        cfg = by_name("ising10")
+        shapes = model.candidate_shapes(cfg, 512)
+        assert shapes[0].shape == (cfg.num_edges, cfg.arity)
+        assert shapes[1].shape == (cfg.num_vertices, cfg.arity)
+        assert shapes[2].shape == (cfg.num_edges, cfg.arity, cfg.arity)
+        assert shapes[3].shape == (cfg.num_vertices, cfg.max_in_degree)
+        assert shapes[8].shape == (512,)
+
+    def test_lowered_text_is_deterministic(self):
+        cfg = by_name("ising10")
+        a = aot.lower_candidates(cfg, 512)
+        b = aot.lower_candidates(cfg, 512)
+        assert a == b
+
+
+class TestWriteIfChanged:
+    def test_skips_unchanged(self, tmp_path):
+        p = str(tmp_path / "x.txt")
+        assert aot.write_if_changed(p, "hello")
+        assert not aot.write_if_changed(p, "hello")
+        assert aot.write_if_changed(p, "world")
+        with open(p) as f:
+            assert f.read() == "world"

@@ -1,0 +1,186 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes/arity/padding; every case asserts allclose
+against kernels.ref.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import msg_update, ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(rng, *shape):
+    return rng.normal(scale=2.0, size=shape).astype(np.float32)
+
+
+class TestLseContractBasic:
+    def test_matches_ref_small(self):
+        rng = np.random.default_rng(1)
+        pair, cav = _rand(rng, 512, 2, 2), _rand(rng, 512, 2)
+        out = msg_update.lse_contract(jnp.array(pair), jnp.array(cav))
+        np.testing.assert_allclose(
+            out, ref.lse_contract_ref(pair, cav), rtol=RTOL, atol=ATOL
+        )
+
+    def test_single_block(self):
+        rng = np.random.default_rng(2)
+        pair, cav = _rand(rng, 512, 4, 4), _rand(rng, 512, 4)
+        out = msg_update.lse_contract(jnp.array(pair), jnp.array(cav))
+        np.testing.assert_allclose(
+            out, ref.lse_contract_ref(pair, cav), rtol=RTOL, atol=ATOL
+        )
+
+    def test_large_arity_protein_block(self):
+        # A=81 exercises the BK=32 protein tile.
+        rng = np.random.default_rng(3)
+        pair, cav = _rand(rng, 32, 81, 81), _rand(rng, 32, 81)
+        out = msg_update.lse_contract(jnp.array(pair), jnp.array(cav))
+        np.testing.assert_allclose(
+            out, ref.lse_contract_ref(pair, cav), rtol=RTOL, atol=ATOL
+        )
+
+    def test_padded_source_lanes_ignored(self):
+        # NEG rows in pair (padded source states) must not disturb the LSE.
+        rng = np.random.default_rng(4)
+        pair, cav = _rand(rng, 512, 5, 5), _rand(rng, 512, 5)
+        pair[:, 3:, :] = ref.NEG
+        trimmed = ref.lse_contract_ref(pair[:, :3, :], cav[:, :3])
+        out = msg_update.lse_contract(jnp.array(pair), jnp.array(cav))
+        np.testing.assert_allclose(out, trimmed, rtol=RTOL, atol=ATOL)
+
+    def test_all_padding_column_stays_neg(self):
+        rng = np.random.default_rng(5)
+        pair, cav = _rand(rng, 512, 3, 3), _rand(rng, 512, 3)
+        pair[:, :, 2] = ref.NEG  # dst state 2 entirely padded
+        out = np.array(msg_update.lse_contract(jnp.array(pair), jnp.array(cav)))
+        assert (out[:, 2] < -1e29).all()
+
+    def test_rejects_misaligned_frontier(self):
+        rng = np.random.default_rng(6)
+        pair, cav = _rand(rng, 100, 2, 2), _rand(rng, 100, 2)
+        with pytest.raises(AssertionError):
+            msg_update.lse_contract(jnp.array(pair), jnp.array(cav))
+
+    def test_translation_invariance(self):
+        # LSE(x + c) == LSE(x) + c : shifting the cavity shifts the output.
+        rng = np.random.default_rng(7)
+        pair, cav = _rand(rng, 512, 3, 3), _rand(rng, 512, 3)
+        base = np.array(msg_update.lse_contract(jnp.array(pair), jnp.array(cav)))
+        shifted = np.array(
+            msg_update.lse_contract(jnp.array(pair), jnp.array(cav + 1.5))
+        )
+        np.testing.assert_allclose(shifted, base + 1.5, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    arity=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 8.0),
+)
+def test_lse_contract_hypothesis(blocks, arity, seed, scale):
+    rng = np.random.default_rng(seed)
+    k = 512 * blocks
+    pair = rng.normal(scale=scale, size=(k, arity, arity)).astype(np.float32)
+    cav = rng.normal(scale=scale, size=(k, arity)).astype(np.float32)
+    out = msg_update.lse_contract(jnp.array(pair), jnp.array(cav))
+    np.testing.assert_allclose(
+        out, ref.lse_contract_ref(pair, cav), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    pad_rows=st.integers(0, 3),
+    arity=st.integers(4, 8),
+)
+def test_lse_contract_hypothesis_padding(seed, pad_rows, arity):
+    """Padded source lanes never change the valid part of the result."""
+    rng = np.random.default_rng(seed)
+    k = 512
+    pair = rng.normal(size=(k, arity, arity)).astype(np.float32)
+    cav = rng.normal(size=(k, arity)).astype(np.float32)
+    pair_p = pair.copy()
+    pair_p[:, arity - pad_rows :, :] = ref.NEG
+    valid = arity - pad_rows
+    want = ref.lse_contract_ref(pair[:, :valid, :], cav[:, :valid])
+    out = msg_update.lse_contract(jnp.array(pair_p), jnp.array(cav))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+class TestBeliefCombine:
+    def test_matches_add(self):
+        rng = np.random.default_rng(8)
+        u, s = _rand(rng, 300, 4), _rand(rng, 300, 4)
+        out = msg_update.belief_combine(jnp.array(u), jnp.array(s))
+        np.testing.assert_allclose(out, u + s, rtol=RTOL, atol=ATOL)
+
+    def test_small_vertex_count(self):
+        rng = np.random.default_rng(9)
+        u, s = _rand(rng, 7, 3), _rand(rng, 7, 3)
+        out = msg_update.belief_combine(jnp.array(u), jnp.array(s))
+        np.testing.assert_allclose(out, u + s, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(v=st.integers(1, 400), a=st.integers(2, 9), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis(self, v, a, seed):
+        rng = np.random.default_rng(seed)
+        u = rng.normal(size=(v, a)).astype(np.float32)
+        s = rng.normal(size=(v, a)).astype(np.float32)
+        out = msg_update.belief_combine(jnp.array(u), jnp.array(s))
+        np.testing.assert_allclose(out, u + s, rtol=RTOL, atol=ATOL)
+
+
+def test_block_size_policy():
+    assert msg_update.block_size(2) == 512
+    assert msg_update.block_size(8) == 512
+    assert msg_update.block_size(81) == 32
+    # every block size divides the bucket alignment
+    from compile.configs import BK_ALIGN
+    for a in (2, 3, 8, 81):
+        assert BK_ALIGN % msg_update.block_size(a) == 0
+
+
+class TestMaxContract:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(20)
+        pair, cav = _rand(rng, 512, 3, 3), _rand(rng, 512, 3)
+        out = msg_update.max_contract(jnp.array(pair), jnp.array(cav))
+        np.testing.assert_allclose(
+            out, ref.max_contract_ref(pair, cav), rtol=RTOL, atol=ATOL
+        )
+
+    def test_protein_tile(self):
+        rng = np.random.default_rng(21)
+        pair, cav = _rand(rng, 32, 81, 81), _rand(rng, 32, 81)
+        out = msg_update.max_contract(jnp.array(pair), jnp.array(cav))
+        np.testing.assert_allclose(
+            out, ref.max_contract_ref(pair, cav), rtol=RTOL, atol=ATOL
+        )
+
+    def test_upper_bounds_lse(self):
+        # max_a <= LSE_a pointwise (tropical vs log semiring)
+        rng = np.random.default_rng(22)
+        pair, cav = _rand(rng, 512, 4, 4), _rand(rng, 512, 4)
+        mx = np.array(msg_update.max_contract(jnp.array(pair), jnp.array(cav)))
+        lse = np.array(msg_update.lse_contract(jnp.array(pair), jnp.array(cav)))
+        assert (mx <= lse + 1e-5).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(blocks=st.integers(1, 3), arity=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis(self, blocks, arity, seed):
+        rng = np.random.default_rng(seed)
+        k = 512 * blocks
+        pair = rng.normal(size=(k, arity, arity)).astype(np.float32)
+        cav = rng.normal(size=(k, arity)).astype(np.float32)
+        out = msg_update.max_contract(jnp.array(pair), jnp.array(cav))
+        np.testing.assert_allclose(
+            out, ref.max_contract_ref(pair, cav), rtol=1e-4, atol=1e-4
+        )

@@ -1,0 +1,229 @@
+"""L2 model (gather/contract/normalize candidate program) vs dense oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from tests.util import random_graph, padded_frontier, enumerate_marginals
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def _to_jnp(g):
+    return {k: jnp.array(v) for k, v in g.items() if isinstance(v, np.ndarray)}
+
+
+def _run_candidates(g, frontier):
+    j = _to_jnp(g)
+    new, res = model.candidates(
+        j["logm"], j["log_unary"], j["log_pair"], j["in_edges"],
+        j["src"], j["dst"], j["rev"], j["arity"], jnp.array(frontier),
+    )
+    return np.array(new), np.array(res)
+
+
+class TestCandidates:
+    def test_full_frontier_matches_ref(self):
+        rng = np.random.default_rng(10)
+        g = random_graph(rng, 12)
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[: g["n_edges"]] = np.arange(g["n_edges"])
+        new, res = _run_candidates(g, frontier)
+        wn, wr = ref.candidates_ref(
+            g["logm"], g["log_unary"], g["log_pair"], g["in_edges"],
+            g["src"], g["dst"], g["rev"], g["arity"], frontier,
+        )
+        np.testing.assert_allclose(new, wn, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(res, wr, rtol=RTOL, atol=ATOL)
+
+    def test_interleaved_padding_slots_are_zero(self):
+        rng = np.random.default_rng(11)
+        g = random_graph(rng, 10)
+        frontier = padded_frontier(rng, g["n_edges"], 512, fill_ratio=0.3)
+        new, res = _run_candidates(g, frontier)
+        pad = frontier < 0
+        assert (new[pad] == 0.0).all()
+        assert (res[pad] == 0.0).all()
+
+    def test_candidate_messages_are_normalized(self):
+        rng = np.random.default_rng(12)
+        g = random_graph(rng, 15, max_arity=4)
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[: g["n_edges"]] = np.arange(g["n_edges"])
+        new, _ = _run_candidates(g, frontier)
+        for slot in range(g["n_edges"]):
+            e = frontier[slot]
+            av = g["arity"][g["dst"][e]]
+            total = np.exp(new[slot, :av].astype(np.float64)).sum()
+            np.testing.assert_allclose(total, 1.0, rtol=1e-4)
+            assert (new[slot, av:] == 0.0).all()
+
+    def test_duplicate_frontier_entries_agree(self):
+        rng = np.random.default_rng(13)
+        g = random_graph(rng, 8)
+        e = g["n_edges"] // 2
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[0] = e
+        frontier[477] = e
+        new, res = _run_candidates(g, frontier)
+        np.testing.assert_allclose(new[0], new[477], rtol=0, atol=0)
+        np.testing.assert_allclose(res[0], res[477], rtol=0, atol=0)
+
+    def test_converged_message_zero_residual(self):
+        # After overwriting logm with the candidate, recomputing the same
+        # frontier entry must give ~zero residual for untouched neighbours?
+        # No — only for a vertex whose inputs did not change: use a leaf.
+        rng = np.random.default_rng(14)
+        g = random_graph(rng, 6, tree=True, edge_prob=0.0)
+        # find a leaf edge: src vertex with in-degree 1 (only the reverse)
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[: g["n_edges"]] = np.arange(g["n_edges"])
+        new, _ = _run_candidates(g, frontier)
+        g2 = dict(g)
+        g2["logm"] = new[: g["n_edges"]].copy()
+        # leaf->parent messages depend only on unary potentials once
+        # cavity excludes the parent message; they are fixed-point after
+        # one update: recompute and check residual 0 for those edges.
+        in_deg = np.bincount(g["dst"], minlength=g["n_vertices"])
+        new2, res2 = _run_candidates(g2, frontier)
+        for e in range(g["n_edges"]):
+            if in_deg[g["src"][e]] == 1:  # leaf source
+                assert res2[e] < 1e-5, (e, res2[e])
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(4, 20),
+        max_arity=st.integers(2, 5),
+        fill=st.floats(0.1, 1.0),
+    )
+    def test_hypothesis_matches_ref(self, seed, n, max_arity, fill):
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng, n, max_arity=max_arity)
+        frontier = padded_frontier(rng, g["n_edges"], 512, fill_ratio=fill)
+        new, res = _run_candidates(g, frontier)
+        wn, wr = ref.candidates_ref(
+            g["logm"], g["log_unary"], g["log_pair"], g["in_edges"],
+            g["src"], g["dst"], g["rev"], g["arity"], frontier,
+        )
+        np.testing.assert_allclose(new, wn, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(res, wr, rtol=RTOL, atol=ATOL)
+
+
+class TestMarginals:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(15)
+        g = random_graph(rng, 20, max_arity=4)
+        j = _to_jnp(g)
+        out = np.array(
+            model.marginals(j["logm"], j["log_unary"], j["in_edges"], j["arity"])
+        )
+        want = ref.marginals_ref(g["logm"], g["log_unary"], g["in_edges"], g["arity"])
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_rows_sum_to_one(self):
+        rng = np.random.default_rng(16)
+        g = random_graph(rng, 30, max_arity=5)
+        j = _to_jnp(g)
+        out = np.array(
+            model.marginals(j["logm"], j["log_unary"], j["in_edges"], j["arity"])
+        )
+        np.testing.assert_allclose(out.sum(axis=1), 1.0, rtol=1e-4)
+
+
+class TestEndToEnd:
+    def test_bp_exact_on_trees(self):
+        """BP fixed point on a tree == exact marginals (paper §II)."""
+        rng = np.random.default_rng(17)
+        g = random_graph(rng, 7, tree=True, max_arity=3)
+        _, marg = ref.loopy_bp_ref(
+            g["log_unary"], g["log_pair"], g["in_edges"],
+            g["src"], g["dst"], g["rev"], g["arity"], eps=1e-7,
+        )
+        exact = enumerate_marginals(g)
+        np.testing.assert_allclose(marg, exact, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 8))
+    def test_bp_exact_on_trees_hypothesis(self, seed, n):
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng, n, tree=True, max_arity=3, coupling=0.7)
+        _, marg = ref.loopy_bp_ref(
+            g["log_unary"], g["log_pair"], g["in_edges"],
+            g["src"], g["dst"], g["rev"], g["arity"], eps=1e-7,
+        )
+        exact = enumerate_marginals(g)
+        np.testing.assert_allclose(marg, exact, rtol=2e-3, atol=2e-3)
+
+    def test_loopy_bp_converges_weak_coupling(self):
+        rng = np.random.default_rng(18)
+        g = random_graph(rng, 12, edge_prob=0.3, coupling=0.3)
+        logm, marg = ref.loopy_bp_ref(
+            g["log_unary"], g["log_pair"], g["in_edges"],
+            g["src"], g["dst"], g["rev"], g["arity"], eps=1e-6,
+        )
+        frontier = np.arange(g["n_edges"], dtype=np.int32)
+        _, res = ref.candidates_ref(
+            logm, g["log_unary"], g["log_pair"], g["in_edges"],
+            g["src"], g["dst"], g["rev"], g["arity"], frontier,
+        )
+        assert res.max() < 1e-5
+
+
+class TestSemiringsAndDamping:
+    def _run(self, g, frontier, semiring="sum", damping=0.0):
+        j = _to_jnp(g)
+        new, res = model.candidates(
+            j["logm"], j["log_unary"], j["log_pair"], j["in_edges"],
+            j["src"], j["dst"], j["rev"], j["arity"], jnp.array(frontier),
+            damping=jnp.array([damping], dtype=jnp.float32),
+            semiring=semiring,
+        )
+        return np.array(new), np.array(res)
+
+    def test_max_product_matches_ref(self):
+        rng = np.random.default_rng(30)
+        g = random_graph(rng, 10, max_arity=4)
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[: g["n_edges"]] = np.arange(g["n_edges"])
+        new, res = self._run(g, frontier, semiring="max")
+        wn, wr = ref.candidates_ref(
+            g["logm"], g["log_unary"], g["log_pair"], g["in_edges"],
+            g["src"], g["dst"], g["rev"], g["arity"], frontier, semiring="max",
+        )
+        np.testing.assert_allclose(new, wn, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(res, wr, rtol=RTOL, atol=ATOL)
+
+    def test_damping_matches_ref(self):
+        rng = np.random.default_rng(31)
+        g = random_graph(rng, 10, max_arity=3)
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[: g["n_edges"]] = np.arange(g["n_edges"])
+        for lam in (0.25, 0.5, 0.9):
+            new, res = self._run(g, frontier, damping=lam)
+            wn, wr = ref.candidates_ref(
+                g["logm"], g["log_unary"], g["log_pair"], g["in_edges"],
+                g["src"], g["dst"], g["rev"], g["arity"], frontier, damping=lam,
+            )
+            np.testing.assert_allclose(new, wn, rtol=5e-4, atol=5e-4)
+            np.testing.assert_allclose(res, wr, rtol=5e-4, atol=5e-4)
+
+    def test_zero_damping_is_identity(self):
+        rng = np.random.default_rng(32)
+        g = random_graph(rng, 8)
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[: g["n_edges"]] = np.arange(g["n_edges"])
+        a, _ = self._run(g, frontier, damping=0.0)
+        b, _ = _run_candidates(g, frontier)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_full_damping_freezes_messages(self):
+        # lam -> 1 keeps messages (residual ~ 0)
+        rng = np.random.default_rng(33)
+        g = random_graph(rng, 8)
+        frontier = np.full(512, -1, dtype=np.int32)
+        frontier[: g["n_edges"]] = np.arange(g["n_edges"])
+        _, res = self._run(g, frontier, damping=0.999)
+        assert res.max() < 0.05

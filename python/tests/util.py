@@ -1,0 +1,132 @@
+"""Shared fixtures: random padded-envelope PGMs for kernel/model tests.
+
+Generates small random pairwise MRFs directly in the tensor layout the L2
+model consumes (see model.py docstring), including padding in every
+dimension: arity lanes, in-edge slots, and frontier slots.
+"""
+
+import numpy as np
+
+NEG = -1.0e30
+
+
+def random_graph(
+    rng,
+    n_vertices,
+    edge_prob=0.4,
+    max_arity=3,
+    min_arity=2,
+    extra_degree_pad=1,
+    coupling=1.0,
+    tree=False,
+):
+    """Random connected pairwise MRF in envelope layout.
+
+    Returns a dict with keys matching the model input names plus `dst`,
+    `n_vertices`, `n_edges` (directed count M).
+    """
+    v = n_vertices
+    arity = rng.integers(min_arity, max_arity + 1, size=v).astype(np.int32)
+    a_max = int(max_arity)
+
+    undirected = set()
+    # spanning tree first (guarantees connectivity)
+    order = rng.permutation(v)
+    for i in range(1, v):
+        j = order[rng.integers(0, i)]
+        undirected.add((min(order[i], j), max(order[i], j)))
+    if not tree:
+        for i in range(v):
+            for j in range(i + 1, v):
+                if rng.random() < edge_prob:
+                    undirected.add((i, j))
+    undirected = sorted(undirected)
+
+    src_l, dst_l = [], []
+    for (i, j) in undirected:
+        src_l += [i, j]
+        dst_l += [j, i]
+    m = len(src_l)
+    src = np.array(src_l, dtype=np.int32)
+    dst = np.array(dst_l, dtype=np.int32)
+    rev = np.arange(m, dtype=np.int32)
+    rev[0::2] += 1
+    rev[1::2] -= 1
+
+    in_deg = np.bincount(dst, minlength=v)
+    d_max = int(in_deg.max()) + int(extra_degree_pad)
+    in_edges = np.full((v, d_max), -1, dtype=np.int32)
+    fill = np.zeros(v, dtype=np.int64)
+    for e in range(m):
+        t = dst[e]
+        in_edges[t, fill[t]] = e
+        fill[t] += 1
+
+    log_unary = np.full((v, a_max), NEG, dtype=np.float32)
+    for i in range(v):
+        log_unary[i, : arity[i]] = rng.normal(scale=coupling, size=arity[i])
+
+    log_pair = np.full((m, a_max, a_max), NEG, dtype=np.float32)
+    for e in range(0, m, 2):
+        i, j = src[e], dst[e]
+        table = rng.normal(scale=coupling, size=(arity[i], arity[j])).astype(
+            np.float32
+        )
+        log_pair[e, : arity[i], : arity[j]] = table
+        log_pair[e + 1, : arity[j], : arity[i]] = table.T
+
+    logm = np.zeros((m, a_max), dtype=np.float32)
+    for e in range(m):
+        av = arity[dst[e]]
+        logm[e, :av] = -np.log(av)
+
+    return dict(
+        logm=logm,
+        log_unary=log_unary,
+        log_pair=log_pair,
+        in_edges=in_edges,
+        src=src,
+        dst=dst,
+        rev=rev,
+        arity=arity,
+        n_vertices=v,
+        n_edges=m,
+    )
+
+
+def padded_frontier(rng, m, k_cap, fill_ratio=0.6):
+    """Random frontier of edge ids padded with -1 to capacity, shuffled so
+    padding is interleaved (the model must not rely on pad-at-end)."""
+    n = max(1, int(min(m, k_cap) * fill_ratio))
+    ids = rng.choice(m, size=n, replace=False).astype(np.int32)
+    buf = np.full(k_cap, -1, dtype=np.int32)
+    buf[:n] = ids
+    rng.shuffle(buf)
+    return buf
+
+
+def enumerate_marginals(g):
+    """Brute-force exact marginals by enumerating the joint (tiny graphs)."""
+    v = g["n_vertices"]
+    arity = g["arity"]
+    m = g["n_edges"]
+    src, dst = g["src"], g["dst"]
+    shape = tuple(int(a) for a in arity)
+    logp = np.zeros(shape, dtype=np.float64)
+    it = np.ndindex(*shape)
+    for assign in it:
+        s = 0.0
+        for i in range(v):
+            s += g["log_unary"][i, assign[i]]
+        for e in range(0, m, 2):
+            i, j = src[e], dst[e]
+            s += g["log_pair"][e, assign[i], assign[j]]
+        logp[assign] = s
+    logp -= logp.max()
+    p = np.exp(logp)
+    p /= p.sum()
+    out = np.zeros((v, g["log_unary"].shape[1]), dtype=np.float64)
+    for i in range(v):
+        axes = tuple(a for a in range(v) if a != i)
+        out[i, : arity[i]] = p.sum(axis=axes)
+    return out

@@ -1,0 +1,24 @@
+//! Shared bench-mode config: smaller campaigns and tighter budgets than
+//! the CLI defaults, so `cargo bench` finishes in CI-scale minutes.
+//! Flags (e.g. `--full`, `--graphs 5`) still apply:
+//! `cargo bench --bench table1_rbp -- --graphs 5`.
+
+use bp_sched::config::HarnessConfig;
+
+pub fn bench_config() -> HarnessConfig {
+    let mut cfg = HarnessConfig::default();
+    cfg.graphs = 3;
+    cfg.timeout = 12.0;
+    cfg.srbp_timeout = 8.0;
+    cfg.max_iterations = 10_000;
+    cfg.out_dir = std::path::PathBuf::from("results");
+    // `cargo bench -- <flags>` forwards everything after `--` to us
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench") // cargo's own marker
+        .collect();
+    if let Err(e) = cfg.apply_args(&args) {
+        eprintln!("warning: ignoring bench args: {e}");
+    }
+    cfg
+}

@@ -1,0 +1,10 @@
+//! Bench harness regenerating the paper's Fig 2 (RS cumulative convergence vs parallelism).
+//! Run: `cargo bench --bench fig2_rs_convergence` (add `-- --full` for paper sizes).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    println!("=== Fig 2 (RS cumulative convergence vs parallelism) ===");
+    bp_sched::harness::run_experiment(&cfg, "fig2")
+}

@@ -1,0 +1,10 @@
+//! Bench harness regenerating the paper's Fig 4 (RnBP cumulative convergence).
+//! Run: `cargo bench --bench fig4_rnbp_convergence` (add `-- --full` for paper sizes).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    println!("=== Fig 4 (RnBP cumulative convergence) ===");
+    bp_sched::harness::run_experiment(&cfg, "fig4")
+}

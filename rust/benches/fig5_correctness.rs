@@ -1,0 +1,10 @@
+//! Bench harness regenerating the paper's Fig 5 (KL correctness vs exact inference).
+//! Run: `cargo bench --bench fig5_correctness` (add `-- --full` for paper sizes).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    println!("=== Fig 5 (KL correctness vs exact inference) ===");
+    bp_sched::harness::run_experiment(&cfg, "fig5")
+}

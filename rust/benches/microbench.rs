@@ -1,0 +1,127 @@
+//! Microbenchmarks of the hot paths (L3 + engine bridge), with real
+//! timing loops: per-call engine latency by bucket, selection costs per
+//! scheduler, heap throughput, native vs PJRT per-message cost.
+//!
+//! These are the numbers the §Perf iteration log in EXPERIMENTS.md
+//! tracks. Run: `cargo bench --bench microbench`.
+
+mod common;
+
+use bp_sched::collections::IndexedHeap;
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::{native::NativeEngine, pjrt::PjrtEngine, MessageEngine};
+use bp_sched::sched::SchedContext;
+use bp_sched::sched::{Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::stats::{fmt_duration, Summary};
+use bp_sched::util::{Rng, Stopwatch};
+
+/// Time `f` with warmup; returns per-iteration median seconds.
+fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t = Stopwatch::start();
+        f();
+        s.push(t.seconds());
+    }
+    s.median()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    println!("=== microbench (wallclock, single core) ===");
+
+    // --- engine call latency by frontier size ---------------------------
+    let mut rng = Rng::new(3);
+    let g = DatasetSpec::Ising { n: 40, c: 2.5 }.generate(&mut rng)?;
+    let logm = g.uniform_messages();
+    let mut pjrt = PjrtEngine::from_default_dir()?;
+    let mut native = NativeEngine::new();
+    println!("\nengine candidates() latency, ising40 (M={}):", g.live_edges);
+    println!("{:>10} {:>14} {:>14} {:>12}", "frontier", "pjrt", "native", "pjrt ns/msg");
+    for &n in &[64usize, 256, 1024, 4096, 6240] {
+        let frontier: Vec<i32> = (0..n as i32).collect();
+        let tp = time_it(3, 10, || {
+            pjrt.candidates(&g, logm.as_slice(), &frontier).unwrap();
+        });
+        let tn = time_it(3, 10, || {
+            native.candidates(&g, logm.as_slice(), &frontier).unwrap();
+        });
+        println!(
+            "{:>10} {:>14} {:>14} {:>12.0}",
+            n,
+            fmt_duration(tp),
+            fmt_duration(tn),
+            tp / n as f64 * 1e9
+        );
+    }
+
+    // --- protein large-arity contraction --------------------------------
+    let mut rng = Rng::new(5);
+    let gp = DatasetSpec::Protein.generate(&mut rng)?;
+    let logmp = gp.uniform_messages();
+    let frontier: Vec<i32> = (0..gp.live_edges as i32).collect();
+    let tp = time_it(2, 5, || {
+        pjrt.candidates(&gp, logmp.as_slice(), &frontier).unwrap();
+    });
+    let tn = time_it(2, 5, || {
+        native.candidates(&gp, logmp.as_slice(), &frontier).unwrap();
+    });
+    println!(
+        "\nprotein full frontier (M={}, A=81): pjrt {} native {}",
+        gp.live_edges,
+        fmt_duration(tp),
+        fmt_duration(tn)
+    );
+
+    // --- scheduler selection cost ----------------------------------------
+    println!("\nscheduler select() on ising40 (all edges hot):");
+    let res = vec![1.0f32; g.num_edges];
+    let ctx = SchedContext {
+        mrf: &g,
+        residuals: &res,
+        eps: 1e-4,
+        iteration: 1,
+        unconverged: g.live_edges,
+        prev_unconverged: g.live_edges,
+    };
+    let mut policies: Vec<(&str, Box<dyn Scheduler>)> = vec![
+        ("lbp", Box::new(Lbp::new())),
+        ("rbp p=1/16", Box::new(Rbp::new(1.0 / 16.0))),
+        ("rs p=1/16", Box::new(ResidualSplash::new(1.0 / 16.0, 2))),
+        ("rnbp lowp=0.7", Box::new(Rnbp::synthetic(0.7, 1))),
+    ];
+    for (label, s) in policies.iter_mut() {
+        let t = time_it(5, 50, || {
+            let _ = s.select(&ctx);
+        });
+        println!("  {:<14} {:>12}", label, fmt_duration(t));
+    }
+
+    // --- indexed heap throughput ------------------------------------------
+    let n = 100_000;
+    let mut heap_rng = Rng::new(7);
+    let t = time_it(1, 5, || {
+        let mut h = IndexedHeap::with_capacity(n);
+        for k in 0..n {
+            h.set(k, heap_rng.uniform() as f32);
+        }
+        for _ in 0..n / 2 {
+            let k = heap_rng.below(n);
+            h.set(k, heap_rng.uniform() as f32);
+        }
+        while h.pop().is_some() {}
+    });
+    println!(
+        "\nindexed heap: {}k set + {}k update + drain in {} ({:.0} ns/op)",
+        n / 1000,
+        n / 2000,
+        fmt_duration(t),
+        t / (2.5 * n as f64) * 1e9
+    );
+
+    let _ = cfg;
+    Ok(())
+}

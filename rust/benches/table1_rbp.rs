@@ -1,0 +1,10 @@
+//! Bench harness regenerating the paper's Table I (GPU RBP speedups over SRBP).
+//! Run: `cargo bench --bench table1_rbp` (add `-- --full` for paper sizes).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    println!("=== Table I (GPU RBP speedups over SRBP) ===");
+    bp_sched::harness::run_experiment(&cfg, "table1")
+}

@@ -1,0 +1,10 @@
+//! Bench harness regenerating the paper's Table II (GPU RS speedups over SRBP).
+//! Run: `cargo bench --bench table2_rs` (add `-- --full` for paper sizes).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    println!("=== Table II (GPU RS speedups over SRBP) ===");
+    bp_sched::harness::run_experiment(&cfg, "table2")
+}

@@ -1,0 +1,10 @@
+//! Bench harness regenerating the paper's Table III (GPU RnBP speedups over SRBP).
+//! Run: `cargo bench --bench table3_rnbp` (add `-- --full` for paper sizes).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    println!("=== Table III (GPU RnBP speedups over SRBP) ===");
+    bp_sched::harness::run_experiment(&cfg, "table3")
+}

@@ -1,0 +1,263 @@
+//! Addressable binary max-heap over dense integer keys.
+//!
+//! Keys are `0..capacity` (directed-edge ids); priorities are `f32`
+//! residuals. Supports O(log n) push / pop-max / update-priority and O(1)
+//! contains / peek — the operation mix of serial Residual BP.
+
+/// Max-heap with an inverse index from key to heap slot.
+#[derive(Clone, Debug)]
+pub struct IndexedHeap {
+    /// Heap array of (priority, key), max at root.
+    heap: Vec<(f32, usize)>,
+    /// pos[key] = slot in `heap`, or NONE.
+    pos: Vec<usize>,
+}
+
+const NONE: usize = usize::MAX;
+
+impl IndexedHeap {
+    /// Create for keys in `0..capacity`.
+    pub fn with_capacity(capacity: usize) -> Self {
+        IndexedHeap {
+            heap: Vec::with_capacity(capacity),
+            pos: vec![NONE; capacity],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn contains(&self, key: usize) -> bool {
+        self.pos[key] != NONE
+    }
+
+    pub fn priority(&self, key: usize) -> Option<f32> {
+        let p = self.pos[key];
+        (p != NONE).then(|| self.heap[p].0)
+    }
+
+    /// Max element without removing.
+    pub fn peek(&self) -> Option<(f32, usize)> {
+        self.heap.first().copied()
+    }
+
+    /// Insert a new key or update its priority if present.
+    pub fn set(&mut self, key: usize, priority: f32) {
+        let p = self.pos[key];
+        if p == NONE {
+            self.heap.push((priority, key));
+            let slot = self.heap.len() - 1;
+            self.pos[key] = slot;
+            self.sift_up(slot);
+        } else {
+            let old = self.heap[p].0;
+            self.heap[p].0 = priority;
+            if priority > old {
+                self.sift_up(p);
+            } else if priority < old {
+                self.sift_down(p);
+            }
+        }
+    }
+
+    /// Remove and return the max (priority, key).
+    pub fn pop(&mut self) -> Option<(f32, usize)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let top = self.heap[0];
+        self.remove_slot(0);
+        Some(top)
+    }
+
+    /// Remove an arbitrary key if present; returns its priority.
+    pub fn remove(&mut self, key: usize) -> Option<f32> {
+        let p = self.pos[key];
+        if p == NONE {
+            return None;
+        }
+        let pri = self.heap[p].0;
+        self.remove_slot(p);
+        Some(pri)
+    }
+
+    fn remove_slot(&mut self, slot: usize) {
+        let last = self.heap.len() - 1;
+        let (_, removed_key) = self.heap[slot];
+        self.heap.swap(slot, last);
+        self.pos[self.heap[slot].1] = slot;
+        self.heap.pop();
+        self.pos[removed_key] = NONE;
+        if slot < self.heap.len() {
+            // The swapped-in element may violate the heap property in
+            // either direction. If sift_up moves it away, the element left
+            // at `slot` is a former ancestor, which already dominates the
+            // whole subtree, so the subsequent sift_down is a no-op.
+            self.sift_up(slot);
+            self.sift_down(slot);
+        }
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 <= self.heap[parent].0 {
+                break;
+            }
+            self.swap_slots(i, parent);
+            i = parent;
+        }
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.heap.len() && self.heap[l].0 > self.heap[largest].0 {
+                largest = l;
+            }
+            if r < self.heap.len() && self.heap[r].0 > self.heap[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.swap_slots(i, largest);
+            i = largest;
+        }
+    }
+
+    #[inline]
+    fn swap_slots(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a].1] = a;
+        self.pos[self.heap[b].1] = b;
+    }
+
+    /// Debug invariant check (used by property tests).
+    pub fn check_invariants(&self) -> bool {
+        for i in 1..self.heap.len() {
+            if self.heap[i].0 > self.heap[(i - 1) / 2].0 {
+                return false;
+            }
+        }
+        for (slot, &(_, key)) in self.heap.iter().enumerate() {
+            if self.pos[key] != slot {
+                return false;
+            }
+        }
+        let live = self.pos.iter().filter(|&&p| p != NONE).count();
+        live == self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn push_pop_sorted() {
+        let mut h = IndexedHeap::with_capacity(10);
+        for (k, p) in [(0, 1.0f32), (1, 5.0), (2, 3.0), (3, 4.0), (4, 2.0)] {
+            h.set(k, p);
+        }
+        let mut out = Vec::new();
+        while let Some((p, _)) = h.pop() {
+            out.push(p);
+        }
+        assert_eq!(out, vec![5.0, 4.0, 3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn update_priority_moves_key() {
+        let mut h = IndexedHeap::with_capacity(4);
+        h.set(0, 1.0);
+        h.set(1, 2.0);
+        h.set(2, 3.0);
+        h.set(0, 10.0); // increase
+        assert_eq!(h.peek(), Some((10.0, 0)));
+        h.set(0, 0.5); // decrease
+        assert_eq!(h.pop(), Some((3.0, 2)));
+        assert_eq!(h.pop(), Some((2.0, 1)));
+        assert_eq!(h.pop(), Some((0.5, 0)));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn remove_arbitrary() {
+        let mut h = IndexedHeap::with_capacity(8);
+        for k in 0..8 {
+            h.set(k, k as f32);
+        }
+        assert_eq!(h.remove(3), Some(3.0));
+        assert_eq!(h.remove(3), None);
+        assert!(!h.contains(3));
+        assert!(h.check_invariants());
+        let mut seen = Vec::new();
+        while let Some((_, k)) = h.pop() {
+            seen.push(k);
+        }
+        assert_eq!(seen, vec![7, 6, 5, 4, 2, 1, 0]);
+    }
+
+    #[test]
+    fn property_random_ops_match_reference() {
+        // Property-style test: random set/pop/remove sequences agree with
+        // a naive reference implementation.
+        let mut rng = Rng::new(99);
+        for _case in 0..50 {
+            let cap = 1 + rng.below(64);
+            let mut h = IndexedHeap::with_capacity(cap);
+            let mut reference: std::collections::HashMap<usize, f32> =
+                std::collections::HashMap::new();
+            for _op in 0..200 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let k = rng.below(cap);
+                        let p = (rng.uniform() * 100.0) as f32;
+                        h.set(k, p);
+                        reference.insert(k, p);
+                    }
+                    2 => {
+                        let got = h.pop();
+                        let want = reference
+                            .iter()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(b.0)));
+                        match (got, want) {
+                            (None, None) => {}
+                            (Some((gp, _gk)), Some((_, &wp))) => {
+                                assert_eq!(gp, wp);
+                                // remove whichever key the heap returned
+                                reference.remove(&got.unwrap().1);
+                            }
+                            other => panic!("mismatch {other:?}"),
+                        }
+                    }
+                    _ => {
+                        let k = rng.below(cap);
+                        let got = h.remove(k);
+                        let want = reference.remove(&k);
+                        assert_eq!(got, want);
+                    }
+                }
+                assert!(h.check_invariants(), "invariant broken");
+            }
+        }
+    }
+
+    #[test]
+    fn priority_lookup() {
+        let mut h = IndexedHeap::with_capacity(3);
+        h.set(1, 7.5);
+        assert_eq!(h.priority(1), Some(7.5));
+        assert_eq!(h.priority(0), None);
+    }
+}

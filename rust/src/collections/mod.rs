@@ -1,0 +1,11 @@
+//! Data-structure substrates.
+//!
+//! The paper's serial baseline (SRBP) drives updates from an addressable
+//! max-priority queue (they use Boost's Fibonacci heap). [`IndexedHeap`]
+//! is the modern equivalent: a binary heap with a position index giving
+//! O(log n) `update_priority` on arbitrary keys — the exact API residual
+//! BP needs (update the residual of an edge already in the queue).
+
+pub mod indexed_heap;
+
+pub use indexed_heap::IndexedHeap;

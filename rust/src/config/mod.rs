@@ -1,0 +1,285 @@
+//! Run configuration: TOML-subset files + CLI overrides.
+//!
+//! The launcher (`bp-sched`) and every harness binary share one
+//! [`HarnessConfig`]. Values resolve in order: defaults, then a config
+//! file (`--config path.toml`), then individual CLI flags. The file
+//! format is the flat `key = value` subset of TOML (strings, numbers,
+//! booleans, comments) — parsed by [`toml_lite`], no external crates.
+
+pub mod toml_lite;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use toml_lite::Value;
+
+use crate::engine::{Semiring, UpdateOptions};
+
+/// Which engine executes message updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT XLA programs through PJRT (the many-core path; default).
+    Pjrt,
+    /// Pure-Rust reference engine (no artifacts needed).
+    Native,
+}
+
+/// Shared configuration for experiments and the CLI.
+#[derive(Clone, Debug)]
+pub struct HarnessConfig {
+    /// Paper-scale datasets (ising100/200, chain100k) instead of the
+    /// CPU-friendly scaled defaults (ising40/60, chain20k).
+    pub full: bool,
+    /// Graphs per dataset (the paper's cumulative curves need >= a few).
+    pub graphs: usize,
+    /// Root seed; every graph/run derives a child stream.
+    pub seed: u64,
+    /// Convergence threshold ε.
+    pub eps: f32,
+    /// Wallclock timeout per run, seconds.
+    pub timeout: f64,
+    /// Simulated-device timeout per run, seconds.
+    pub sim_timeout: f64,
+    /// Wallclock timeout for the serial baseline (paper: 90 s, 180 s for
+    /// protein).
+    pub srbp_timeout: f64,
+    /// Iteration cap per run.
+    pub max_iterations: usize,
+    /// Output directory for JSON/CSV reports.
+    pub out_dir: PathBuf,
+    /// Worker threads for campaigns.
+    pub threads: usize,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Semiring: marginal (sum-product) or MAP (max-product) inference.
+    pub semiring: Semiring,
+    /// Log-domain damping factor in [0, 1); 0 = the paper's undamped BP.
+    pub damping: f64,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            full: false,
+            graphs: 5,
+            seed: 20_190_624, // the paper's arXiv date
+            eps: crate::DEFAULT_EPS,
+            timeout: 20.0,
+            sim_timeout: 5.0,
+            srbp_timeout: 10.0,
+            max_iterations: 20_000,
+            out_dir: PathBuf::from("results"),
+            threads: crate::util::parallel::default_threads(),
+            engine: EngineKind::Pjrt,
+            semiring: Semiring::SumProduct,
+            damping: 0.0,
+        }
+    }
+}
+
+impl HarnessConfig {
+    /// Engine-level update options derived from this config.
+    pub fn update_options(&self) -> UpdateOptions {
+        UpdateOptions {
+            semiring: self.semiring,
+            damping: self.damping as f32,
+        }
+    }
+
+    /// Apply one key/value pair (file key or CLI flag name).
+    fn set(&mut self, key: &str, value: &Value) -> Result<()> {
+        match key {
+            "full" => self.full = value.as_bool().context("full: want bool")?,
+            "graphs" => self.graphs = value.as_usize().context("graphs: want int")?,
+            "seed" => self.seed = value.as_usize().context("seed: want int")? as u64,
+            "eps" => self.eps = value.as_f64().context("eps: want number")? as f32,
+            "timeout" => self.timeout = value.as_f64().context("timeout")?,
+            "sim_timeout" => self.sim_timeout = value.as_f64().context("sim_timeout")?,
+            "srbp_timeout" => self.srbp_timeout = value.as_f64().context("srbp_timeout")?,
+            "max_iterations" => {
+                self.max_iterations = value.as_usize().context("max_iterations")?
+            }
+            "out_dir" => self.out_dir = PathBuf::from(value.as_str().context("out_dir")?),
+            "threads" => self.threads = value.as_usize().context("threads")?.max(1),
+            "engine" => {
+                self.engine = match value.as_str().context("engine")? {
+                    "pjrt" => EngineKind::Pjrt,
+                    "native" => EngineKind::Native,
+                    other => bail!("engine must be pjrt|native, got {other:?}"),
+                }
+            }
+            "mode" => {
+                self.semiring = match value.as_str().context("mode")? {
+                    "sum" | "marginal" => Semiring::SumProduct,
+                    "max" | "map" => Semiring::MaxProduct,
+                    other => bail!("mode must be sum|max, got {other:?}"),
+                }
+            }
+            "damping" => {
+                let d = value.as_f64().context("damping: want number")?;
+                if !(0.0..1.0).contains(&d) {
+                    bail!("damping must be in [0, 1), got {d}");
+                }
+                self.damping = d;
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file.
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let table = toml_lite::parse(&text).with_context(|| format!("parse {path}"))?;
+        for (k, v) in &table {
+            self.set(k, v).with_context(|| format!("{path}: key {k}"))?;
+        }
+        Ok(())
+    }
+
+    /// Parse CLI flags: `--key value` / `--key=value` / `--full` /
+    /// `--config file.toml`. Returns the positional (non-flag) args.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if let Some(flag) = arg.strip_prefix("--") {
+                let (key, inline_val) = match flag.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (flag.to_string(), None),
+                };
+                let key = key.replace('-', "_");
+                if key == "config" {
+                    let path = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).context("--config needs a path")?.clone()
+                        }
+                    };
+                    self.apply_file(&path)?;
+                } else if key == "full" && inline_val.is_none() {
+                    self.full = true;
+                } else {
+                    let raw = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .with_context(|| format!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    let value = toml_lite::parse_value(&raw)?;
+                    self.set(&key, &value)?;
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+
+    /// Parse `std::env::args()` after the binary name.
+    pub fn from_env() -> Result<(HarnessConfig, Vec<String>)> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut cfg = HarnessConfig::default();
+        let positional = cfg.apply_args(&args)?;
+        Ok((cfg, positional))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = HarnessConfig::default();
+        assert!(!c.full);
+        assert!(c.graphs >= 3);
+        assert_eq!(c.engine, EngineKind::Pjrt);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = HarnessConfig::default();
+        let pos = c
+            .apply_args(&args(&[
+                "table1", "--graphs", "9", "--full", "--eps=1e-5", "--engine", "native",
+            ]))
+            .unwrap();
+        assert_eq!(pos, vec!["table1"]);
+        assert_eq!(c.graphs, 9);
+        assert!(c.full);
+        assert!((c.eps - 1e-5).abs() < 1e-12);
+        assert_eq!(c.engine, EngineKind::Native);
+    }
+
+    #[test]
+    fn dashes_map_to_underscores() {
+        let mut c = HarnessConfig::default();
+        c.apply_args(&args(&["--max-iterations", "77"])).unwrap();
+        assert_eq!(c.max_iterations, 77);
+    }
+
+    #[test]
+    fn mode_and_damping_keys() {
+        let mut c = HarnessConfig::default();
+        c.apply_args(&args(&["--mode", "max", "--damping", "0.5"])).unwrap();
+        assert_eq!(c.semiring, Semiring::MaxProduct);
+        assert!((c.damping - 0.5).abs() < 1e-12);
+        assert!(c.apply_args(&args(&["--damping", "1.5"])).is_err());
+        assert!(c.apply_args(&args(&["--mode", "tropical"])).is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = HarnessConfig::default();
+        assert!(c.apply_args(&args(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bpcfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(
+            &path,
+            "# experiment scaling\ngraphs = 12\nfull = true\nengine = \"native\"\ntimeout = 3.5\n",
+        )
+        .unwrap();
+        let mut c = HarnessConfig::default();
+        c.apply_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.graphs, 12);
+        assert!(c.full);
+        assert_eq!(c.engine, EngineKind::Native);
+        assert!((c.timeout - 3.5).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_then_cli_precedence() {
+        let dir = std::env::temp_dir().join(format!("bpcfg2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(&path, "graphs = 12\n").unwrap();
+        let mut c = HarnessConfig::default();
+        c.apply_args(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--graphs",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(c.graphs, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,153 @@
+//! Flat TOML-subset parser: `key = value` lines with strings, numbers,
+//! booleans and `#` comments. Sections and nesting are rejected loudly
+//! (configs here are intentionally flat).
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Num(v) if *v >= 0.0 && v.fract() == 0.0 => Some(*v as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a whole file into (key, value) pairs, preserving order.
+pub fn parse(text: &str) -> Result<Vec<(String, Value)>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            bail!("line {}: sections are not supported", lineno + 1);
+        }
+        let (key, val) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            bail!("line {}: bad key {key:?}", lineno + 1);
+        }
+        let value = parse_value(val.trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        out.push((key.to_string(), value));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse one scalar: quoted string, bool, or number. Bare words fall back
+/// to strings (convenient for CLI values like `--engine native`).
+pub fn parse_value(raw: &str) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string {raw:?}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = raw.parse::<f64>() {
+        return Ok(Value::Num(v));
+    }
+    // bare word
+    if raw.chars().all(|c| c.is_alphanumeric() || "_-./".contains(c)) {
+        return Ok(Value::Str(raw.to_string()));
+    }
+    bail!("cannot parse value {raw:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse_value("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse_value("1e-4").unwrap(), Value::Num(1e-4));
+        assert_eq!(parse_value("true").unwrap(), Value::Bool(true));
+        assert_eq!(
+            parse_value("\"hello\"").unwrap(),
+            Value::Str("hello".into())
+        );
+        assert_eq!(parse_value("native").unwrap(), Value::Str("native".into()));
+    }
+
+    #[test]
+    fn parses_file() {
+        let text = "\n# comment\ngraphs = 5\nname = \"x # not a comment\" # trailing\nok = true\n";
+        let t = parse(text).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0], ("graphs".into(), Value::Num(5.0)));
+        assert_eq!(t[1].1, Value::Str("x # not a comment".into()));
+        assert_eq!(t[2].1, Value::Bool(true));
+    }
+
+    #[test]
+    fn rejects_sections_and_garbage() {
+        assert!(parse("[section]\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("bad key = 1\n").is_err());
+        assert!(parse_value("\"unterminated").is_err());
+        assert!(parse_value("").is_err());
+    }
+
+    #[test]
+    fn as_usize_guards() {
+        assert_eq!(Value::Num(5.0).as_usize(), Some(5));
+        assert_eq!(Value::Num(5.5).as_usize(), None);
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+        assert_eq!(Value::Str("5".into()).as_usize(), None);
+    }
+}

@@ -1,0 +1,272 @@
+//! Campaigns: one scheduling policy over a family of sampled graphs.
+//!
+//! The paper's figures are *cumulative convergence curves*: for a dataset
+//! of graphs, the fraction that has converged as a function of time. A
+//! [`Campaign`] runs every graph (in parallel across graphs — each run
+//! itself is a sequential iteration chain) and derives those curves plus
+//! the speedup statistics the tables report.
+//!
+//! Every statistic takes a [`TimeBasis`]: `Simulated` (modeled V100 time,
+//! the paper's device — see [`crate::perfmodel`]) or `Wallclock`
+//! (measured single-core CPU time). Serial baseline runs carry no
+//! simulated clock and report wallclock under both bases.
+
+use anyhow::Result;
+
+use super::{RunResult, TimeBasis};
+use crate::graph::Mrf;
+use crate::util::json::Json;
+use crate::util::parallel;
+
+/// Results of one (policy, dataset) pair.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub label: String,
+    pub outcomes: Vec<RunResult>,
+}
+
+/// Run `runner` over every graph, in parallel, preserving order.
+pub fn run_campaign<F>(
+    label: impl Into<String>,
+    graphs: &[Mrf],
+    threads: usize,
+    runner: F,
+) -> Result<Campaign>
+where
+    F: Fn(usize, &Mrf) -> Result<RunResult> + Sync,
+{
+    let outcomes = parallel::par_map(graphs, threads, |i, g| runner(i, g));
+    let outcomes: Result<Vec<RunResult>> = outcomes.into_iter().collect();
+    Ok(Campaign {
+        label: label.into(),
+        outcomes: outcomes?,
+    })
+}
+
+impl Campaign {
+    /// Fraction of runs that converged.
+    pub fn converged_fraction(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().filter(|r| r.converged()).count() as f64
+            / self.outcomes.len() as f64
+    }
+
+    /// Cumulative convergence curve: sorted (time, fraction) steps, one
+    /// per converged run — exactly the series in the paper's Figs 2 & 4.
+    pub fn cumulative_curve(&self, basis: TimeBasis) -> Vec<(f64, f64)> {
+        let mut times: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|r| r.converged())
+            .map(|r| r.time(basis))
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = self.outcomes.len().max(1) as f64;
+        times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (t, (i + 1) as f64 / n))
+            .collect()
+    }
+
+    /// Mean time over converged runs.
+    pub fn mean_converged_time(&self, basis: TimeBasis) -> Option<f64> {
+        let times: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|r| r.converged())
+            .map(|r| r.time(basis))
+            .collect();
+        if times.is_empty() {
+            None
+        } else {
+            Some(times.iter().sum::<f64>() / times.len() as f64)
+        }
+    }
+
+    /// Mean time over all runs, counting unconverged runs at their full
+    /// (timeout) duration — the conservative accounting behind the
+    /// paper's `>` lower-bound speedups.
+    pub fn mean_time_lower_bound(&self, basis: TimeBasis) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|r| r.time(basis)).sum::<f64>()
+            / self.outcomes.len() as f64
+    }
+
+    /// Total message updates across runs.
+    pub fn total_message_updates(&self) -> u64 {
+        self.outcomes.iter().map(|r| r.message_updates).sum()
+    }
+
+    /// Mean iterations across runs.
+    pub fn mean_iterations(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|r| r.iterations as f64).sum::<f64>()
+            / self.outcomes.len() as f64
+    }
+
+    /// Fraction of (simulated or measured) time spent in frontier
+    /// selection — the paper's sort-and-select overhead metric.
+    pub fn select_fraction(&self, basis: TimeBasis) -> f64 {
+        let (mut sel, mut tot) = (0.0, 0.0);
+        for r in &self.outcomes {
+            match basis {
+                TimeBasis::Wallclock => {
+                    sel += r.phases.get("select");
+                    tot += r.phases.total();
+                }
+                TimeBasis::Simulated => {
+                    if r.sim_wall.is_some() {
+                        sel += r.sim_phases.get("select");
+                        tot += r.sim_phases.total();
+                    } else {
+                        sel += r.phases.get("select");
+                        tot += r.phases.total();
+                    }
+                }
+            }
+        }
+        sel / tot.max(1e-30)
+    }
+
+    /// JSON report (figure harness writes these for plotting).
+    pub fn to_json(&self) -> Json {
+        let curve_sim = self.cumulative_curve(TimeBasis::Simulated);
+        let curve_wall = self.cumulative_curve(TimeBasis::Wallclock);
+        Json::obj()
+            .str("label", self.label.clone())
+            .num("runs", self.outcomes.len() as f64)
+            .num("converged_fraction", self.converged_fraction())
+            .field(
+                "curve_sim_time_s",
+                Json::arr(curve_sim.iter().map(|&(t, _)| Json::num(t))),
+            )
+            .field(
+                "curve_wall_time_s",
+                Json::arr(curve_wall.iter().map(|&(t, _)| Json::num(t))),
+            )
+            .field(
+                "curve_fraction",
+                Json::arr(curve_sim.iter().map(|&(_, f)| Json::num(f))),
+            )
+            .field(
+                "wall_s",
+                Json::arr(self.outcomes.iter().map(|r| Json::num(r.wall))),
+            )
+            .field(
+                "sim_s",
+                Json::arr(self.outcomes.iter().map(|r| match r.sim_wall {
+                    Some(s) => Json::num(s),
+                    None => Json::Null,
+                })),
+            )
+            .field(
+                "converged",
+                Json::arr(self.outcomes.iter().map(|r| Json::Bool(r.converged()))),
+            )
+            .num("total_message_updates", self.total_message_updates() as f64)
+            .num("mean_iterations", self.mean_iterations())
+            .build()
+    }
+}
+
+/// Speedup of `ours` vs `baseline` (paper Tables I–III): ratio of mean
+/// times; `lower_bound = true` when any baseline run failed to converge
+/// (the baseline mean then under-counts, so the ratio is a `>` bound).
+#[derive(Clone, Copy, Debug)]
+pub struct Speedup {
+    pub factor: f64,
+    pub lower_bound: bool,
+}
+
+impl Speedup {
+    /// `ours` is timed under `basis`; the baseline is always wallclock
+    /// (the serial CPU is measured, never simulated).
+    pub fn compute(ours: &Campaign, baseline: &Campaign, basis: TimeBasis) -> Speedup {
+        let our_time = ours.mean_time_lower_bound(basis).max(1e-9);
+        let base_time = baseline.mean_time_lower_bound(TimeBasis::Wallclock);
+        Speedup {
+            factor: base_time / our_time,
+            lower_bound: baseline.converged_fraction() < 1.0
+                || ours.converged_fraction() < 1.0,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        if self.lower_bound {
+            format!("> {:.2}x", self.factor)
+        } else {
+            format!("{:.2}x", self.factor)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run, RunParams};
+    use crate::datasets::DatasetSpec;
+    use crate::engine::native::NativeEngine;
+    use crate::sched::Lbp;
+
+    fn mini_campaign() -> Campaign {
+        let ds = DatasetSpec::Ising { n: 4, c: 1.0 }.generate_many(4, 11).unwrap();
+        run_campaign("lbp", &ds.graphs, 2, |_, g| {
+            let mut eng = NativeEngine::new();
+            let mut s = Lbp::new();
+            run(g, &mut eng, &mut s, &RunParams::default())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn curve_is_monotone_both_bases() {
+        let c = mini_campaign();
+        assert_eq!(c.outcomes.len(), 4);
+        for basis in [TimeBasis::Wallclock, TimeBasis::Simulated] {
+            let curve = c.cumulative_curve(basis);
+            assert!(!curve.is_empty());
+            for w in curve.windows(2) {
+                assert!(w[0].0 <= w[1].0);
+                assert!(w[0].1 < w[1].1);
+            }
+            assert!((curve.last().unwrap().1 - c.converged_fraction()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn simulated_time_present_and_small() {
+        // On a tiny easy grid, modeled V100 time must be far below CPU
+        // wallclock (that is the point of the device).
+        let c = mini_campaign();
+        for r in &c.outcomes {
+            let sim = r.sim_wall.expect("coordinator runs carry sim clocks");
+            assert!(sim > 0.0);
+            assert!(sim < r.wall * 10.0, "sim {sim} vs wall {}", r.wall);
+        }
+    }
+
+    #[test]
+    fn speedup_render() {
+        let s = Speedup { factor: 3.456, lower_bound: false };
+        assert_eq!(s.render(), "3.46x");
+        let s = Speedup { factor: 72.31, lower_bound: true };
+        assert_eq!(s.render(), "> 72.31x");
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let c = mini_campaign();
+        let j = c.to_json().render();
+        assert!(j.contains("\"label\":\"lbp\""));
+        assert!(j.contains("curve_sim_time_s"));
+        assert!(j.contains("curve_wall_time_s"));
+        assert!(j.contains("\"runs\":4"));
+    }
+}

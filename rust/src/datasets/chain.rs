@@ -1,0 +1,52 @@
+//! Chain generator (paper §III-C): N binary variables in a single chain,
+//! potentials sampled exactly like the Ising grids. BP is guaranteed to
+//! converge on chains (they are trees), so this dataset isolates
+//! *overhead*: the paper uses it to show sort-and-select costs dominate
+//! (Fig 2c) while RnBP matches LBP (Fig 4e).
+
+use anyhow::Result;
+
+use crate::graph::{Mrf, MrfBuilder};
+use crate::util::Rng;
+
+/// Generate one length-N chain instance with coupling scale `c`.
+pub fn generate(class_name: &str, n: usize, c: f64, rng: &mut Rng) -> Result<Mrf> {
+    assert!(n >= 2, "chain needs n >= 2");
+    let mut b = MrfBuilder::new(class_name, 2);
+    for _ in 0..n {
+        let p0 = rng.range(1e-6, 1.0).ln() as f32;
+        let p1 = rng.range(1e-6, 1.0).ln() as f32;
+        b.add_vertex(&[p0, p1]);
+    }
+    for i in 0..n - 1 {
+        let lc = (rng.range(-0.5, 0.5) * c) as f32;
+        b.add_edge(i, i + 1, &[lc, -lc, -lc, lc]);
+    }
+    b.build(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_shape() {
+        let mut rng = Rng::new(1);
+        let g = generate("chain", 100, 10.0, &mut rng).unwrap();
+        assert_eq!(g.live_vertices, 100);
+        assert_eq!(g.live_edges, 198);
+        assert_eq!(g.max_in_degree, 2);
+        assert_eq!(g.incoming(0).count(), 1);
+        assert_eq!(g.incoming(50).count(), 2);
+        assert_eq!(g.incoming(99).count(), 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let ga = generate("c", 64, 10.0, &mut a).unwrap();
+        let gb = generate("c", 64, 10.0, &mut b).unwrap();
+        assert_eq!(ga.log_pair, gb.log_pair);
+    }
+}

@@ -1,0 +1,100 @@
+//! Ising grid generator (paper §III-C).
+//!
+//! N x N grid of binary variables. Unary potentials psi_i are sampled
+//! uniformly from (0, 1]; pairwise potentials are `exp(lambda * C)` when
+//! `x_i == x_j` and `exp(-lambda * C)` otherwise, with `lambda ~
+//! U[-0.5, 0.5]` so some edges favour agreement and others disagreement.
+//! Higher `C` makes inference harder (the paper uses C in {2, 2.5, 3}).
+
+use anyhow::Result;
+
+use crate::graph::{Mrf, MrfBuilder};
+use crate::util::Rng;
+
+/// Generate one N x N Ising grid instance.
+pub fn generate(class_name: &str, n: usize, c: f64, rng: &mut Rng) -> Result<Mrf> {
+    assert!(n >= 2, "ising grid needs n >= 2");
+    let mut b = MrfBuilder::new(class_name, 2);
+
+    for _ in 0..n * n {
+        // psi_i in (0,1] per state; log-space. Guard the log: U[1e-6, 1).
+        let p0 = rng.range(1e-6, 1.0).ln() as f32;
+        let p1 = rng.range(1e-6, 1.0).ln() as f32;
+        b.add_vertex(&[p0, p1]);
+    }
+
+    let idx = |r: usize, col: usize| r * n + col;
+    for r in 0..n {
+        for col in 0..n {
+            // log psi = +lambda*C on agreement, -lambda*C on disagreement
+            if col + 1 < n {
+                let lc = (rng.range(-0.5, 0.5) * c) as f32;
+                b.add_edge(idx(r, col), idx(r, col + 1), &[lc, -lc, -lc, lc]);
+            }
+            if r + 1 < n {
+                let lc = (rng.range(-0.5, 0.5) * c) as f32;
+                b.add_edge(idx(r, col), idx(r + 1, col), &[lc, -lc, -lc, lc]);
+            }
+        }
+    }
+    b.build(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape() {
+        let mut rng = Rng::new(1);
+        let g = generate("ising10", 10, 2.5, &mut rng).unwrap();
+        assert_eq!(g.live_vertices, 100);
+        assert_eq!(g.live_edges, 4 * 10 * 9); // 2 * undirected
+        assert_eq!(g.max_arity, 2);
+        // interior vertices have in-degree 4, corners 2
+        let deg0 = g.incoming(0).count();
+        assert_eq!(deg0, 2);
+        let interior = 5 * 10 + 5;
+        assert_eq!(g.incoming(interior).count(), 4);
+    }
+
+    #[test]
+    fn coupling_magnitude_scales_with_c() {
+        let mut rng = Rng::new(2);
+        let weak = generate("i", 8, 0.5, &mut rng).unwrap();
+        let mut rng = Rng::new(2);
+        let strong = generate("i", 8, 5.0, &mut rng).unwrap();
+        let max_abs = |g: &Mrf| {
+            (0..g.live_edges)
+                .map(|e| g.log_pair_at(e, 0, 0).abs())
+                .fold(0.0f32, f32::max)
+        };
+        assert!(max_abs(&strong) > max_abs(&weak) * 5.0);
+        // lambda in [-0.5, 0.5] => |log psi| <= 0.5 * C
+        assert!(max_abs(&strong) <= 2.5 + 1e-5);
+    }
+
+    #[test]
+    fn pairwise_is_agreement_symmetric() {
+        let mut rng = Rng::new(3);
+        let g = generate("i", 4, 2.0, &mut rng).unwrap();
+        for e in 0..g.live_edges {
+            let agree = g.log_pair_at(e, 0, 0);
+            assert_eq!(g.log_pair_at(e, 1, 1), agree);
+            assert_eq!(g.log_pair_at(e, 0, 1), -agree);
+            assert_eq!(g.log_pair_at(e, 1, 0), -agree);
+        }
+    }
+
+    #[test]
+    fn unary_potentials_in_unit_interval() {
+        let mut rng = Rng::new(4);
+        let g = generate("i", 6, 2.0, &mut rng).unwrap();
+        for v in 0..g.live_vertices {
+            for x in 0..2 {
+                let lp = g.log_unary_at(v, x);
+                assert!(lp <= 0.0 && lp.is_finite()); // psi in (0, 1]
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Benchmark dataset generators (paper §III-C / §IV-C) and persistence.
+//!
+//! * [`ising`] — N x N Ising grids, the paper's difficulty-controlled
+//!   synthetic benchmark (`C` scales coupling strength).
+//! * [`chain`] — length-N chains (BP provably converges; measures
+//!   overhead, Fig 2c / 4e).
+//! * [`protein`] — synthetic protein-folding-like MRFs: irregular
+//!   structure, variable arity up to 81 (substitution for the
+//!   non-redistributable Yanover–Weiss dataset, DESIGN.md §3).
+//! * [`serialize`] — compact binary persistence for generated instances.
+
+pub mod chain;
+pub mod ising;
+pub mod potts;
+pub mod protein;
+pub mod serialize;
+
+use crate::graph::Mrf;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// A named dataset: a family of sampled graphs sharing one graph class.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub class_name: String,
+    pub graphs: Vec<Mrf>,
+}
+
+/// Specification of the standard datasets used across the harness.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// Ising grid: (class, N, C).
+    Ising { n: usize, c: f64 },
+    /// Chain: (class, N, C).
+    Chain { n: usize, c: f64 },
+    /// Protein-like irregular graphs.
+    Protein,
+    /// q-state Potts grid: (N, q, C).
+    Potts { n: usize, q: usize, c: f64 },
+}
+
+impl DatasetSpec {
+    /// The graph-class (artifact envelope) this spec generates into.
+    pub fn class_name(&self) -> String {
+        match self {
+            DatasetSpec::Ising { n, .. } => format!("ising{n}"),
+            DatasetSpec::Chain { n, .. } => match n {
+                20_000 => "chain20k".to_string(),
+                100_000 => "chain100k".to_string(),
+                n => format!("chain{n}"),
+            },
+            DatasetSpec::Protein => "protein".to_string(),
+            DatasetSpec::Potts { n, q, .. } => format!("potts{n}_{q}"),
+        }
+    }
+
+    /// Human-readable label matching the paper's dataset naming.
+    pub fn label(&self) -> String {
+        match self {
+            DatasetSpec::Ising { n, c } => format!("Ising {n}x{n}, C={c}"),
+            DatasetSpec::Chain { n, c } => format!("Chain {n}, C={c}"),
+            DatasetSpec::Protein => "Protein-folding (synthetic)".to_string(),
+            DatasetSpec::Potts { n, q, c } => format!("Potts {n}x{n} q={q}, C={c}"),
+        }
+    }
+
+    /// Generate one graph instance.
+    pub fn generate(&self, rng: &mut Rng) -> Result<Mrf> {
+        match *self {
+            DatasetSpec::Ising { n, c } => {
+                ising::generate(&self.class_name(), n, c, rng)
+            }
+            DatasetSpec::Chain { n, c } => {
+                chain::generate(&self.class_name(), n, c, rng)
+            }
+            DatasetSpec::Protein => {
+                protein::generate(&self.class_name(), &protein::ProteinParams::default(), rng)
+            }
+            DatasetSpec::Potts { n, q, c } => {
+                potts::generate(&self.class_name(), n, q, c, rng)
+            }
+        }
+    }
+
+    /// Generate a family of `count` instances with per-graph forked seeds.
+    pub fn generate_many(&self, count: usize, seed: u64) -> Result<Dataset> {
+        let mut root = Rng::new(seed);
+        let mut graphs = Vec::with_capacity(count);
+        for i in 0..count {
+            let mut child = root.fork(i as u64);
+            graphs.push(self.generate(&mut child)?);
+        }
+        Ok(Dataset {
+            name: self.label(),
+            class_name: self.class_name(),
+            graphs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_names_match_manifest_registry() {
+        assert_eq!(DatasetSpec::Ising { n: 100, c: 2.5 }.class_name(), "ising100");
+        assert_eq!(DatasetSpec::Chain { n: 20_000, c: 10.0 }.class_name(), "chain20k");
+        assert_eq!(DatasetSpec::Chain { n: 100_000, c: 10.0 }.class_name(), "chain100k");
+        assert_eq!(DatasetSpec::Protein.class_name(), "protein");
+    }
+
+    #[test]
+    fn generate_many_is_deterministic() {
+        let spec = DatasetSpec::Ising { n: 5, c: 2.0 };
+        let a = spec.generate_many(3, 42).unwrap();
+        let b = spec.generate_many(3, 42).unwrap();
+        for (ga, gb) in a.graphs.iter().zip(&b.graphs) {
+            assert_eq!(ga.log_unary, gb.log_unary);
+            assert_eq!(ga.log_pair, gb.log_pair);
+        }
+        let c = spec.generate_many(3, 43).unwrap();
+        assert_ne!(a.graphs[0].log_unary, c.graphs[0].log_unary);
+    }
+
+    #[test]
+    fn graphs_within_family_differ() {
+        let spec = DatasetSpec::Ising { n: 5, c: 2.0 };
+        let d = spec.generate_many(2, 7).unwrap();
+        assert_ne!(d.graphs[0].log_unary, d.graphs[1].log_unary);
+    }
+}

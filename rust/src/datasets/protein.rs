@@ -1,0 +1,213 @@
+//! Synthetic protein-folding-like MRFs (substitution for Yanover & Weiss
+//! side-chain prediction graphs, DESIGN.md §3).
+//!
+//! The real dataset's stress properties, reproduced here:
+//! * **variable arity** — side-chain rotamer counts range 2..81 with a
+//!   low-skewed distribution (most residues have few rotamers);
+//! * **irregular structure** — a backbone chain plus spatial contact
+//!   edges, bounded degree;
+//! * **dense pairwise tables** — full `[a_u, a_v]` interaction matrices.
+//!
+//! Instances are padded into the shared `protein` envelope (V=192, E<=512,
+//! A=81, D=6) so one set of AOT artifacts serves every sample.
+
+use anyhow::Result;
+
+use crate::graph::{Mrf, MrfBuilder};
+use crate::runtime::manifest::GraphClass;
+use crate::util::Rng;
+
+/// Tunable generator parameters (defaults fit the `protein` envelope).
+#[derive(Clone, Debug)]
+pub struct ProteinParams {
+    /// Vertex count range (residues), inclusive.
+    pub min_vertices: usize,
+    pub max_vertices: usize,
+    /// Max vertex degree (undirected) — envelope D.
+    pub max_degree: usize,
+    /// Max undirected edges — envelope M/2.
+    pub max_edges: usize,
+    /// Max arity (rotamers) — envelope A.
+    pub max_arity: usize,
+    /// Pairwise potential scale (analogue of contact energy strength).
+    pub coupling: f64,
+    /// Probability of attempting a contact edge per candidate pair.
+    pub contact_prob: f64,
+}
+
+impl Default for ProteinParams {
+    fn default() -> Self {
+        ProteinParams {
+            min_vertices: 96,
+            max_vertices: 192,
+            max_degree: 6,
+            max_edges: 512,
+            max_arity: 81,
+            // calibrated so loopy BP only partially converges while RnBP
+            // with the paper's protein settings (LowP=.4, HighP=.9)
+            // converges fully — the Fig 4f regime
+            coupling: 2.5,
+            contact_prob: 0.35,
+        }
+    }
+}
+
+/// Sample a rotamer count in `[2, max_arity]`, low-skewed: most residues
+/// have a handful of rotamers, a few have dozens (ALA/GLY vs LYS/ARG).
+fn sample_arity(rng: &mut Rng, max_arity: usize) -> usize {
+    let u = rng.uniform();
+    // u^4 skews strongly toward 0 (most side chains have few rotamers,
+    // LYS/ARG-like residues have dozens); map to [2, max]
+    let x = 2.0 + u * u * u * u * (max_arity as f64 - 2.0);
+    (x.round() as usize).clamp(2, max_arity)
+}
+
+/// Generate one synthetic protein-like instance inside the envelope.
+pub fn generate(class_name: &str, p: &ProteinParams, rng: &mut Rng) -> Result<Mrf> {
+    let v_live = p.min_vertices + rng.below(p.max_vertices - p.min_vertices + 1);
+    let mut b = MrfBuilder::new(class_name, p.max_arity);
+
+    let mut arities = Vec::with_capacity(v_live);
+    for _ in 0..v_live {
+        let a = sample_arity(rng, p.max_arity);
+        // unary: rotamer self-energies ~ N(0, 1)
+        let unary: Vec<f32> = (0..a).map(|_| rng.normal() as f32).collect();
+        b.add_vertex(&unary);
+        arities.push(a);
+    }
+
+    let mut degree = vec![0usize; v_live];
+    let mut n_edges = 0usize;
+    let add = |b: &mut MrfBuilder,
+                   degree: &mut Vec<usize>,
+                   n_edges: &mut usize,
+                   rng: &mut Rng,
+                   u: usize,
+                   v: usize|
+     -> bool {
+        if *n_edges >= p.max_edges || degree[u] >= p.max_degree || degree[v] >= p.max_degree {
+            return false;
+        }
+        // contact energy table ~ N(0, coupling)
+        let table: Vec<f32> = (0..arities[u] * arities[v])
+            .map(|_| (rng.normal() * p.coupling) as f32)
+            .collect();
+        b.add_edge(u, v, &table);
+        degree[u] += 1;
+        degree[v] += 1;
+        *n_edges += 1;
+        true
+    };
+
+    // Backbone chain: guarantees connectivity.
+    for i in 0..v_live - 1 {
+        add(&mut b, &mut degree, &mut n_edges, rng, i, i + 1);
+    }
+    // Spatial contacts: residues close in a random fold. Model the fold as
+    // a random 1D layout distortion: pairs (i, j) with small |perm(i) -
+    // perm(j)| are "in contact".
+    let mut perm: Vec<usize> = (0..v_live).collect();
+    rng.shuffle(&mut perm);
+    let mut attempts: Vec<(usize, usize)> = Vec::new();
+    for w in 1..4usize {
+        for i in 0..v_live - w {
+            let (u, v) = (perm[i], perm[i + w]);
+            let (u, v) = (u.min(v), u.max(v));
+            if v - u > 1 {
+                attempts.push((u, v));
+            }
+        }
+    }
+    rng.shuffle(&mut attempts);
+    let mut seen = std::collections::HashSet::new();
+    for (u, v) in attempts {
+        if seen.contains(&(u, v)) || !rng.coin(p.contact_prob) {
+            continue;
+        }
+        if add(&mut b, &mut degree, &mut n_edges, rng, u, v) {
+            seen.insert((u, v));
+        }
+    }
+
+    // Pad into the shared envelope so artifacts are reusable across
+    // samples (the class must exist in the manifest for PJRT runs; tests
+    // may build with a tight envelope via class_name "tight").
+    if class_name == "tight" {
+        b.build(None)
+    } else {
+        let class = GraphClass {
+            name: class_name.to_string(),
+            num_vertices: p.max_vertices,
+            num_edges: 2 * p.max_edges,
+            arity: p.max_arity,
+            max_in_degree: p.max_degree,
+            buckets: vec![2 * p.max_edges],
+        };
+        b.build(Some(&class))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_envelope() {
+        let p = ProteinParams::default();
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let g = generate("protein", &p, &mut rng).unwrap();
+            assert_eq!(g.num_vertices, 192);
+            assert_eq!(g.num_edges, 1024);
+            assert!(g.live_vertices >= 96 && g.live_vertices <= 192);
+            assert!(g.live_edges <= 1024);
+            assert_eq!(g.max_arity, 81);
+            for v in 0..g.live_vertices {
+                assert!(g.incoming(v).count() <= 6);
+                let a = g.arity_of(v);
+                assert!((2..=81).contains(&a));
+            }
+        }
+    }
+
+    #[test]
+    fn arity_distribution_is_variable_and_skewed() {
+        let mut rng = Rng::new(123);
+        let g = generate("tight", &ProteinParams::default(), &mut rng).unwrap();
+        let arities: Vec<usize> = (0..g.live_vertices).map(|v| g.arity_of(v)).collect();
+        let distinct: std::collections::HashSet<_> = arities.iter().collect();
+        assert!(distinct.len() > 5, "arity should vary, got {distinct:?}");
+        let small = arities.iter().filter(|&&a| a <= 12).count();
+        assert!(small * 2 > arities.len(), "most residues have few rotamers");
+        assert!(arities.iter().any(|&a| a > 20), "some residues are large");
+    }
+
+    #[test]
+    fn connected_via_backbone() {
+        let mut rng = Rng::new(7);
+        let g = generate("tight", &ProteinParams::default(), &mut rng).unwrap();
+        // BFS from 0 must reach every live vertex.
+        let mut seen = vec![false; g.live_vertices];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        while let Some(v) = queue.pop_front() {
+            for e in g.incoming(v) {
+                let u = g.src[e] as usize;
+                if !seen[u] {
+                    seen[u] = true;
+                    queue.push_back(u);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn irregular_structure() {
+        let mut rng = Rng::new(11);
+        let g = generate("tight", &ProteinParams::default(), &mut rng).unwrap();
+        let degs: Vec<usize> = (0..g.live_vertices).map(|v| g.incoming(v).count()).collect();
+        let distinct: std::collections::HashSet<_> = degs.iter().collect();
+        assert!(distinct.len() >= 3, "degrees should vary: {distinct:?}");
+    }
+}

@@ -1,0 +1,185 @@
+//! PJRT-backed message engine: the many-core update path.
+//!
+//! Executes the AOT candidate program (JAX gather/normalize around the
+//! Pallas contraction kernel) on the XLA CPU client. Responsibilities:
+//!
+//! * **bucket selection** — smallest artifact capacity >= |frontier|;
+//! * **padding** — frontier index buffer padded with -1 (masked slots);
+//! * **per-graph device buffers** — the structure tensors (potentials,
+//!   adjacency) are uploaded once per graph instance, not per iteration;
+//! * **unpacking** — candidate rows + residuals truncated back to the
+//!   caller's frontier length.
+//!
+//! Everything goes through `execute_b` with caller-owned `PjRtBuffer`s:
+//! the vendored C shim's literal-based `execute` leaks its transient
+//! input buffers (it `release()`s them and never frees — ~0.65 MiB per
+//! call on a mid-size Ising graph), and per-call re-upload of the
+//! constant structure tensors was the dominant per-iteration overhead
+//! (EXPERIMENTS.md §Perf).
+
+use anyhow::{Context, Result};
+
+use super::{CandidateBatch, MessageEngine, UpdateOptions};
+use crate::graph::Mrf;
+use crate::runtime::Runtime;
+
+/// Cached per-graph structure buffers (inputs 1..=7 of the program).
+struct GraphBuffers {
+    instance_id: u64,
+    log_unary: xla::PjRtBuffer,
+    log_pair: xla::PjRtBuffer,
+    in_edges: xla::PjRtBuffer,
+    src: xla::PjRtBuffer,
+    dst: xla::PjRtBuffer,
+    rev: xla::PjRtBuffer,
+    arity: xla::PjRtBuffer,
+}
+
+impl GraphBuffers {
+    fn build(client: &xla::PjRtClient, mrf: &Mrf) -> Result<GraphBuffers> {
+        let (v, m, a, d) = (
+            mrf.num_vertices,
+            mrf.num_edges,
+            mrf.max_arity,
+            mrf.max_in_degree,
+        );
+        Ok(GraphBuffers {
+            instance_id: mrf.instance_id,
+            log_unary: client.buffer_from_host_buffer(&mrf.log_unary, &[v, a], None)?,
+            log_pair: client.buffer_from_host_buffer(&mrf.log_pair, &[m, a, a], None)?,
+            in_edges: client.buffer_from_host_buffer(&mrf.in_edges, &[v, d], None)?,
+            src: client.buffer_from_host_buffer(&mrf.src, &[m], None)?,
+            dst: client.buffer_from_host_buffer(&mrf.dst, &[m], None)?,
+            rev: client.buffer_from_host_buffer(&mrf.rev, &[m], None)?,
+            arity: client.buffer_from_host_buffer(&mrf.arity, &[v], None)?,
+        })
+    }
+}
+
+/// See module docs.
+pub struct PjrtEngine {
+    rt: Runtime,
+    opts: UpdateOptions,
+    /// Device buffer holding the damping scalar (rebuilt if it changes).
+    damping_buf: Option<xla::PjRtBuffer>,
+    cached: Option<GraphBuffers>,
+    /// Reusable padded frontier buffer.
+    frontier_buf: Vec<i32>,
+}
+
+impl PjrtEngine {
+    pub fn new(rt: Runtime) -> PjrtEngine {
+        PjrtEngine {
+            rt,
+            opts: UpdateOptions::default(),
+            damping_buf: None,
+            cached: None,
+            frontier_buf: Vec::new(),
+        }
+    }
+
+    /// Engine with explicit semiring / damping options.
+    pub fn with_options(rt: Runtime, opts: UpdateOptions) -> PjrtEngine {
+        let mut e = PjrtEngine::new(rt);
+        e.opts = opts;
+        e
+    }
+
+    /// Open the default artifacts directory.
+    pub fn from_default_dir() -> Result<PjrtEngine> {
+        Ok(PjrtEngine::new(Runtime::from_default_dir()?))
+    }
+
+    /// Open the default artifacts directory with options.
+    pub fn from_default_dir_with(opts: UpdateOptions) -> Result<PjrtEngine> {
+        Ok(PjrtEngine::with_options(Runtime::from_default_dir()?, opts))
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    fn graph_buffers(&mut self, mrf: &Mrf) -> Result<()> {
+        let hit = self
+            .cached
+            .as_ref()
+            .is_some_and(|g| g.instance_id == mrf.instance_id);
+        if !hit {
+            self.cached = Some(GraphBuffers::build(self.rt.client(), mrf)?);
+        }
+        Ok(())
+    }
+}
+
+impl MessageEngine for PjrtEngine {
+    fn candidates(&mut self, mrf: &Mrf, logm: &[f32], frontier: &[i32]) -> Result<CandidateBatch> {
+        let a = mrf.max_arity;
+        let n = frontier.len();
+        let class = self.rt.class(&mrf.class_name)?;
+        let bucket = class.bucket_for(n).with_context(|| {
+            format!("frontier {n} exceeds largest bucket of {}", mrf.class_name)
+        })?;
+        self.graph_buffers(mrf)?;
+
+        // pad the frontier to bucket capacity
+        self.frontier_buf.clear();
+        self.frontier_buf.extend_from_slice(frontier);
+        self.frontier_buf.resize(bucket, -1);
+
+        let client = self.rt.client().clone();
+        let logm_buf = client.buffer_from_host_buffer(logm, &[mrf.num_edges, a], None)?;
+        let frontier_buf =
+            client.buffer_from_host_buffer(&self.frontier_buf, &[bucket], None)?;
+        if self.damping_buf.is_none() {
+            self.damping_buf =
+                Some(client.buffer_from_host_buffer(&[self.opts.damping], &[1], None)?);
+        }
+
+        let class_name = mrf.class_name.clone();
+        let semiring = self.opts.semiring;
+        let exe = self.rt.candidate_executable(&class_name, bucket, semiring)?;
+        let g = self.cached.as_ref().expect("graph buffers cached");
+        let damping_buf = self.damping_buf.as_ref().expect("damping buffer");
+        let args: [&xla::PjRtBuffer; 10] = [
+            &logm_buf,
+            &g.log_unary,
+            &g.log_pair,
+            &g.in_edges,
+            &g.src,
+            &g.dst,
+            &g.rev,
+            &g.arity,
+            &frontier_buf,
+            damping_buf,
+        ];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetch candidate outputs")?;
+        let (new_lit, res_lit) = result.to_tuple2().context("unpack (new, res) tuple")?;
+        let mut new_m = new_lit.to_vec::<f32>()?;
+        let mut residuals = res_lit.to_vec::<f32>()?;
+        new_m.truncate(n * a);
+        residuals.truncate(n);
+        Ok(CandidateBatch { new_m, residuals })
+    }
+
+    fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {
+        self.graph_buffers(mrf)?;
+        let client = self.rt.client().clone();
+        let logm_buf =
+            client.buffer_from_host_buffer(logm, &[mrf.num_edges, mrf.max_arity], None)?;
+        let class_name = mrf.class_name.clone();
+        let exe = self.rt.marginals_executable(&class_name)?;
+        let g = self.cached.as_ref().expect("graph buffers cached");
+        let args: [&xla::PjRtBuffer; 4] = [&logm_buf, &g.log_unary, &g.in_edges, &g.arity];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetch marginals")?;
+        let out = result.to_tuple1().context("unpack marginals tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,269 @@
+//! Log-space factor algebra over discrete variables.
+//!
+//! A [`Factor`] is a table over an ordered scope of variables; product and
+//! marginalization are the two operations variable elimination needs.
+//! Tables are f64 log-space for numerical robustness (the BP side is f32;
+//! exact inference should be strictly more precise than what it judges).
+
+use anyhow::{bail, Result};
+
+/// Discrete factor in log space.
+#[derive(Clone, Debug)]
+pub struct Factor {
+    /// Variable ids in scope order (ascending, unique).
+    pub vars: Vec<usize>,
+    /// Cardinality of each scope variable.
+    pub card: Vec<usize>,
+    /// Row-major log values, length = prod(card).
+    pub table: Vec<f64>,
+}
+
+impl Factor {
+    /// Construct; `table` is row-major over `vars` in the given order.
+    pub fn new(vars: Vec<usize>, card: Vec<usize>, table: Vec<f64>) -> Result<Self> {
+        if vars.len() != card.len() {
+            bail!("scope/cardinality length mismatch");
+        }
+        if vars.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("scope must be sorted ascending and unique");
+        }
+        let size: usize = card.iter().product();
+        if table.len() != size.max(1) {
+            bail!("table length {} != scope size {}", table.len(), size);
+        }
+        Ok(Factor { vars, card, table })
+    }
+
+    /// Scalar factor (empty scope).
+    pub fn scalar(logv: f64) -> Self {
+        Factor { vars: vec![], card: vec![], table: vec![logv] }
+    }
+
+    /// Number of table entries.
+    pub fn size(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Strides for row-major indexing.
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.card.len()];
+        for i in (0..self.card.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.card[i + 1];
+        }
+        s
+    }
+
+    /// Log-space product: scopes are merged (union, sorted).
+    pub fn product(&self, other: &Factor) -> Factor {
+        // merged scope
+        let mut vars = Vec::with_capacity(self.vars.len() + other.vars.len());
+        let mut card = Vec::new();
+        let (mut i, mut j) = (0, 0);
+        while i < self.vars.len() || j < other.vars.len() {
+            let take_self = match (self.vars.get(i), other.vars.get(j)) {
+                (Some(&a), Some(&b)) => a <= b,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => unreachable!(),
+            };
+            if take_self {
+                if other.vars.get(j) == Some(&self.vars[i]) {
+                    j += 1; // shared variable
+                }
+                vars.push(self.vars[i]);
+                card.push(self.card[i]);
+                i += 1;
+            } else {
+                vars.push(other.vars[j]);
+                card.push(other.card[j]);
+                j += 1;
+            }
+        }
+        let size: usize = card.iter().product::<usize>().max(1);
+
+        // position of each merged var in each input scope
+        let map_of = |f: &Factor| -> Vec<Option<usize>> {
+            vars.iter()
+                .map(|v| f.vars.iter().position(|x| x == v))
+                .collect()
+        };
+        let (ma, mb) = (map_of(self), map_of(other));
+        let (sa, sb) = (self.strides(), other.strides());
+
+        let mut table = vec![0.0f64; size];
+        let mut assign = vec![0usize; vars.len()];
+        for (idx, slot) in table.iter_mut().enumerate() {
+            // decode idx -> assignment (row-major)
+            let mut rem = idx;
+            for k in (0..vars.len()).rev() {
+                assign[k] = rem % card[k];
+                rem /= card[k];
+            }
+            let mut ia = 0usize;
+            let mut ib = 0usize;
+            for k in 0..vars.len() {
+                if let Some(p) = ma[k] {
+                    ia += assign[k] * sa[p];
+                }
+                if let Some(p) = mb[k] {
+                    ib += assign[k] * sb[p];
+                }
+            }
+            *slot = self.table[ia] + other.table[ib];
+        }
+        Factor { vars, card, table }
+    }
+
+    /// Sum out (marginalize) one variable in log space (log-sum-exp).
+    pub fn marginalize(&self, var: usize) -> Factor {
+        let Some(pos) = self.vars.iter().position(|&v| v == var) else {
+            return self.clone();
+        };
+        let mut vars = self.vars.clone();
+        let mut card = self.card.clone();
+        let vcard = card.remove(pos);
+        vars.remove(pos);
+        let out_size: usize = card.iter().product::<usize>().max(1);
+
+        let strides = self.strides();
+        let vstride = strides[pos];
+
+        // out strides
+        let mut out_strides = vec![1usize; card.len()];
+        for i in (0..card.len().saturating_sub(1)).rev() {
+            out_strides[i] = out_strides[i + 1] * card[i + 1];
+        }
+
+        let mut table = vec![f64::NEG_INFINITY; out_size];
+        let mut assign = vec![0usize; card.len()];
+        for (oidx, slot) in table.iter_mut().enumerate() {
+            let mut rem = oidx;
+            for k in (0..card.len()).rev() {
+                assign[k] = rem % card[k];
+                rem /= card[k];
+            }
+            // base index in source with var=0
+            let mut base = 0usize;
+            let mut k_src = 0usize;
+            for k in 0..self.vars.len() {
+                if k == pos {
+                    continue;
+                }
+                base += assign[k_src] * strides[k];
+                k_src += 1;
+            }
+            // logsumexp over the var axis
+            let mut mx = f64::NEG_INFINITY;
+            for x in 0..vcard {
+                mx = mx.max(self.table[base + x * vstride]);
+            }
+            if mx == f64::NEG_INFINITY {
+                *slot = f64::NEG_INFINITY;
+                continue;
+            }
+            let mut s = 0.0f64;
+            for x in 0..vcard {
+                s += (self.table[base + x * vstride] - mx).exp();
+            }
+            *slot = mx + s.ln();
+        }
+        Factor { vars, card, table }
+    }
+
+    /// Normalize (log space) so that exp(table) sums to 1.
+    pub fn normalized(&self) -> Factor {
+        let mx = self.table.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let z = mx + self.table.iter().map(|&t| (t - mx).exp()).sum::<f64>().ln();
+        Factor {
+            vars: self.vars.clone(),
+            card: self.card.clone(),
+            table: self.table.iter().map(|&t| t - z).collect(),
+        }
+    }
+
+    /// As probabilities (exp of normalized table).
+    pub fn probabilities(&self) -> Vec<f64> {
+        self.normalized().table.iter().map(|&t| t.exp()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-10, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn product_disjoint_scopes() {
+        let f = Factor::new(vec![0], vec![2], vec![0.0_f64.ln(), 1.0_f64.ln()]).unwrap();
+        let g = Factor::new(vec![1], vec![2], vec![2.0_f64.ln(), 3.0_f64.ln()]).unwrap();
+        let p = f.product(&g);
+        assert_eq!(p.vars, vec![0, 1]);
+        let probs: Vec<f64> = p.table.iter().map(|&t| t.exp()).collect();
+        close(&probs, &[0.0, 0.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn product_shared_scope() {
+        let f = Factor::new(vec![0, 1], vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let g = Factor::new(vec![1], vec![2], vec![10.0, 20.0]).unwrap();
+        let p = f.product(&g);
+        assert_eq!(p.vars, vec![0, 1]);
+        close(&p.table, &[11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn marginalize_sums() {
+        // f(x0,x1) = [[1,2],[3,4]] (linear space)
+        let f = Factor::new(
+            vec![0, 1],
+            vec![2, 2],
+            vec![1.0f64.ln(), 2.0f64.ln(), 3.0f64.ln(), 4.0f64.ln()],
+        )
+        .unwrap();
+        let m0 = f.marginalize(0); // sum over x0 -> [4, 6]
+        let probs: Vec<f64> = m0.table.iter().map(|&t| t.exp()).collect();
+        close(&probs, &[4.0, 6.0]);
+        let m1 = f.marginalize(1); // sum over x1 -> [3, 7]
+        let probs: Vec<f64> = m1.table.iter().map(|&t| t.exp()).collect();
+        close(&probs, &[3.0, 7.0]);
+    }
+
+    #[test]
+    fn marginalize_missing_var_is_identity() {
+        let f = Factor::new(vec![2], vec![3], vec![0.1, 0.2, 0.3]).unwrap();
+        let g = f.marginalize(7);
+        close(&f.table, &g.table);
+    }
+
+    #[test]
+    fn normalized_sums_to_one() {
+        let f = Factor::new(vec![0], vec![4], vec![0.5, -1.0, 2.0, 0.0]).unwrap();
+        let p = f.probabilities();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn product_associativity() {
+        let f = Factor::new(vec![0], vec![2], vec![0.3, 0.7]).unwrap();
+        let g = Factor::new(vec![1], vec![2], vec![-0.2, 0.4]).unwrap();
+        let h = Factor::new(vec![0, 1], vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let a = f.product(&g).product(&h);
+        let b = f.product(&g.product(&h));
+        assert_eq!(a.vars, b.vars);
+        for (x, y) in a.table.iter().zip(&b.table) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_unsorted_scope() {
+        assert!(Factor::new(vec![1, 0], vec![2, 2], vec![0.0; 4]).is_err());
+        assert!(Factor::new(vec![0, 0], vec![2, 2], vec![0.0; 4]).is_err());
+    }
+}

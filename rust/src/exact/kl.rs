@@ -1,0 +1,66 @@
+//! KL divergence between marginal distributions (Fig 5 metric).
+
+/// KL(p || q) in nats. `q` entries are floored to avoid division blowups
+/// from f32 rounding in the BP marginals.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi <= 0.0 {
+            continue;
+        }
+        kl += pi * (pi / qi.max(1e-12)).ln();
+    }
+    kl.max(0.0)
+}
+
+/// Mean per-vertex KL between exact marginals and BP marginals
+/// (BP side `[V * A]` f32 probabilities, exact side ragged).
+pub fn mean_marginal_kl(exact: &[Vec<f64>], bp: &[f32], max_arity: usize) -> f64 {
+    let mut total = 0.0;
+    for (v, ex) in exact.iter().enumerate() {
+        let row: Vec<f64> = bp[v * max_arity..v * max_arity + ex.len()]
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        total += kl_divergence(ex, &row);
+    }
+    total / exact.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = vec![0.25, 0.75];
+        assert!(kl_divergence(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_and_asymmetric() {
+        let p = vec![0.9, 0.1];
+        let q = vec![0.5, 0.5];
+        let a = kl_divergence(&p, &q);
+        let b = kl_divergence(&q, &p);
+        assert!(a > 0.0 && b > 0.0);
+        assert!((a - b).abs() > 1e-6);
+    }
+
+    #[test]
+    fn kl_handles_zero_p_entries() {
+        let p = vec![1.0, 0.0];
+        let q = vec![0.5, 0.5];
+        let kl = kl_divergence(&p, &q);
+        assert!((kl - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_marginal_kl_ragged() {
+        let exact = vec![vec![0.5, 0.5], vec![0.2, 0.3, 0.5]];
+        let bp = vec![0.5, 0.5, 0.0, 0.2, 0.3, 0.5];
+        let kl = mean_marginal_kl(&exact, &bp, 3);
+        assert!(kl.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Exact inference via variable elimination — the ground truth for the
+//! paper's Fig 5 correctness experiment (Ising 10x10, C=2 is tractable).
+
+pub mod factor;
+pub mod kl;
+pub mod ve;
+
+pub use factor::Factor;
+pub use kl::kl_divergence;
+pub use ve::exact_marginals;

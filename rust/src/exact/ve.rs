@@ -1,0 +1,234 @@
+//! Variable elimination over an [`Mrf`].
+//!
+//! Computes exact single-vertex marginals. Elimination order is min-degree
+//! greedy, which keeps the treewidth manageable on the 10x10 grid the
+//! paper's Fig 5 uses (and anything of comparable size).
+
+use anyhow::{bail, Result};
+
+use super::factor::Factor;
+use crate::graph::Mrf;
+
+/// Convert the MRF into its factor list (unary + one per undirected edge).
+fn factors_of(mrf: &Mrf) -> Result<Vec<Factor>> {
+    let a_max = mrf.max_arity;
+    let mut factors = Vec::new();
+    for v in 0..mrf.live_vertices {
+        let av = mrf.arity_of(v);
+        let table: Vec<f64> = (0..av).map(|x| mrf.log_unary_at(v, x) as f64).collect();
+        factors.push(Factor::new(vec![v], vec![av], table)?);
+    }
+    for e in (0..mrf.live_edges).step_by(2) {
+        let (u, v) = (mrf.src[e] as usize, mrf.dst[e] as usize);
+        let (au, av) = (mrf.arity_of(u), mrf.arity_of(v));
+        // Factor scope must be sorted; log_pair of edge e is [u_state,
+        // v_state], so transpose if u > v.
+        let (lo, hi, transpose) = if u < v { (u, v, false) } else { (v, u, true) };
+        let (clo, chi) = (mrf.arity_of(lo), mrf.arity_of(hi));
+        let mut table = vec![0.0f64; clo * chi];
+        for x in 0..clo {
+            for y in 0..chi {
+                let val = if transpose {
+                    mrf.log_pair_at(e, y, x)
+                } else {
+                    mrf.log_pair_at(e, x, y)
+                };
+                table[x * chi + y] = val as f64;
+            }
+        }
+        let _ = (au, av, a_max);
+        factors.push(Factor::new(vec![lo, hi], vec![clo, chi], table)?);
+    }
+    Ok(factors)
+}
+
+/// Greedy min-degree elimination order over the *interaction graph*,
+/// excluding `keep`.
+fn elimination_order(mrf: &Mrf, keep: usize) -> Vec<usize> {
+    let n = mrf.live_vertices;
+    // adjacency sets of the interaction graph (fill-in edges get added)
+    let mut adj: Vec<std::collections::BTreeSet<usize>> =
+        vec![std::collections::BTreeSet::new(); n];
+    for e in (0..mrf.live_edges).step_by(2) {
+        let (u, v) = (mrf.src[e] as usize, mrf.dst[e] as usize);
+        adj[u].insert(v);
+        adj[v].insert(u);
+    }
+    let mut eliminated = vec![false; n];
+    let mut order = Vec::with_capacity(n.saturating_sub(1));
+    for _ in 0..n.saturating_sub(1) {
+        // pick non-eliminated, non-keep vertex of min degree
+        let mut best: Option<(usize, usize)> = None; // (degree, vertex)
+        for v in 0..n {
+            if eliminated[v] || v == keep {
+                continue;
+            }
+            let d = adj[v].iter().filter(|&&u| !eliminated[u]).count();
+            if best.map_or(true, |(bd, _)| d < bd) {
+                best = Some((d, v));
+            }
+        }
+        let Some((_, v)) = best else { break };
+        // connect v's live neighbours (fill-in)
+        let nbrs: Vec<usize> = adj[v].iter().copied().filter(|&u| !eliminated[u]).collect();
+        for i in 0..nbrs.len() {
+            for j in i + 1..nbrs.len() {
+                adj[nbrs[i]].insert(nbrs[j]);
+                adj[nbrs[j]].insert(nbrs[i]);
+            }
+        }
+        eliminated[v] = true;
+        order.push(v);
+    }
+    order
+}
+
+/// Exact marginal of a single vertex, probabilities of length arity(v).
+pub fn marginal_of(mrf: &Mrf, vertex: usize) -> Result<Vec<f64>> {
+    if vertex >= mrf.live_vertices {
+        bail!("vertex {vertex} out of range");
+    }
+    let mut factors = factors_of(mrf)?;
+    for v in elimination_order(mrf, vertex) {
+        // multiply all factors containing v, marginalize v out
+        let (with_v, rest): (Vec<Factor>, Vec<Factor>) =
+            factors.into_iter().partition(|f| f.vars.contains(&v));
+        let mut prod: Option<Factor> = None;
+        for f in with_v {
+            prod = Some(match prod {
+                None => f,
+                Some(p) => p.product(&f),
+            });
+        }
+        factors = rest;
+        if let Some(p) = prod {
+            factors.push(p.marginalize(v));
+        }
+    }
+    // remaining factors involve only `vertex` (and scalars)
+    let mut result = Factor::scalar(0.0);
+    for f in &factors {
+        result = result.product(f);
+    }
+    if result.vars != vec![vertex] {
+        bail!("elimination left unexpected scope {:?}", result.vars);
+    }
+    Ok(result.probabilities())
+}
+
+/// Exact marginals for all live vertices, `[live_V][arity(v)]`.
+///
+/// Runs one elimination per vertex — fine for Fig 5-scale graphs; the
+/// harness parallelizes over vertices.
+pub fn exact_marginals(mrf: &Mrf) -> Result<Vec<Vec<f64>>> {
+    let idx: Vec<usize> = (0..mrf.live_vertices).collect();
+    let threads = crate::util::parallel::default_threads();
+    let out = crate::util::parallel::par_map(&idx, threads, |_, &v| marginal_of(mrf, v));
+    out.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{chain, ising};
+    use crate::graph::MrfBuilder;
+    use crate::util::Rng;
+
+    /// Brute-force joint enumeration for tiny graphs.
+    fn brute_marginals(mrf: &Mrf) -> Vec<Vec<f64>> {
+        let n = mrf.live_vertices;
+        let card: Vec<usize> = (0..n).map(|v| mrf.arity_of(v)).collect();
+        let total: usize = card.iter().product();
+        let mut logp = vec![0.0f64; total];
+        let mut assign = vec![0usize; n];
+        for (idx, lp) in logp.iter_mut().enumerate() {
+            let mut rem = idx;
+            for v in (0..n).rev() {
+                assign[v] = rem % card[v];
+                rem /= card[v];
+            }
+            let mut s = 0.0;
+            for v in 0..n {
+                s += mrf.log_unary_at(v, assign[v]) as f64;
+            }
+            for e in (0..mrf.live_edges).step_by(2) {
+                let (u, v) = (mrf.src[e] as usize, mrf.dst[e] as usize);
+                s += mrf.log_pair_at(e, assign[u], assign[v]) as f64;
+            }
+            *lp = s;
+        }
+        let mx = logp.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = logp.iter().map(|&l| (l - mx).exp()).sum();
+        let mut out: Vec<Vec<f64>> = (0..n).map(|v| vec![0.0; card[v]]).collect();
+        for (idx, &lp) in logp.iter().enumerate() {
+            let p = (lp - mx).exp() / z;
+            let mut rem = idx;
+            for v in (0..n).rev() {
+                let x = rem % card[v];
+                rem /= card[v];
+                out[v][x] += p;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_brute_force_on_small_ising() {
+        let mut rng = Rng::new(21);
+        let g = ising::generate("i", 3, 2.0, &mut rng).unwrap();
+        let ve = exact_marginals(&g).unwrap();
+        let bf = brute_marginals(&g);
+        for v in 0..g.live_vertices {
+            for x in 0..2 {
+                assert!(
+                    (ve[v][x] - bf[v][x]).abs() < 1e-9,
+                    "v{v} x{x}: {} vs {}",
+                    ve[v][x],
+                    bf[v][x]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_mixed_arity() {
+        let mut b = MrfBuilder::new("t", 4);
+        let mut rng = Rng::new(5);
+        let v0 = b.add_vertex(&[0.1, -0.4]);
+        let v1 = b.add_vertex(&[0.3, 0.0, -0.2]);
+        let v2 = b.add_vertex(&[0.0, 0.2, -0.1, 0.4]);
+        let t01: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+        let t12: Vec<f32> = (0..12).map(|_| rng.normal() as f32).collect();
+        let t02: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        b.add_edge(v0, v1, &t01);
+        b.add_edge(v1, v2, &t12);
+        b.add_edge(v0, v2, &t02);
+        let g = b.build(None).unwrap();
+        let ve = exact_marginals(&g).unwrap();
+        let bf = brute_marginals(&g);
+        for v in 0..3 {
+            for x in 0..g.arity_of(v) {
+                assert!((ve[v][x] - bf[v][x]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_marginals_sum_to_one() {
+        let mut rng = Rng::new(6);
+        let g = chain::generate("c", 30, 10.0, &mut rng).unwrap();
+        let ve = exact_marginals(&g).unwrap();
+        for row in &ve {
+            assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grid_5x5_tractable() {
+        let mut rng = Rng::new(7);
+        let g = ising::generate("i", 5, 2.5, &mut rng).unwrap();
+        let m = marginal_of(&g, 12).unwrap();
+        assert_eq!(m.len(), 2);
+        assert!((m[0] + m[1] - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,236 @@
+//! Incremental MRF construction, then freezing into envelope layout.
+
+use anyhow::{bail, Context, Result};
+
+use super::{padded_row, Mrf};
+use crate::runtime::manifest::GraphClass;
+use crate::NEG;
+
+/// Builds an [`Mrf`] vertex-by-vertex / edge-by-edge, then pads it into a
+/// graph-class envelope (either an explicit [`GraphClass`] or a tight
+/// envelope derived from the instance itself).
+pub struct MrfBuilder {
+    class_name: String,
+    max_arity: usize,
+    arity: Vec<usize>,
+    unary: Vec<Vec<f32>>, // log-space, length = arity[v]
+    edges: Vec<(usize, usize, Vec<f32>)>, // (u, v, row-major [au*av] log table)
+}
+
+impl MrfBuilder {
+    pub fn new(class_name: impl Into<String>, max_arity: usize) -> Self {
+        MrfBuilder {
+            class_name: class_name.into(),
+            max_arity,
+            arity: Vec::new(),
+            unary: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    /// Add a vertex with log unary potentials; arity = `log_psi.len()`.
+    /// Returns the vertex id.
+    pub fn add_vertex(&mut self, log_psi: &[f32]) -> usize {
+        assert!(
+            !log_psi.is_empty() && log_psi.len() <= self.max_arity,
+            "vertex arity {} out of range 1..={}",
+            log_psi.len(),
+            self.max_arity
+        );
+        self.arity.push(log_psi.len());
+        self.unary.push(log_psi.to_vec());
+        self.arity.len() - 1
+    }
+
+    /// Add an undirected edge `{u, v}` with a row-major `[arity(u) *
+    /// arity(v)]` log potential table psi(x_u, x_v).
+    pub fn add_edge(&mut self, u: usize, v: usize, log_psi: &[f32]) {
+        assert!(u < self.arity.len() && v < self.arity.len(), "edge endpoint out of range");
+        assert_ne!(u, v, "self-loops are not pairwise-MRF edges");
+        assert_eq!(
+            log_psi.len(),
+            self.arity[u] * self.arity[v],
+            "pairwise table shape mismatch"
+        );
+        self.edges.push((u, v, log_psi.to_vec()));
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.arity.len()
+    }
+
+    pub fn num_undirected_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Freeze into envelope layout. With `class = None` the envelope is
+    /// tight: V = vertices, M = 2 * edges, D = max in-degree.
+    pub fn build(self, class: Option<&GraphClass>) -> Result<Mrf> {
+        let live_v = self.arity.len();
+        let live_m = 2 * self.edges.len();
+        if live_v == 0 {
+            bail!("empty graph");
+        }
+
+        let mut in_deg = vec![0usize; live_v];
+        for &(u, v, _) in &self.edges {
+            in_deg[u] += 1;
+            in_deg[v] += 1;
+        }
+        let tight_d = in_deg.iter().copied().max().unwrap_or(0).max(1);
+        let tight_a = self.arity.iter().copied().max().unwrap_or(1);
+
+        let (env_v, env_m, env_a, env_d, name) = match class {
+            Some(c) => (
+                c.num_vertices,
+                c.num_edges,
+                c.arity,
+                c.max_in_degree,
+                c.name.clone(),
+            ),
+            None => (live_v, live_m, self.max_arity, tight_d, self.class_name.clone()),
+        };
+        if live_v > env_v {
+            bail!("{live_v} vertices exceed envelope V={env_v} of {name}");
+        }
+        if live_m > env_m {
+            bail!("{live_m} directed edges exceed envelope M={env_m} of {name}");
+        }
+        if tight_a > env_a {
+            bail!("arity {tight_a} exceeds envelope A={env_a} of {name}");
+        }
+        if tight_d > env_d {
+            bail!("in-degree {tight_d} exceeds envelope D={env_d} of {name}");
+        }
+
+        let mut arity = vec![0i32; env_v];
+        let mut log_unary = vec![NEG; env_v * env_a];
+        for v in 0..live_v {
+            arity[v] = self.arity[v] as i32;
+            log_unary[v * env_a..v * env_a + env_a]
+                .copy_from_slice(&padded_row(&self.unary[v], env_a));
+        }
+
+        let mut src = vec![0i32; env_m];
+        let mut dst = vec![0i32; env_m];
+        let mut rev = vec![0i32; env_m];
+        let mut log_pair = vec![NEG; env_m * env_a * env_a];
+        for (i, (u, v, table)) in self.edges.iter().enumerate() {
+            let (e_uv, e_vu) = (2 * i, 2 * i + 1);
+            src[e_uv] = *u as i32;
+            dst[e_uv] = *v as i32;
+            rev[e_uv] = e_vu as i32;
+            src[e_vu] = *v as i32;
+            dst[e_vu] = *u as i32;
+            rev[e_vu] = e_uv as i32;
+            let (au, av) = (self.arity[*u], self.arity[*v]);
+            for a in 0..au {
+                for b in 0..av {
+                    let val = table[a * av + b];
+                    log_pair[e_uv * env_a * env_a + a * env_a + b] = val;
+                    log_pair[e_vu * env_a * env_a + b * env_a + a] = val;
+                }
+            }
+        }
+
+        let mut in_edges = vec![-1i32; env_v * env_d];
+        let mut fill = vec![0usize; env_v];
+        for e in 0..live_m {
+            let t = dst[e] as usize;
+            in_edges[t * env_d + fill[t]] = e as i32;
+            fill[t] += 1;
+        }
+
+        let mrf = Mrf {
+            instance_id: super::next_instance_id(),
+            class_name: name,
+            num_vertices: env_v,
+            num_edges: env_m,
+            live_vertices: live_v,
+            live_edges: live_m,
+            max_arity: env_a,
+            max_in_degree: env_d,
+            arity,
+            src,
+            dst,
+            rev,
+            in_edges,
+            log_unary,
+            log_pair,
+        };
+        super::validate::validate(&mrf).context("builder produced invalid MRF")?;
+        Ok(mrf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tight_envelope_shapes() {
+        let mut b = MrfBuilder::new("t", 3);
+        let a = b.add_vertex(&[0.0, 0.1]);
+        let c = b.add_vertex(&[0.0, 0.1, 0.2]);
+        b.add_edge(a, c, &[0.0; 6]);
+        let g = b.build(None).unwrap();
+        assert_eq!(g.num_vertices, 2);
+        assert_eq!(g.num_edges, 2);
+        assert_eq!(g.live_edges, 2);
+        assert_eq!(g.max_in_degree, 1);
+        assert_eq!(g.arity_of(0), 2);
+        assert_eq!(g.arity_of(1), 3);
+    }
+
+    #[test]
+    fn explicit_envelope_padding() {
+        let class = GraphClass {
+            name: "env".into(),
+            num_vertices: 8,
+            num_edges: 10,
+            arity: 4,
+            max_in_degree: 3,
+            buckets: vec![128],
+        };
+        let mut b = MrfBuilder::new("env", 4);
+        let a = b.add_vertex(&[0.0, 0.1]);
+        let c = b.add_vertex(&[0.2, 0.3]);
+        b.add_edge(a, c, &[1.0, 2.0, 3.0, 4.0]);
+        let g = b.build(Some(&class)).unwrap();
+        assert_eq!(g.num_vertices, 8);
+        assert_eq!(g.num_edges, 10);
+        assert_eq!(g.live_vertices, 2);
+        assert_eq!(g.live_edges, 2);
+        // padding vertices have arity 0 and NEG unary rows
+        assert_eq!(g.arity[5], 0);
+        assert!(g.log_unary[5 * 4] <= crate::NEG);
+        // pairwise stored transposed on the reverse edge
+        assert_eq!(g.log_pair_at(0, 0, 1), 2.0);
+        assert_eq!(g.log_pair_at(1, 1, 0), 2.0);
+    }
+
+    #[test]
+    fn envelope_overflow_rejected() {
+        let class = GraphClass {
+            name: "tiny".into(),
+            num_vertices: 1,
+            num_edges: 0,
+            arity: 2,
+            max_in_degree: 1,
+            buckets: vec![128],
+        };
+        let mut b = MrfBuilder::new("tiny", 2);
+        let a = b.add_vertex(&[0.0, 0.0]);
+        let c = b.add_vertex(&[0.0, 0.0]);
+        b.add_edge(a, c, &[0.0; 4]);
+        assert!(b.build(Some(&class)).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn self_loop_panics() {
+        let mut b = MrfBuilder::new("t", 2);
+        let a = b.add_vertex(&[0.0, 0.0]);
+        b.add_edge(a, a, &[0.0; 4]);
+    }
+}

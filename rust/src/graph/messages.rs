@@ -1,0 +1,92 @@
+//! Message state: the `[M, A]` log-message matrix owned by the coordinator.
+
+use super::Mrf;
+
+/// Log-space messages, one row per directed edge. Padded arity lanes are
+/// stored as exactly `0.0` (the convention the L2 model preserves).
+#[derive(Clone, Debug)]
+pub struct Messages {
+    data: Vec<f32>,
+    arity: usize,
+}
+
+impl Messages {
+    /// Uniform initialization: `m_e(x) = 1/arity(dst[e])` on valid lanes.
+    pub fn uniform(mrf: &Mrf) -> Self {
+        let a = mrf.max_arity;
+        let mut data = vec![0.0f32; mrf.num_edges * a];
+        for e in 0..mrf.live_edges {
+            let av = mrf.arity_of(mrf.dst[e] as usize);
+            let val = -(av as f32).ln();
+            for x in 0..av {
+                data[e * a + x] = val;
+            }
+        }
+        Messages { data, arity: a }
+    }
+
+    #[inline]
+    pub fn row(&self, e: usize) -> &[f32] {
+        &self.data[e * self.arity..(e + 1) * self.arity]
+    }
+
+    #[inline]
+    pub fn set_row(&mut self, e: usize, row: &[f32]) {
+        self.data[e * self.arity..(e + 1) * self.arity].copy_from_slice(row);
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.data.len() / self.arity
+    }
+
+    /// Max-norm distance between a row and a candidate row.
+    #[inline]
+    pub fn row_distance(&self, e: usize, candidate: &[f32]) -> f32 {
+        self.row(e)
+            .iter()
+            .zip(candidate)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::datasets;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_rows_normalized() {
+        let mut rng = Rng::new(1);
+        let g = datasets::ising::generate("ising10", 10, 2.5, &mut rng).unwrap();
+        let m = g.uniform_messages();
+        for e in 0..g.live_edges {
+            let av = g.arity_of(g.dst[e] as usize);
+            let total: f32 = m.row(e)[..av].iter().map(|&l| l.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-5);
+            assert!(m.row(e)[av..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn set_row_roundtrip() {
+        let mut rng = Rng::new(2);
+        let g = datasets::chain::generate("c", 10, 10.0, &mut rng).unwrap();
+        let mut m = g.uniform_messages();
+        let new = vec![-0.5, -1.2];
+        m.set_row(3, &new);
+        assert_eq!(m.row(3), &new[..]);
+        assert!((m.row_distance(3, &[-0.5, -1.2])).abs() < 1e-9);
+        assert!(m.row_distance(3, &[0.0, 0.0]) > 1.0);
+    }
+}

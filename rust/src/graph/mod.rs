@@ -1,0 +1,218 @@
+//! Pairwise Markov Random Field representation in the *envelope* tensor
+//! layout shared with the AOT artifacts.
+//!
+//! A graph class (see `python/compile/configs.py` and
+//! [`crate::runtime::manifest`]) fixes a static shape envelope
+//! `(V, M, A, D)`; a concrete [`Mrf`] instance lives inside that envelope
+//! with `live_vertices <= V` real vertices and `live_edges <= M` real
+//! directed edges. Padding conventions (must match the L2 model):
+//!
+//! * `in_edges` slots and `frontier` slots are padded with `-1`;
+//! * `log_unary` / `log_pair` padded lanes hold [`crate::NEG`];
+//! * message rows store `0.0` in padded arity lanes;
+//! * padded *edge* rows (`live_edges..M`) are inert: never in any
+//!   frontier, never referenced by `in_edges`.
+
+pub mod builder;
+pub mod messages;
+pub mod validate;
+
+pub use builder::MrfBuilder;
+pub use messages::Messages;
+
+use crate::NEG;
+
+/// A pairwise MRF in envelope layout. Directed edges come in reverse
+/// pairs: edge `e` is `src[e] -> dst[e]` and `rev[e]` is its opposite.
+#[derive(Clone, Debug)]
+pub struct Mrf {
+    /// Unique id for this instance's tensor payload (used by engines to
+    /// cache per-graph device literals). Clones share the id — their
+    /// payloads are identical.
+    pub instance_id: u64,
+    /// Graph-class (envelope) name; must match an artifact config.
+    pub class_name: String,
+    /// Envelope vertex count V.
+    pub num_vertices: usize,
+    /// Envelope directed-edge count M.
+    pub num_edges: usize,
+    /// Real vertices (<= V).
+    pub live_vertices: usize,
+    /// Real directed edges (<= M).
+    pub live_edges: usize,
+    /// Max arity A (states per variable).
+    pub max_arity: usize,
+    /// Max in-degree D.
+    pub max_in_degree: usize,
+    /// Valid state count per vertex `[V]` (0 for padding vertices).
+    pub arity: Vec<i32>,
+    /// Source vertex per directed edge `[M]`.
+    pub src: Vec<i32>,
+    /// Destination vertex per directed edge `[M]`.
+    pub dst: Vec<i32>,
+    /// Reverse directed-edge id per edge `[M]`.
+    pub rev: Vec<i32>,
+    /// Incoming directed-edge ids per vertex, row-major `[V * D]`, pad -1.
+    pub in_edges: Vec<i32>,
+    /// Log unary potentials `[V * A]`, pad lanes NEG.
+    pub log_unary: Vec<f32>,
+    /// Log pairwise potentials `[M * A * A]` laid out `[src_state,
+    /// dst_state]` per directed edge, pad entries NEG.
+    pub log_pair: Vec<f32>,
+}
+
+impl Mrf {
+    /// Arity of vertex `v`.
+    #[inline]
+    pub fn arity_of(&self, v: usize) -> usize {
+        self.arity[v] as usize
+    }
+
+    /// Incoming directed-edge ids of vertex `v` (live entries only).
+    #[inline]
+    pub fn incoming(&self, v: usize) -> impl Iterator<Item = usize> + '_ {
+        let d = self.max_in_degree;
+        self.in_edges[v * d..(v + 1) * d]
+            .iter()
+            .take_while(|&&e| e >= 0)
+            .map(|&e| e as usize)
+    }
+
+    /// Outgoing directed-edge ids of vertex `v` (reverse of incoming).
+    #[inline]
+    pub fn outgoing(&self, v: usize) -> impl Iterator<Item = usize> + '_ {
+        self.incoming(v).map(move |e| self.rev[e] as usize)
+    }
+
+    /// Log pairwise entry psi_e(a, b) for edge e (a = src state, b = dst).
+    #[inline]
+    pub fn log_pair_at(&self, e: usize, a: usize, b: usize) -> f32 {
+        let aa = self.max_arity;
+        self.log_pair[e * aa * aa + a * aa + b]
+    }
+
+    /// Log unary entry psi_v(x).
+    #[inline]
+    pub fn log_unary_at(&self, v: usize, x: usize) -> f32 {
+        self.log_unary[v * self.max_arity + x]
+    }
+
+    /// Edges whose candidate value depends on edge `e`'s message: the
+    /// out-edges of `dst[e]` *except* `rev[e]`.
+    ///
+    /// Edge `o = (v -> w)` reads `belief_v - m_{w->v}`; `belief_v` sums all
+    /// messages into `v`, so `o` depends on `m_e` iff `src[o] == dst[e]`,
+    /// unless `o == rev[e]`, whose cavity subtracts `m_e` back out. This is
+    /// the dependency structure RBP/RS use for residual maintenance.
+    #[inline]
+    pub fn dependents(&self, e: usize) -> impl Iterator<Item = usize> + '_ {
+        let v = self.dst[e] as usize;
+        let r = self.rev[e] as usize;
+        self.outgoing(v).filter(move |&o| o != r)
+    }
+
+    /// Number of undirected edges among the live edges.
+    pub fn live_undirected(&self) -> usize {
+        self.live_edges / 2
+    }
+
+    /// Rough memory footprint of the tensor payload in bytes.
+    pub fn payload_bytes(&self) -> usize {
+        self.log_unary.len() * 4
+            + self.log_pair.len() * 4
+            + (self.src.len() + self.dst.len() + self.rev.len() + self.in_edges.len()) * 4
+    }
+
+    /// Initial (uniform) messages for this graph.
+    pub fn uniform_messages(&self) -> Messages {
+        Messages::uniform(self)
+    }
+
+    /// True if `e` is a live (non-padding) edge.
+    #[inline]
+    pub fn is_live_edge(&self, e: usize) -> bool {
+        e < self.live_edges
+    }
+}
+
+/// Fill a padded unary row: valid lanes from `vals`, the rest NEG.
+pub(crate) fn padded_row(vals: &[f32], width: usize) -> Vec<f32> {
+    let mut row = vec![NEG; width];
+    row[..vals.len()].copy_from_slice(vals);
+    row
+}
+
+/// Allocate a fresh instance id (process-unique).
+pub(crate) fn next_instance_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::util::Rng;
+
+    fn small() -> Mrf {
+        // 3-chain via the builder: 0 - 1 - 2, arity 2.
+        let mut b = MrfBuilder::new("test", 2);
+        for _ in 0..3 {
+            b.add_vertex(&[0.1, 0.2]);
+        }
+        b.add_edge(0, 1, &[0.3, -0.3, -0.3, 0.3]);
+        b.add_edge(1, 2, &[0.5, -0.5, -0.5, 0.5]);
+        b.build(None).unwrap()
+    }
+
+    #[test]
+    fn incoming_outgoing_are_reverses() {
+        let g = small();
+        for v in 0..g.live_vertices {
+            for e in g.incoming(v) {
+                assert_eq!(g.dst[e] as usize, v);
+            }
+            for e in g.outgoing(v) {
+                assert_eq!(g.src[e] as usize, v);
+            }
+        }
+    }
+
+    #[test]
+    fn rev_is_involution() {
+        let g = small();
+        for e in 0..g.live_edges {
+            let r = g.rev[e] as usize;
+            assert_eq!(g.rev[r] as usize, e);
+            assert_eq!(g.src[e], g.dst[r]);
+            assert_eq!(g.dst[e], g.src[r]);
+        }
+    }
+
+    #[test]
+    fn dependents_exclude_reverse() {
+        let mut rng = Rng::new(3);
+        let g = datasets::ising::generate("ising10", 10, 2.5, &mut rng).unwrap();
+        for e in 0..g.live_edges {
+            let r = g.rev[e] as usize;
+            for d in g.dependents(e) {
+                assert_ne!(d, r);
+                assert_eq!(g.src[d] as usize, g.dst[e] as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn log_pair_symmetry_between_directions() {
+        let g = small();
+        for e in 0..g.live_edges {
+            let r = g.rev[e] as usize;
+            for a in 0..2 {
+                for b in 0..2 {
+                    assert_eq!(g.log_pair_at(e, a, b), g.log_pair_at(r, b, a));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Structural validation of envelope-layout MRFs.
+//!
+//! Every generator and the builder funnel through [`validate`]; the
+//! invariants here are exactly the assumptions the L2 model (and therefore
+//! the AOT artifacts) make about their inputs.
+
+use anyhow::{bail, Result};
+
+use super::Mrf;
+
+/// Check all structural invariants; returns Err with a description of the
+/// first violation.
+pub fn validate(mrf: &Mrf) -> Result<()> {
+    let (v, m, a, d) = (
+        mrf.num_vertices,
+        mrf.num_edges,
+        mrf.max_arity,
+        mrf.max_in_degree,
+    );
+    if mrf.live_vertices > v || mrf.live_edges > m {
+        bail!("live counts exceed envelope");
+    }
+    if mrf.live_edges % 2 != 0 {
+        bail!("directed edges must come in reverse pairs");
+    }
+    if mrf.arity.len() != v
+        || mrf.src.len() != m
+        || mrf.dst.len() != m
+        || mrf.rev.len() != m
+        || mrf.in_edges.len() != v * d
+        || mrf.log_unary.len() != v * a
+        || mrf.log_pair.len() != m * a * a
+    {
+        bail!("tensor shape mismatch with envelope");
+    }
+
+    for vert in 0..v {
+        let ar = mrf.arity[vert];
+        if ar < 0 || ar as usize > a {
+            bail!("vertex {vert} arity {ar} out of range");
+        }
+        if vert < mrf.live_vertices && ar == 0 {
+            bail!("live vertex {vert} has arity 0");
+        }
+        if vert >= mrf.live_vertices && ar != 0 {
+            bail!("padding vertex {vert} has non-zero arity");
+        }
+    }
+
+    for e in 0..mrf.live_edges {
+        let (s, t, r) = (mrf.src[e], mrf.dst[e], mrf.rev[e]);
+        if s < 0 || t < 0 || s as usize >= mrf.live_vertices || t as usize >= mrf.live_vertices {
+            bail!("edge {e} endpoints ({s},{t}) out of live range");
+        }
+        if s == t {
+            bail!("edge {e} is a self-loop");
+        }
+        if r < 0 || r as usize >= mrf.live_edges {
+            bail!("edge {e} reverse {r} out of live range");
+        }
+        let r = r as usize;
+        if mrf.rev[r] as usize != e || mrf.src[r] != t || mrf.dst[r] != s {
+            bail!("edge {e}: reverse {r} is not its involution partner");
+        }
+    }
+
+    // in_edges: -1-padded suffix per row; live entries must be live edges
+    // into exactly that vertex, and each live edge appears exactly once.
+    let mut seen = vec![false; mrf.live_edges];
+    for vert in 0..v {
+        let row = &mrf.in_edges[vert * d..(vert + 1) * d];
+        let mut ended = false;
+        for &entry in row {
+            if entry < 0 {
+                ended = true;
+                continue;
+            }
+            if ended {
+                bail!("vertex {vert}: in_edges has live entry after -1 padding");
+            }
+            let e = entry as usize;
+            if e >= mrf.live_edges {
+                bail!("vertex {vert}: in_edge {e} is a padding edge");
+            }
+            if mrf.dst[e] as usize != vert {
+                bail!("vertex {vert}: in_edge {e} targets {}", mrf.dst[e]);
+            }
+            if seen[e] {
+                bail!("edge {e} appears twice in in_edges");
+            }
+            seen[e] = true;
+        }
+    }
+    if let Some(missing) = seen.iter().position(|&s| !s) {
+        bail!("live edge {missing} missing from in_edges");
+    }
+
+    // Potentials: live lanes finite, padded lanes <= NEG-ish.
+    for vert in 0..mrf.live_vertices {
+        let ar = mrf.arity[vert] as usize;
+        for x in 0..a {
+            let val = mrf.log_unary_at(vert, x);
+            if x < ar {
+                if !val.is_finite() {
+                    bail!("vertex {vert} unary lane {x} not finite: {val}");
+                }
+            } else if val > crate::NEG {
+                bail!("vertex {vert} unary pad lane {x} not NEG: {val}");
+            }
+        }
+    }
+    for e in 0..mrf.live_edges {
+        let (au, av) = (
+            mrf.arity[mrf.src[e] as usize] as usize,
+            mrf.arity[mrf.dst[e] as usize] as usize,
+        );
+        for x in 0..a {
+            for y in 0..a {
+                let val = mrf.log_pair_at(e, x, y);
+                if x < au && y < av {
+                    if !val.is_finite() {
+                        bail!("edge {e} pair ({x},{y}) not finite: {val}");
+                    }
+                } else if val > crate::NEG {
+                    bail!("edge {e} pair pad ({x},{y}) not NEG: {val}");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::datasets;
+    use crate::util::Rng;
+
+    #[test]
+    fn generators_validate() {
+        let mut rng = Rng::new(5);
+        for g in [
+            datasets::ising::generate("i", 6, 2.0, &mut rng).unwrap(),
+            datasets::chain::generate("c", 50, 10.0, &mut rng).unwrap(),
+            datasets::protein::generate("p", &Default::default(), &mut rng).unwrap(),
+        ] {
+            super::validate(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut rng = Rng::new(6);
+        let mut g = datasets::ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let ok = super::validate(&g).is_ok();
+        assert!(ok);
+        g.rev[0] = 5; // break involution
+        assert!(super::validate(&g).is_err());
+    }
+
+    #[test]
+    fn unary_padding_violation_detected() {
+        let mut rng = Rng::new(7);
+        let mut g = datasets::ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        // ising arity is 2; lane 2 doesn't exist when A=2, so corrupt a
+        // pad *vertex* lane instead if the envelope has padding; when it
+        // doesn't (tight), corrupt in_edges ordering.
+        g.in_edges[1] = -1; // make a hole before a live entry (deg>=2 at v0)
+        assert!(super::validate(&g).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Figures 2, 4 and 5: cumulative convergence curves and correctness.
+
+use anyhow::Result;
+
+use super::report::{write_json, Table};
+use super::{
+    chain_len, gpu_campaign, ising_large, ising_small, make_dataset, srbp_params,
+};
+use crate::config::HarnessConfig;
+use crate::coordinator::campaign::Campaign;
+use crate::coordinator::TimeBasis;
+use crate::datasets::DatasetSpec;
+use crate::engine::MessageEngine;
+use crate::exact;
+use crate::sched::{srbp, Lbp, ResidualSplash, Rnbp, Scheduler};
+use crate::util::json::Json;
+
+/// Print one cumulative-convergence panel and collect its JSON.
+fn panel(
+    cfg: &HarnessConfig,
+    panel_name: &str,
+    spec: DatasetSpec,
+    policies: Vec<(String, Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>)>,
+) -> Result<Json> {
+    let ds = make_dataset(cfg, spec)?;
+    let mut campaigns: Vec<Campaign> = Vec::new();
+    for (label, mk) in policies {
+        campaigns.push(gpu_campaign(cfg, label, &ds, mk)?);
+    }
+
+    let mut table = Table::new(&["policy", "conv%", "median sim time", "mean iters"]);
+    for c in &campaigns {
+        let median = {
+            let curve = c.cumulative_curve(TimeBasis::Simulated);
+            // time at which half the dataset has converged (if reached)
+            curve
+                .iter()
+                .find(|&&(_, f)| f >= 0.5)
+                .map(|&(t, _)| format!("{:.2}ms", t * 1e3))
+                .unwrap_or_else(|| "-".to_string())
+        };
+        table.row(&[
+            c.label.clone(),
+            format!("{:.0}%", c.converged_fraction() * 100.0),
+            median,
+            format!("{:.0}", c.mean_iterations()),
+        ]);
+    }
+    table.print(&format!("{panel_name} — {}", spec.label()));
+
+    Ok(Json::obj()
+        .str("panel", panel_name)
+        .str("dataset", spec.label())
+        .field(
+            "campaigns",
+            Json::arr(campaigns.iter().map(|c| c.to_json())),
+        )
+        .build())
+}
+
+/// Fig 2: GPU RS cumulative convergence vs LBP, sweeping parallelism p.
+/// Lower p ⇒ more convergence, slower — the paper's tradeoff claim.
+pub fn fig2(cfg: &HarnessConfig) -> Result<()> {
+    let mk_policies = || -> Vec<(String, Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>)> {
+        let mut v: Vec<(String, Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>)> = vec![(
+            "lbp".to_string(),
+            Box::new(|_| Box::new(Lbp::new())),
+        )];
+        for &denom in &[16usize, 64, 256] {
+            let p = 1.0 / denom as f64;
+            v.push((
+                format!("rs p=1/{denom}"),
+                Box::new(move |_| Box::new(ResidualSplash::new(p, 2))),
+            ));
+        }
+        v
+    };
+    let panels = vec![
+        ("fig2a", DatasetSpec::Ising { n: ising_small(cfg), c: 2.5 }),
+        ("fig2b", DatasetSpec::Ising { n: ising_large(cfg), c: 2.5 }),
+        ("fig2c", DatasetSpec::Chain { n: chain_len(cfg), c: 10.0 }),
+    ];
+    let mut out = Vec::new();
+    for (name, spec) in panels {
+        out.push(panel(cfg, name, spec, mk_policies())?);
+    }
+    write_json(
+        &cfg.out_dir,
+        "fig2_rs_convergence",
+        &Json::obj()
+            .field("full_scale", Json::Bool(cfg.full))
+            .field("panels", Json::arr(out))
+            .build(),
+    )
+}
+
+/// Fig 4: GPU RnBP cumulative convergence vs LBP on 5 Ising, 1 chain and
+/// 1 protein dataset.
+pub fn fig4(cfg: &HarnessConfig) -> Result<()> {
+    let synthetic = |low: f64| -> (String, Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>) {
+        (
+            format!("rnbp lowp={low}"),
+            Box::new(move |s| Box::new(Rnbp::synthetic(low, s))),
+        )
+    };
+    let lbp = || -> (String, Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>) {
+        ("lbp".to_string(), Box::new(|_| Box::new(Lbp::new())))
+    };
+    let standard = || vec![lbp(), synthetic(0.7), synthetic(0.4), synthetic(0.1)];
+
+    let small = ising_small(cfg);
+    let panels: Vec<(&str, DatasetSpec, Vec<(String, Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>)>)> = vec![
+        ("fig4a", DatasetSpec::Ising { n: small, c: 2.0 }, standard()),
+        ("fig4b", DatasetSpec::Ising { n: small, c: 2.5 }, standard()),
+        ("fig4c", DatasetSpec::Ising { n: small, c: 3.0 }, standard()),
+        ("fig4d", DatasetSpec::Ising { n: ising_large(cfg), c: 2.5 }, standard()),
+        ("fig4e", DatasetSpec::Chain { n: chain_len(cfg), c: 10.0 }, standard()),
+        (
+            "fig4f",
+            DatasetSpec::Protein,
+            vec![
+                lbp(),
+                // paper Fig 4f: LowP = 0.4, HighP = 0.9
+                (
+                    "rnbp lowp=0.4 highp=0.9".to_string(),
+                    Box::new(|s| Box::new(Rnbp::new(0.4, 0.9, s))),
+                ),
+            ],
+        ),
+    ];
+    let mut out = Vec::new();
+    for (name, spec, policies) in panels {
+        // The paper gives protein graphs 3 minutes vs 90 s elsewhere —
+        // scale the budget by the same factor (A=81 updates are heavy).
+        let mut pcfg = cfg.clone();
+        if name == "fig4f" {
+            // A=81 updates are ~100x heavier per message on this box
+            // (padded-arity waste, see EXPERIMENTS.md §Perf); budget
+            // accordingly, like the paper's 3-minute protein allowance.
+            pcfg.timeout *= 6.0;
+            pcfg.srbp_timeout *= 6.0;
+        }
+        out.push(panel(&pcfg, name, spec, policies)?);
+    }
+    write_json(
+        &cfg.out_dir,
+        "fig4_rnbp_convergence",
+        &Json::obj()
+            .field("full_scale", Json::Bool(cfg.full))
+            .field("panels", Json::arr(out))
+            .build(),
+    )
+}
+
+/// Fig 5: correctness — KL divergence of converged marginals vs exact
+/// (variable elimination) on Ising 10x10, C = 2, for SRBP and RnBP.
+pub fn fig5(cfg: &HarnessConfig) -> Result<()> {
+    let spec = DatasetSpec::Ising { n: 10, c: 2.0 };
+    let ds = make_dataset(cfg, spec)?;
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(&["graph", "KL(exact||RnBP)", "KL(exact||SRBP)"]);
+    for (i, g) in ds.graphs.iter().enumerate() {
+        let exact_marginals = exact::exact_marginals(g)?;
+
+        let mut params = super::gpu_params(cfg);
+        params.want_marginals = true;
+        let mut engine = super::make_engine(cfg)?;
+        let mut rnbp = Rnbp::synthetic(0.7, cfg.seed ^ i as u64);
+        let r1 = crate::coordinator::run(g, engine.as_mut(), &mut rnbp, &params)?;
+
+        let mut sparams = srbp_params(cfg);
+        sparams.want_marginals = true;
+        let r2 = srbp::run_serial(g, &sparams)?;
+
+        let kl_of = |r: &crate::coordinator::RunResult| -> Option<f64> {
+            r.marginals.as_ref().map(|m| {
+                exact::kl::mean_marginal_kl(&exact_marginals, m, g.max_arity)
+            })
+        };
+        let (kl1, kl2) = (kl_of(&r1), kl_of(&r2));
+        table.row(&[
+            format!("{i}"),
+            kl1.map(|k| format!("{k:.2e}")).unwrap_or("-".into()),
+            kl2.map(|k| format!("{k:.2e}")).unwrap_or("-".into()),
+        ]);
+        rows.push(
+            Json::obj()
+                .num("graph", i as f64)
+                .field("kl_rnbp", kl1.map(Json::num).unwrap_or(Json::Null))
+                .field("kl_srbp", kl2.map(Json::num).unwrap_or(Json::Null))
+                .field("rnbp_converged", Json::Bool(r1.converged()))
+                .field("srbp_converged", Json::Bool(r2.converged()))
+                .build(),
+        );
+    }
+    table.print("Fig 5 — KL vs exact marginals (Ising 10x10, C=2)");
+    write_json(
+        &cfg.out_dir,
+        "fig5_correctness",
+        &Json::obj().field("rows", Json::arr(rows)).build(),
+    )
+}
+
+#[allow(unused)]
+fn _engine_assert(e: &dyn MessageEngine) {}

@@ -1,0 +1,173 @@
+//! Evaluation harness: regenerates every table and figure of the paper
+//! (DESIGN.md §5 maps experiment ids to modules and binaries).
+//!
+//! Each experiment prints the paper-shaped rows/series to stdout and
+//! writes a JSON report under `results/` for plotting. Experiments run at
+//! scaled (▽) sizes by default; `--full` switches to paper sizes.
+
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+use anyhow::Result;
+
+use crate::config::{EngineKind, HarnessConfig};
+use crate::coordinator::campaign::{run_campaign, Campaign};
+use crate::coordinator::{run, RunParams};
+use crate::datasets::{Dataset, DatasetSpec};
+use crate::engine::{native::NativeEngine, pjrt::PjrtEngine, MessageEngine};
+use crate::sched::{srbp, Scheduler};
+
+/// Ising grid side used for the paper's 100x100 experiments.
+pub fn ising_small(cfg: &HarnessConfig) -> usize {
+    if cfg.full {
+        100
+    } else {
+        40
+    }
+}
+
+/// Ising grid side used for the paper's 200x200 experiments.
+pub fn ising_large(cfg: &HarnessConfig) -> usize {
+    if cfg.full {
+        200
+    } else {
+        60
+    }
+}
+
+/// Chain length used for the paper's 100000-vertex chain.
+pub fn chain_len(cfg: &HarnessConfig) -> usize {
+    if cfg.full {
+        100_000
+    } else {
+        20_000
+    }
+}
+
+/// RunParams for the many-core (coordinator) runs.
+pub fn gpu_params(cfg: &HarnessConfig) -> RunParams {
+    RunParams {
+        eps: cfg.eps,
+        max_iterations: cfg.max_iterations,
+        timeout: cfg.timeout,
+        sim_timeout: cfg.sim_timeout,
+        ..Default::default()
+    }
+}
+
+/// RunParams for the serial baseline (the paper's 90 s budget, scaled).
+pub fn srbp_params(cfg: &HarnessConfig) -> RunParams {
+    RunParams {
+        eps: cfg.eps,
+        max_iterations: usize::MAX / 4,
+        timeout: cfg.srbp_timeout,
+        cost_model: None,
+        ..Default::default()
+    }
+}
+
+/// Build the configured engine.
+pub fn make_engine(cfg: &HarnessConfig) -> Result<Box<dyn MessageEngine>> {
+    let opts = cfg.update_options();
+    Ok(match cfg.engine {
+        EngineKind::Pjrt => Box::new(PjrtEngine::from_default_dir_with(opts)?),
+        EngineKind::Native => Box::new(NativeEngine::with_options(opts)),
+    })
+}
+
+/// Generate a dataset family for a spec under this config.
+pub fn make_dataset(cfg: &HarnessConfig, spec: DatasetSpec) -> Result<Dataset> {
+    spec.generate_many(cfg.graphs, cfg.seed)
+}
+
+/// Run one scheduling policy over a dataset (parallel across graphs).
+/// `mk_sched` receives a per-run seed.
+///
+/// With `threads == 1` (the norm on this single-core testbed) the engine
+/// — PJRT client, compiled executables, graph literals — is created once
+/// and reused across the whole campaign; per-run engines would recompile
+/// every bucket executable per graph and hold all of them alive at once.
+pub fn gpu_campaign(
+    cfg: &HarnessConfig,
+    label: impl Into<String>,
+    ds: &Dataset,
+    mk_sched: impl Fn(u64) -> Box<dyn Scheduler> + Sync,
+) -> Result<Campaign> {
+    let params = gpu_params(cfg);
+    let seed_of = |i: usize| cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9);
+    if cfg.threads <= 1 {
+        let mut engine = make_engine(cfg)?;
+        let label = label.into();
+        let mut outcomes = Vec::with_capacity(ds.graphs.len());
+        for (i, g) in ds.graphs.iter().enumerate() {
+            let mut sched = mk_sched(seed_of(i));
+            outcomes.push(run(g, engine.as_mut(), sched.as_mut(), &params)?);
+        }
+        return Ok(Campaign { label, outcomes });
+    }
+    run_campaign(label, &ds.graphs, cfg.threads, |i, g| {
+        let mut engine = make_engine(cfg)?;
+        let mut sched = mk_sched(seed_of(i));
+        run(g, engine.as_mut(), sched.as_mut(), &params)
+    })
+}
+
+/// Run the serial RBP baseline over a dataset.
+pub fn srbp_campaign(cfg: &HarnessConfig, ds: &Dataset) -> Result<Campaign> {
+    let params = srbp_params(cfg);
+    run_campaign("srbp", &ds.graphs, cfg.threads, |_, g| {
+        srbp::run_serial(g, &params)
+    })
+}
+
+/// Dispatch an experiment by id (`table1..table4`, `fig2`, `fig4`, `fig5`).
+pub fn run_experiment(cfg: &HarnessConfig, id: &str) -> Result<()> {
+    match id {
+        "table1" => tables::table1(cfg),
+        "table2" => tables::table2(cfg),
+        "table3" => tables::table3(cfg),
+        "table4" => tables::table4(cfg),
+        "fig2" => figures::fig2(cfg),
+        "fig4" => figures::fig4(cfg),
+        "fig5" => figures::fig5(cfg),
+        "all" => {
+            for id in ["table4", "fig5", "fig2", "table1", "table2", "fig4", "table3"] {
+                run_experiment(cfg, id)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (want table1|table2|table3|table4|fig2|fig4|fig5|all)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_switching() {
+        let mut cfg = HarnessConfig::default();
+        assert_eq!(ising_small(&cfg), 40);
+        assert_eq!(chain_len(&cfg), 20_000);
+        cfg.full = true;
+        assert_eq!(ising_small(&cfg), 100);
+        assert_eq!(ising_large(&cfg), 200);
+        assert_eq!(chain_len(&cfg), 100_000);
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        let cfg = HarnessConfig::default();
+        assert!(run_experiment(&cfg, "table9").is_err());
+    }
+
+    #[test]
+    fn srbp_params_have_no_cost_model() {
+        let cfg = HarnessConfig::default();
+        assert!(srbp_params(&cfg).cost_model.is_none());
+        assert!(gpu_params(&cfg).cost_model.is_some());
+    }
+}

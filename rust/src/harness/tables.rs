@@ -1,0 +1,214 @@
+//! Tables I–IV: speedups over the serial baseline, and the algorithm
+//! summary.
+//!
+//! Per the paper: "we compare with the fastest setting in our test runs
+//! that converges on all or most of the graphs" and "provide a
+//! conservative lower-bound on speedup based on how long we gave SRBP to
+//! run" (90 s there; `--srbp-timeout` here). Speedups compare the
+//! modeled many-core time of the GPU scheduler against measured serial
+//! wallclock (see `perfmodel` for why), and the JSON reports carry both
+//! clocks so the claim can be audited.
+
+use anyhow::Result;
+
+use super::report::{write_json, Table};
+use super::{chain_len, gpu_campaign, ising_large, ising_small, make_dataset, srbp_campaign};
+use crate::config::HarnessConfig;
+use crate::coordinator::campaign::Speedup;
+use crate::coordinator::TimeBasis;
+use crate::datasets::DatasetSpec;
+use crate::sched::{self, Rbp, ResidualSplash, Rnbp, Scheduler};
+use crate::util::json::Json;
+
+struct SpeedupRow {
+    dataset: String,
+    settings: String,
+    speedup: Speedup,
+    converged: f64,
+    sim_time: f64,
+    srbp_time: f64,
+}
+
+fn speedup_table(
+    cfg: &HarnessConfig,
+    title: &str,
+    name: &str,
+    rows_spec: Vec<(DatasetSpec, String, Box<dyn Fn(u64) -> Box<dyn Scheduler> + Sync>)>,
+) -> Result<()> {
+    let mut rows = Vec::new();
+    for (spec, settings, mk) in rows_spec {
+        let ds = make_dataset(cfg, spec)?;
+        let ours = gpu_campaign(cfg, settings.clone(), &ds, mk)?;
+        let base = srbp_campaign(cfg, &ds)?;
+        rows.push(SpeedupRow {
+            dataset: spec.label(),
+            settings,
+            speedup: Speedup::compute(&ours, &base, TimeBasis::Simulated),
+            converged: ours.converged_fraction(),
+            sim_time: ours.mean_time_lower_bound(TimeBasis::Simulated),
+            srbp_time: base.mean_time_lower_bound(TimeBasis::Wallclock),
+        });
+    }
+
+    let mut table = Table::new(&[
+        "Dataset",
+        "Settings",
+        "SRBP Speedup",
+        "conv%",
+        "sim time",
+        "srbp time",
+    ]);
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        table.row(&[
+            r.dataset.clone(),
+            r.settings.clone(),
+            r.speedup.render(),
+            format!("{:.0}%", r.converged * 100.0),
+            format!("{:.2}ms", r.sim_time * 1e3),
+            format!("{:.2}s", r.srbp_time),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .str("dataset", r.dataset.clone())
+                .str("settings", r.settings.clone())
+                .num("speedup", r.speedup.factor)
+                .field("lower_bound", Json::Bool(r.speedup.lower_bound))
+                .num("converged_fraction", r.converged)
+                .num("sim_time_s", r.sim_time)
+                .num("srbp_wall_s", r.srbp_time)
+                .build(),
+        );
+    }
+    table.print(title);
+    let json = Json::obj()
+        .str("experiment", name)
+        .field("full_scale", Json::Bool(cfg.full))
+        .num("graphs_per_dataset", cfg.graphs as f64)
+        .field("rows", Json::arr(json_rows))
+        .build();
+    write_json(&cfg.out_dir, name, &json)
+}
+
+/// Table I: GPU RBP speedups over SRBP.
+pub fn table1(cfg: &HarnessConfig) -> Result<()> {
+    let (small, large, chain) = (ising_small(cfg), ising_large(cfg), chain_len(cfg));
+    speedup_table(
+        cfg,
+        "Table I — GPU RBP speedups over SRBP",
+        "table1_rbp",
+        vec![
+            (
+                DatasetSpec::Ising { n: small, c: 2.5 },
+                "p = 1/256".into(),
+                Box::new(|_| Box::new(Rbp::new(1.0 / 256.0))),
+            ),
+            (
+                DatasetSpec::Ising { n: large, c: 2.5 },
+                "p = 1/256".into(),
+                Box::new(|_| Box::new(Rbp::new(1.0 / 256.0))),
+            ),
+            (
+                DatasetSpec::Chain { n: chain, c: 10.0 },
+                "p = 1/16".into(),
+                Box::new(|_| Box::new(Rbp::new(1.0 / 16.0))),
+            ),
+        ],
+    )
+}
+
+/// Table II: GPU RS speedups over SRBP (h = 2 locked, as in the paper).
+pub fn table2(cfg: &HarnessConfig) -> Result<()> {
+    let (small, large, chain) = (ising_small(cfg), ising_large(cfg), chain_len(cfg));
+    speedup_table(
+        cfg,
+        "Table II — GPU RS speedups over SRBP",
+        "table2_rs",
+        vec![
+            (
+                DatasetSpec::Ising { n: small, c: 2.5 },
+                "p = 1/128".into(),
+                Box::new(|_| Box::new(ResidualSplash::new(1.0 / 128.0, 2))),
+            ),
+            (
+                DatasetSpec::Ising { n: large, c: 2.5 },
+                "p = 1/256".into(),
+                Box::new(|_| Box::new(ResidualSplash::new(1.0 / 256.0, 2))),
+            ),
+            (
+                DatasetSpec::Chain { n: chain, c: 10.0 },
+                "p = 1/16".into(),
+                Box::new(|_| Box::new(ResidualSplash::new(1.0 / 16.0, 2))),
+            ),
+        ],
+    )
+}
+
+/// Table III: GPU RnBP speedups over SRBP.
+pub fn table3(cfg: &HarnessConfig) -> Result<()> {
+    let (small, large, chain) = (ising_small(cfg), ising_large(cfg), chain_len(cfg));
+    speedup_table(
+        cfg,
+        "Table III — GPU RnBP speedups over SRBP",
+        "table3_rnbp",
+        vec![
+            (
+                DatasetSpec::Ising { n: small, c: 2.0 },
+                "LowP = 0.7".into(),
+                Box::new(|s| Box::new(Rnbp::synthetic(0.7, s))),
+            ),
+            (
+                DatasetSpec::Ising { n: small, c: 2.5 },
+                "LowP = 0.7".into(),
+                Box::new(|s| Box::new(Rnbp::synthetic(0.7, s))),
+            ),
+            (
+                DatasetSpec::Ising { n: small, c: 3.0 },
+                "LowP = 0.1".into(),
+                Box::new(|s| Box::new(Rnbp::synthetic(0.1, s))),
+            ),
+            (
+                DatasetSpec::Ising { n: large, c: 2.5 },
+                "LowP = 0.7".into(),
+                Box::new(|s| Box::new(Rnbp::synthetic(0.7, s))),
+            ),
+            (
+                DatasetSpec::Chain { n: chain, c: 10.0 },
+                "LowP = 0.7".into(),
+                Box::new(|s| Box::new(Rnbp::synthetic(0.7, s))),
+            ),
+        ],
+    )
+}
+
+/// Table IV: algorithms explored (generated from the registry).
+pub fn table4(cfg: &HarnessConfig) -> Result<()> {
+    let mut table = Table::new(&["Algorithm", "Frontier Selection", "Many-Core"]);
+    let mut rows = Vec::new();
+    for info in sched::algorithm_registry() {
+        let name = if info.contribution {
+            format!("**{}**", info.algorithm)
+        } else {
+            info.algorithm.to_string()
+        };
+        table.row(&[
+            name,
+            info.frontier_selection.to_string(),
+            if info.many_core { "yes" } else { "no" }.to_string(),
+        ]);
+        rows.push(
+            Json::obj()
+                .str("algorithm", info.algorithm)
+                .str("frontier_selection", info.frontier_selection)
+                .field("many_core", Json::Bool(info.many_core))
+                .field("contribution", Json::Bool(info.contribution))
+                .build(),
+        );
+    }
+    table.print("Table IV — algorithms explored (bold = contribution)");
+    write_json(
+        &cfg.out_dir,
+        "table4_algorithms",
+        &Json::obj().field("rows", Json::arr(rows)).build(),
+    )
+}

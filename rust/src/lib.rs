@@ -1,0 +1,43 @@
+//! # bp-sched — Message Scheduling for Performant, Many-Core Belief Propagation
+//!
+//! A full reproduction of Van der Merwe, Joseph & Gopalakrishnan (2019):
+//! frontier-based belief propagation with pluggable message schedulings
+//! (LBP, Residual BP, Residual Splash, Randomized BP, serial RBP), executed
+//! through AOT-compiled XLA programs (JAX/Pallas at build time, PJRT at
+//! run time — Python is never on the iteration path).
+//!
+//! Layering (see DESIGN.md):
+//! * [`sched`] + [`coordinator`] — Layer 3, the paper's contribution:
+//!   frontier selection, residual state, dynamic-parallelism control.
+//! * [`runtime`] + [`engine`] — the bridge: bucketed HLO executables on
+//!   the PJRT CPU client, plus a native oracle engine.
+//! * `python/compile` — Layers 2/1 (JAX model + Pallas kernel), compiled
+//!   once by `make artifacts`.
+//!
+//! Substrates built from scratch for this reproduction: pairwise-MRF
+//! representation ([`graph`]), dataset generators ([`datasets`]),
+//! an addressable priority queue ([`collections`]), exact inference via
+//! variable elimination ([`exact`]), a V100 analytic cost model
+//! ([`perfmodel`]), and the evaluation harness ([`harness`]).
+
+pub mod collections;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod engine;
+pub mod exact;
+pub mod graph;
+pub mod harness;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+
+pub use graph::Mrf;
+
+/// Stand-in for -inf that survives f32 arithmetic without NaNs.
+/// Must match `python/compile/configs.py::NEG`.
+pub const NEG: f32 = -1.0e30;
+
+/// Default convergence threshold (paper: "iterated until eps convergence").
+pub const DEFAULT_EPS: f32 = 1e-4;

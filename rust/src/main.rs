@@ -1,0 +1,291 @@
+//! `bp-sched` — launcher for the belief-propagation scheduling system.
+//!
+//! ```text
+//! bp-sched run --dataset ising --n 40 --c 2.5 --scheduler rnbp ...
+//! bp-sched table table1|table2|table3|table4 [--full] [--graphs N]
+//! bp-sched figure fig2|fig4|fig5 [--full]
+//! bp-sched generate --dataset ising --n 10 --c 2 --out g.bpmrf
+//! bp-sched inspect artifacts|graph <path>
+//! bp-sched bench-all          # every table and figure
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use bp_sched::config::{EngineKind, HarnessConfig};
+use bp_sched::coordinator::run;
+use bp_sched::datasets::{serialize, DatasetSpec};
+use bp_sched::engine::{native::NativeEngine, pjrt::PjrtEngine, MessageEngine};
+use bp_sched::harness;
+use bp_sched::runtime::{default_artifacts_dir, Manifest};
+use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::stats::fmt_duration;
+use bp_sched::util::Rng;
+
+fn main() {
+    if let Err(e) = dispatch() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+bp-sched — message scheduling for many-core belief propagation
+
+USAGE:
+  bp-sched run    [flags]               run one BP instance
+  bp-sched table  <table1|table2|table3|table4> [flags]
+  bp-sched figure <fig2|fig4|fig5> [flags]
+  bp-sched bench-all [flags]            every table and figure
+  bp-sched generate [flags] --out FILE  sample a graph to a .bpmrf file
+  bp-sched inspect <artifacts|graph PATH>
+
+COMMON FLAGS (also settable via --config file.toml):
+  --full                paper-scale datasets (ising100/200, chain100k)
+  --graphs N            graphs per dataset (default 5)
+  --seed N              root RNG seed
+  --eps X               convergence threshold (default 1e-4)
+  --timeout S           wallclock budget per run
+  --srbp-timeout S      serial-baseline budget (paper: 90)
+  --engine pjrt|native  update engine (default pjrt)
+  --out-dir DIR         JSON report directory (default results/)
+
+RUN FLAGS:
+  --dataset ising|chain|protein   (default ising)
+  --n N --c X                     dataset shape/difficulty
+  --scheduler lbp|rbp|rs|rnbp|srbp
+  --p X --lowp X --highp X --h N  scheduler parameters (X may be 1/16)
+";
+
+fn dispatch() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args[0].clone();
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "table" | "figure" => cmd_experiment(rest),
+        "bench-all" => {
+            let mut cfg = HarnessConfig::default();
+            cfg.apply_args(rest)?;
+            harness::run_experiment(&cfg, "all")
+        }
+        "generate" => cmd_generate(rest),
+        "inspect" => cmd_inspect(rest),
+        other => bail!("unknown command {other:?}; try --help"),
+    }
+}
+
+/// Flags not consumed by HarnessConfig, for `run`/`generate`.
+struct RunFlags {
+    dataset: String,
+    n: usize,
+    c: f64,
+    scheduler: String,
+    p: f64,
+    lowp: f64,
+    highp: f64,
+    h: usize,
+    out: Option<String>,
+}
+
+impl Default for RunFlags {
+    fn default() -> Self {
+        RunFlags {
+            dataset: "ising".into(),
+            n: 40,
+            c: 2.5,
+            scheduler: "rnbp".into(),
+            p: 1.0 / 16.0,
+            lowp: 0.7,
+            highp: 1.0,
+            h: 2,
+            out: None,
+        }
+    }
+}
+
+/// Split run-specific flags out of the arg list, returning leftovers for
+/// HarnessConfig.
+fn split_flags(args: &[String], flags: &mut RunFlags) -> Result<Vec<String>> {
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let take = |i: &mut usize| -> Result<String> {
+            *i += 1;
+            args.get(*i).cloned().context("flag needs a value")
+        };
+        match args[i].as_str() {
+            "--dataset" => flags.dataset = take(&mut i)?,
+            "--n" => flags.n = take(&mut i)?.parse()?,
+            "--c" => flags.c = take(&mut i)?.parse()?,
+            "--scheduler" => flags.scheduler = take(&mut i)?,
+            "--p" => flags.p = parse_ratio(&take(&mut i)?)?,
+            "--lowp" => flags.lowp = parse_ratio(&take(&mut i)?)?,
+            "--highp" => flags.highp = parse_ratio(&take(&mut i)?)?,
+            "--h" => flags.h = take(&mut i)?.parse()?,
+            "--out" => flags.out = Some(take(&mut i)?),
+            _ => rest.push(args[i].clone()),
+        }
+        i += 1;
+    }
+    Ok(rest)
+}
+
+/// Accept `0.25` or `1/4`.
+fn parse_ratio(s: &str) -> Result<f64> {
+    if let Some((a, b)) = s.split_once('/') {
+        Ok(a.trim().parse::<f64>()? / b.trim().parse::<f64>()?)
+    } else {
+        Ok(s.parse::<f64>()?)
+    }
+}
+
+fn spec_of(flags: &RunFlags) -> Result<DatasetSpec> {
+    Ok(match flags.dataset.as_str() {
+        "ising" => DatasetSpec::Ising { n: flags.n, c: flags.c },
+        "chain" => DatasetSpec::Chain { n: flags.n, c: flags.c },
+        "protein" => DatasetSpec::Protein,
+        other => bail!("unknown dataset {other:?}"),
+    })
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let mut flags = RunFlags::default();
+    let rest = split_flags(args, &mut flags)?;
+    let mut cfg = HarnessConfig::default();
+    cfg.apply_args(&rest)?;
+
+    let spec = spec_of(&flags)?;
+    let mut rng = Rng::new(cfg.seed);
+    let graph = spec.generate(&mut rng)?;
+    println!(
+        "dataset {} -> class {} (V={}, M={})",
+        spec.label(),
+        graph.class_name,
+        graph.live_vertices,
+        graph.live_edges
+    );
+
+    let params = harness::gpu_params(&cfg);
+    let result = if flags.scheduler == "srbp" {
+        srbp::run_serial(&graph, &harness::srbp_params(&cfg))?
+    } else {
+        let mut engine: Box<dyn MessageEngine> = match cfg.engine {
+            EngineKind::Pjrt => {
+                Box::new(PjrtEngine::from_default_dir_with(cfg.update_options())?)
+            }
+            EngineKind::Native => Box::new(NativeEngine::with_options(cfg.update_options())),
+        };
+        let mut sched: Box<dyn Scheduler> = match flags.scheduler.as_str() {
+            "lbp" => Box::new(Lbp::new()),
+            "rbp" => Box::new(Rbp::new(flags.p)),
+            "rs" => Box::new(ResidualSplash::new(flags.p, flags.h)),
+            "rnbp" => Box::new(Rnbp::new(flags.lowp, flags.highp, cfg.seed)),
+            other => bail!("unknown scheduler {other:?}"),
+        };
+        run(&graph, engine.as_mut(), sched.as_mut(), &params)?
+    };
+
+    println!(
+        "{} [{}]: {:?} after {} iterations",
+        result.scheduler, result.engine, result.stop, result.iterations
+    );
+    println!(
+        "  wallclock {}   simulated(v100) {}",
+        fmt_duration(result.wall),
+        result
+            .sim_wall
+            .map(fmt_duration)
+            .unwrap_or_else(|| "n/a (serial, measured)".into())
+    );
+    println!(
+        "  {} message updates, {} engine calls, final residual {:.2e}",
+        result.message_updates, result.engine_calls, result.final_residual
+    );
+    println!("  wallclock phases:");
+    for (phase, secs, frac) in result.phases.breakdown() {
+        println!("    {phase:<9} {:>10}  {:>5.1}%", fmt_duration(secs), frac * 100.0);
+    }
+    if result.sim_wall.is_some() {
+        println!("  simulated-device phases:");
+        for (phase, secs, frac) in result.sim_phases.breakdown() {
+            println!("    {phase:<9} {:>10}  {:>5.1}%", fmt_duration(secs), frac * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let mut cfg = HarnessConfig::default();
+    let positional = cfg.apply_args(args)?;
+    let Some(id) = positional.first() else {
+        bail!("expected an experiment id (table1..table4, fig2, fig4, fig5)");
+    };
+    harness::run_experiment(&cfg, id)
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let mut flags = RunFlags::default();
+    let rest = split_flags(args, &mut flags)?;
+    let mut cfg = HarnessConfig::default();
+    cfg.apply_args(&rest)?;
+    let Some(out) = flags.out.clone() else {
+        bail!("generate needs --out FILE");
+    };
+    let spec = spec_of(&flags)?;
+    let mut rng = Rng::new(cfg.seed);
+    let graph = spec.generate(&mut rng)?;
+    serialize::save(&graph, &out)?;
+    println!(
+        "wrote {} ({} vertices, {} directed edges, class {})",
+        out, graph.live_vertices, graph.live_edges, graph.class_name
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("artifacts") => {
+            let dir = default_artifacts_dir();
+            let manifest = Manifest::load(&dir)?;
+            println!(
+                "artifacts at {} (version {}, fingerprint {})",
+                dir.display(),
+                manifest.version,
+                manifest.fingerprint
+            );
+            for (name, class) in &manifest.classes {
+                println!(
+                    "  {name:<10} V={:<7} M={:<7} A={:<3} D={:<2} buckets={:?}",
+                    class.num_vertices,
+                    class.num_edges,
+                    class.arity,
+                    class.max_in_degree,
+                    class.buckets
+                );
+            }
+            Ok(())
+        }
+        Some("graph") => {
+            let path = args.get(1).context("inspect graph needs a path")?;
+            let g = serialize::load(path)?;
+            println!(
+                "{}: class {} V={}/{} M={}/{} A={} D={} payload {:.1} MiB",
+                path,
+                g.class_name,
+                g.live_vertices,
+                g.num_vertices,
+                g.live_edges,
+                g.num_edges,
+                g.max_arity,
+                g.max_in_degree,
+                g.payload_bytes() as f64 / (1024.0 * 1024.0)
+            );
+            Ok(())
+        }
+        _ => bail!("inspect what? (artifacts | graph PATH)"),
+    }
+}

@@ -1,0 +1,155 @@
+//! Artifact loading, compilation caching, and execution.
+//!
+//! One [`Runtime`] owns a PJRT CPU client plus a cache of compiled
+//! executables keyed by (graph class, bucket). Executables are compiled
+//! lazily on first use: a scheduler that only ever uses the full-frontier
+//! bucket (LBP) never pays for the small ones.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{GraphClass, Manifest};
+use crate::engine::Semiring;
+
+/// Compiled-program cache over a PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    candidates: HashMap<(String, usize, &'static str), xla::PjRtLoadedExecutable>,
+    marginals: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create over the artifacts directory (must contain manifest.txt).
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            candidates: HashMap::new(),
+            marginals: HashMap::new(),
+        })
+    }
+
+    /// Create over the default artifacts directory.
+    pub fn from_default_dir() -> Result<Runtime> {
+        Self::new(super::default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The PJRT client (engines create device buffers through it).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn class(&self, name: &str) -> Result<&GraphClass> {
+        self.manifest.class(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Compiled candidate program for (class, bucket, semiring).
+    /// Compiles on miss.
+    pub fn candidate_executable(
+        &mut self,
+        class_name: &str,
+        bucket: usize,
+        semiring: Semiring,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (class_name.to_string(), bucket, semiring.tag());
+        if !self.candidates.contains_key(&key) {
+            let class = self.manifest.class(class_name)?;
+            anyhow::ensure!(
+                class.buckets.contains(&bucket),
+                "bucket {bucket} not in ladder of {class_name}"
+            );
+            let path = class.candidate_path(&self.manifest.root, bucket, semiring.tag());
+            let exe = self.compile(&path)?;
+            self.candidates.insert(key.clone(), exe);
+        }
+        Ok(&self.candidates[&key])
+    }
+
+    /// Compiled marginals program for a class. Compiles on miss.
+    pub fn marginals_executable(
+        &mut self,
+        class_name: &str,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.marginals.contains_key(class_name) {
+            let class = self.manifest.class(class_name)?;
+            let path = class.marginals_path(&self.manifest.root);
+            let exe = self.compile(&path)?;
+            self.marginals.insert(class_name.to_string(), exe);
+        }
+        Ok(&self.marginals[class_name])
+    }
+
+    /// Pre-compile every bucket of a class (avoids first-use hiccups in
+    /// timed benchmark sections).
+    pub fn warmup(&mut self, class_name: &str) -> Result<()> {
+        let buckets = self.manifest.class(class_name)?.buckets.clone();
+        for b in buckets {
+            self.candidate_executable(class_name, b, Semiring::SumProduct)?;
+        }
+        self.marginals_executable(class_name)?;
+        Ok(())
+    }
+
+    /// Number of compiled executables held (test/metrics hook).
+    pub fn compiled_count(&self) -> usize {
+        self.candidates.len() + self.marginals.len()
+    }
+}
+
+/// Literal helpers shared by the PJRT engine.
+pub mod lit {
+    use anyhow::Result;
+
+    /// `[n]` f32 literal from a slice.
+    pub fn f32_1d(data: &[f32]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data))
+    }
+
+    /// `[rows, cols]` f32 literal from a row-major slice.
+    pub fn f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// `[d0, d1, d2]` f32 literal from a row-major slice.
+    pub fn f32_3d(data: &[f32], d0: usize, d1: usize, d2: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), d0 * d1 * d2);
+        Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64, d2 as i64])?)
+    }
+
+    /// `[n]` i32 literal.
+    pub fn i32_1d(data: &[i32]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data))
+    }
+
+    /// `[rows, cols]` i32 literal.
+    pub fn i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+}

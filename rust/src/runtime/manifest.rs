@@ -1,0 +1,259 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! Line-oriented `key=value` format (kept deliberately trivial — no JSON
+//! parser on the rust side):
+//!
+//! ```text
+//! version=1
+//! fingerprint=0123456789abcdef
+//! config name=ising10 V=100 M=360 A=2 D=4 buckets=256,384
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub const SUPPORTED_VERSION: u64 = 2;
+
+/// One graph-class envelope (mirror of python's GraphClassConfig).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GraphClass {
+    pub name: String,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub arity: usize,
+    pub max_in_degree: usize,
+    /// Frontier-capacity ladder, ascending; last entry >= num_edges.
+    pub buckets: Vec<usize>,
+}
+
+impl GraphClass {
+    /// Smallest bucket holding a frontier of `n` edges.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Path of the candidate-program artifact for a bucket and semiring
+    /// tag ("sp" = sum-product, "mp" = max-product).
+    pub fn candidate_path(&self, root: &Path, bucket: usize, tag: &str) -> PathBuf {
+        root.join(&self.name)
+            .join(format!("cand_{tag}_k{bucket}.hlo.txt"))
+    }
+
+    /// Path of the marginals-program artifact.
+    pub fn marginals_path(&self, root: &Path) -> PathBuf {
+        root.join(&self.name).join("marginals.hlo.txt")
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u64,
+    pub fingerprint: String,
+    pub classes: BTreeMap<String, GraphClass>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.txt`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let mut m = Self::parse(&text)?;
+        m.root = root;
+        Ok(m)
+    }
+
+    /// Parse manifest text (root left empty).
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut version = None;
+        let mut fingerprint = String::new();
+        let mut classes = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("version=") {
+                version = Some(rest.parse::<u64>().with_context(|| {
+                    format!("line {}: bad version {rest:?}", lineno + 1)
+                })?);
+            } else if let Some(rest) = line.strip_prefix("fingerprint=") {
+                fingerprint = rest.to_string();
+            } else if let Some(rest) = line.strip_prefix("config ") {
+                let cls = parse_config_line(rest)
+                    .with_context(|| format!("line {}: {line:?}", lineno + 1))?;
+                if classes.insert(cls.name.clone(), cls).is_some() {
+                    bail!("line {}: duplicate config", lineno + 1);
+                }
+            } else {
+                bail!("line {}: unrecognized {line:?}", lineno + 1);
+            }
+        }
+        let version = version.context("manifest missing version")?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} unsupported (want {SUPPORTED_VERSION})");
+        }
+        if classes.is_empty() {
+            bail!("manifest has no configs");
+        }
+        Ok(Manifest {
+            version,
+            fingerprint,
+            classes,
+            root: PathBuf::new(),
+        })
+    }
+
+    pub fn class(&self, name: &str) -> Result<&GraphClass> {
+        self.classes.get(name).with_context(|| {
+            format!(
+                "graph class {name:?} not in manifest (have: {})",
+                self.classes.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+fn parse_config_line(rest: &str) -> Result<GraphClass> {
+    let mut fields = BTreeMap::new();
+    for tok in rest.split_whitespace() {
+        let (k, v) = tok
+            .split_once('=')
+            .with_context(|| format!("token {tok:?} is not key=value"))?;
+        fields.insert(k.to_string(), v.to_string());
+    }
+    let get = |k: &str| -> Result<String> {
+        fields
+            .get(k)
+            .cloned()
+            .with_context(|| format!("config missing field {k}"))
+    };
+    let num = |k: &str| -> Result<usize> {
+        get(k)?.parse::<usize>().with_context(|| format!("bad {k}"))
+    };
+    let buckets: Vec<usize> = get("buckets")?
+        .split(',')
+        .map(|s| s.parse::<usize>().context("bad bucket"))
+        .collect::<Result<_>>()?;
+    if buckets.is_empty() {
+        bail!("empty bucket ladder");
+    }
+    if buckets.windows(2).any(|w| w[0] >= w[1]) {
+        bail!("bucket ladder not strictly ascending");
+    }
+    let cls = GraphClass {
+        name: get("name")?,
+        num_vertices: num("V")?,
+        num_edges: num("M")?,
+        arity: num("A")?,
+        max_in_degree: num("D")?,
+        buckets,
+    };
+    if cls.bucket_for(cls.num_edges).is_none() {
+        bail!("largest bucket smaller than M");
+    }
+    Ok(cls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version=2
+fingerprint=0123456789abcdef
+config name=ising10 V=100 M=360 A=2 D=4 buckets=256,384
+config name=chain20k V=20000 M=39998 A=2 D=2 buckets=256,1024,4096,16384,40064
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 2);
+        assert_eq!(m.classes.len(), 2);
+        let c = m.class("ising10").unwrap();
+        assert_eq!(c.num_vertices, 100);
+        assert_eq!(c.buckets, vec![256, 384]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.class("chain20k").unwrap();
+        assert_eq!(c.bucket_for(1), Some(256));
+        assert_eq!(c.bucket_for(256), Some(256));
+        assert_eq!(c.bucket_for(257), Some(1024));
+        assert_eq!(c.bucket_for(39998), Some(40064));
+        assert_eq!(c.bucket_for(40065), None);
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.class("ising10").unwrap();
+        let p = c.candidate_path(Path::new("artifacts"), 256, "sp");
+        assert_eq!(p.to_str().unwrap(), "artifacts/ising10/cand_sp_k256.hlo.txt");
+        let p = c.candidate_path(Path::new("artifacts"), 512, "mp");
+        assert_eq!(p.to_str().unwrap(), "artifacts/ising10/cand_mp_k512.hlo.txt");
+        let p = c.marginals_path(Path::new("artifacts"));
+        assert_eq!(p.to_str().unwrap(), "artifacts/ising10/marginals.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse("version=9\nconfig name=x V=1 M=0 A=1 D=1 buckets=128\n").is_err());
+        assert!(Manifest::parse("version=1\nconfig name=x V=1 M=0 A=1 D=1 buckets=128\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("version=2\nconfig name=x V=1 M=0 A=1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_buckets() {
+        assert!(Manifest::parse(
+            "version=2\nconfig name=x V=1 M=2 A=1 D=1 buckets=256,128\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_config() {
+        let text = "version=2\nconfig name=x V=1 M=2 A=1 D=1 buckets=128\nconfig name=x V=1 M=2 A=1 D=1 buckets=128\n";
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn unknown_class_error_lists_names() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.class("nope").unwrap_err().to_string();
+        assert!(err.contains("ising10"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain every DESIGN.md class.
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if root.join("manifest.txt").exists() {
+            let m = Manifest::load(&root).unwrap();
+            for name in [
+                "ising10", "ising40", "ising60", "ising100", "ising200",
+                "chain20k", "chain100k", "protein",
+            ] {
+                m.class(name).unwrap();
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//!
+//! This is the only module that touches the `xla` crate. The rest of the
+//! system sees [`crate::engine::MessageEngine`].
+
+pub mod artifacts;
+pub mod manifest;
+
+pub use artifacts::Runtime;
+pub use manifest::{GraphClass, Manifest};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$BP_SCHED_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("BP_SCHED_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,70 @@
+//! Loopy (Synchronous) Belief Propagation: the naive scheduling.
+//!
+//! Every live message is updated every iteration, in parallel, against the
+//! previous iteration's messages (paper §II-B). Full parallelism, zero
+//! selection overhead, work-inefficient, and only partially convergent on
+//! hard graphs — the baseline every figure compares against.
+
+use super::{SchedContext, Scheduler};
+
+/// See module docs.
+#[derive(Debug, Default)]
+pub struct Lbp {
+    frontier: Vec<i32>,
+}
+
+impl Lbp {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for Lbp {
+    fn name(&self) -> String {
+        "lbp".to_string()
+    }
+
+    fn kind(&self) -> crate::perfmodel::SelectKind {
+        crate::perfmodel::SelectKind::All
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Vec<Vec<i32>> {
+        if ctx.unconverged == 0 {
+            return vec![];
+        }
+        if self.frontier.len() != ctx.mrf.live_edges {
+            self.frontier = (0..ctx.mrf.live_edges as i32).collect();
+        }
+        vec![self.frontier.clone()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::ising;
+    use crate::sched::test_util::ctx_with;
+    use crate::util::Rng;
+
+    #[test]
+    fn selects_all_live_edges() {
+        let mut rng = Rng::new(1);
+        let g = ising::generate("i", 4, 2.0, &mut rng).unwrap();
+        let res = vec![1.0f32; g.num_edges];
+        let mut s = Lbp::new();
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        assert_eq!(waves.len(), 1);
+        assert_eq!(waves[0].len(), g.live_edges);
+        assert_eq!(waves[0][0], 0);
+        assert_eq!(*waves[0].last().unwrap(), g.live_edges as i32 - 1);
+    }
+
+    #[test]
+    fn empty_when_converged() {
+        let mut rng = Rng::new(2);
+        let g = ising::generate("i", 4, 2.0, &mut rng).unwrap();
+        let res = vec![0.0f32; g.num_edges];
+        let mut s = Lbp::new();
+        assert!(s.select(&ctx_with(&g, &res, 1e-4)).is_empty());
+    }
+}

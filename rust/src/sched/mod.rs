@@ -1,0 +1,153 @@
+//! Message schedulings — the paper's Table IV, one module per row.
+//!
+//! | algorithm | frontier selection       | module    |
+//! |-----------|--------------------------|-----------|
+//! | GPU LBP   | all messages             | [`lbp`]   |
+//! | serial RBP| priority queue           | [`srbp`]  |
+//! | GPU RBP   | sort-and-select top-k    | [`rbp`]   |
+//! | GPU RS    | sort-and-select + splash | [`rs`]    |
+//! | GPU RnBP  | randomized (contribution)| [`rnbp`]  |
+//!
+//! A [`Scheduler`] sees the coordinator's residual state and returns the
+//! next frontier as an ordered list of *waves*: each wave is updated
+//! bulk-parallel; successive waves are sequential (Residual Splash uses
+//! this to express its BFS-ordered updates; every other scheduling
+//! returns a single wave).
+
+pub mod lbp;
+pub mod rbp;
+pub mod rnbp;
+pub mod rs;
+pub mod srbp;
+
+pub use lbp::Lbp;
+pub use rbp::Rbp;
+pub use rnbp::Rnbp;
+pub use rs::ResidualSplash;
+pub use srbp::SerialRbp;
+
+use crate::graph::Mrf;
+
+/// Read-only view of coordinator state handed to schedulers.
+pub struct SchedContext<'a> {
+    pub mrf: &'a Mrf,
+    /// Residual per directed edge `[M]` (entries >= live_edges are 0).
+    pub residuals: &'a [f32],
+    /// Convergence threshold.
+    pub eps: f32,
+    /// Iteration number (0-based).
+    pub iteration: usize,
+    /// Count of live edges with residual >= eps, after the last refresh.
+    pub unconverged: usize,
+    /// Same count one iteration earlier (== unconverged on iteration 0).
+    pub prev_unconverged: usize,
+}
+
+impl SchedContext<'_> {
+    /// The paper's runtime-convergence indicator:
+    /// `EdgeRatio = NewEdgeCount / OldEdgeCount` (1.0 when undefined).
+    pub fn edge_ratio(&self) -> f64 {
+        if self.prev_unconverged == 0 {
+            1.0
+        } else {
+            self.unconverged as f64 / self.prev_unconverged as f64
+        }
+    }
+}
+
+/// A message-scheduling policy.
+pub trait Scheduler {
+    /// Label with parameters, e.g. `rnbp(lowp=0.4,highp=0.9)`.
+    fn name(&self) -> String;
+
+    /// Select the next frontier. Empty result = nothing worth updating
+    /// (the coordinator then declares convergence or stalls out).
+    fn select(&mut self, ctx: &SchedContext) -> Vec<Vec<i32>>;
+
+    /// Frontier-selection mechanism, for the simulated many-core timing
+    /// model (see [`crate::perfmodel`]).
+    fn kind(&self) -> crate::perfmodel::SelectKind;
+}
+
+/// Registry row for Table IV.
+pub struct AlgorithmInfo {
+    pub algorithm: &'static str,
+    pub frontier_selection: &'static str,
+    pub many_core: bool,
+    pub contribution: bool,
+}
+
+/// The paper's Table IV content, generated from the implementations.
+pub fn algorithm_registry() -> Vec<AlgorithmInfo> {
+    vec![
+        AlgorithmInfo {
+            algorithm: "GPU LBP",
+            frontier_selection: "All Messages",
+            many_core: true,
+            contribution: false,
+        },
+        AlgorithmInfo {
+            algorithm: "Serial RBP/RS",
+            frontier_selection: "Priority Queue",
+            many_core: false,
+            contribution: false,
+        },
+        AlgorithmInfo {
+            algorithm: "GPU RBP/RS",
+            frontier_selection: "Sort-and-Select",
+            many_core: true,
+            contribution: false,
+        },
+        AlgorithmInfo {
+            algorithm: "GPU RnBP",
+            frontier_selection: "Randomized",
+            many_core: true,
+            contribution: true,
+        },
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+
+    pub fn ctx_with<'a>(mrf: &'a Mrf, residuals: &'a [f32], eps: f32) -> SchedContext<'a> {
+        let unconverged = residuals[..mrf.live_edges]
+            .iter()
+            .filter(|&&r| r >= eps)
+            .count();
+        SchedContext {
+            mrf,
+            residuals,
+            eps,
+            iteration: 0,
+            unconverged,
+            prev_unconverged: unconverged,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::ising;
+    use crate::util::Rng;
+
+    #[test]
+    fn edge_ratio_defined() {
+        let mut rng = Rng::new(1);
+        let g = ising::generate("i", 4, 2.0, &mut rng).unwrap();
+        let res = vec![1.0f32; g.num_edges];
+        let ctx = test_util::ctx_with(&g, &res, 1e-4);
+        assert!((ctx.edge_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_matches_table_iv() {
+        let reg = algorithm_registry();
+        assert_eq!(reg.len(), 4);
+        assert!(reg.iter().filter(|r| r.contribution).count() == 1);
+        assert_eq!(reg[3].frontier_selection, "Randomized");
+        assert!(!reg[1].many_core);
+    }
+}

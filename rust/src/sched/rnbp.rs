@@ -1,0 +1,182 @@
+//! Randomized Belief Propagation — the paper's contribution (§IV).
+//!
+//! Two low-overhead filters build the frontier:
+//! 1. **ε-filter**: drop every message whose next update would move it
+//!    less than ε (already-converged messages);
+//! 2. **randomized filter**: keep each surviving message with probability
+//!    `p` (cuRAND on the GPU; our deterministic xoshiro stream here).
+//!
+//! `p` is ranged dynamically from the runtime convergence indicator
+//! `EdgeRatio = NewEdgeCount / OldEdgeCount`: if `EdgeRatio > 0.9`
+//! (convergence stalling) use `low_p` — less parallelism, more sequential
+//! information propagation; otherwise use `high_p` — full speed. The
+//! paper locks `high_p = 1.0` for the synthetic datasets and uses
+//! `low_p = 0.4, high_p = 0.9` for protein folding.
+
+use super::{SchedContext, Scheduler};
+use crate::util::Rng;
+
+/// See module docs.
+#[derive(Debug)]
+pub struct Rnbp {
+    pub low_p: f64,
+    pub high_p: f64,
+    /// EdgeRatio threshold above which low_p engages (paper: 0.9).
+    pub ratio_threshold: f64,
+    rng: Rng,
+    /// Which setting the last `select` used (for metrics/tests).
+    pub last_used_low: bool,
+}
+
+impl Rnbp {
+    pub fn new(low_p: f64, high_p: f64, seed: u64) -> Self {
+        assert!(low_p > 0.0 && low_p <= 1.0, "low_p in (0,1]");
+        assert!(high_p > 0.0 && high_p <= 1.0, "high_p in (0,1]");
+        Rnbp {
+            low_p,
+            high_p,
+            ratio_threshold: 0.9,
+            rng: Rng::new(seed ^ 0x5bd1_e995),
+            last_used_low: false,
+        }
+    }
+
+    /// Paper defaults for the synthetic datasets: high_p locked to a full
+    /// update, low_p as given.
+    pub fn synthetic(low_p: f64, seed: u64) -> Self {
+        Self::new(low_p, 1.0, seed)
+    }
+}
+
+impl Scheduler for Rnbp {
+    fn name(&self) -> String {
+        format!("rnbp(lowp={},highp={})", self.low_p, self.high_p)
+    }
+
+    fn kind(&self) -> crate::perfmodel::SelectKind {
+        crate::perfmodel::SelectKind::RandomFilter
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Vec<Vec<i32>> {
+        if ctx.unconverged == 0 {
+            return vec![];
+        }
+        // Dynamic parallelism: EdgeRatio > threshold means convergence is
+        // stalling under high parallelism — drop to low_p. Iteration 0 has
+        // no signal (ratio == 1.0 trivially); start at high parallelism.
+        let use_low = ctx.iteration > 0 && ctx.edge_ratio() > self.ratio_threshold;
+        self.last_used_low = use_low;
+        let p = if use_low { self.low_p } else { self.high_p };
+
+        let m = ctx.mrf.live_edges;
+        let mut frontier = Vec::with_capacity((ctx.unconverged as f64 * p) as usize + 8);
+        if p >= 1.0 {
+            // full update of the ε-filtered frontier — no RNG draws
+            for (e, &r) in ctx.residuals[..m].iter().enumerate() {
+                if r >= ctx.eps {
+                    frontier.push(e as i32);
+                }
+            }
+        } else {
+            for (e, &r) in ctx.residuals[..m].iter().enumerate() {
+                if r >= ctx.eps && self.rng.coin(p) {
+                    frontier.push(e as i32);
+                }
+            }
+        }
+        if frontier.is_empty() {
+            // Random filter can drop everything when few edges remain;
+            // retry-free fallback: take the unconverged set directly
+            // (guarantees progress, negligible cost at this size).
+            for (e, &r) in ctx.residuals[..m].iter().enumerate() {
+                if r >= ctx.eps {
+                    frontier.push(e as i32);
+                }
+            }
+        }
+        vec![frontier]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::ising;
+    use crate::sched::test_util::ctx_with;
+    use crate::util::Rng as URng;
+
+    fn hot_graph() -> (crate::Mrf, Vec<f32>) {
+        let mut rng = URng::new(1);
+        let g = ising::generate("i", 8, 2.0, &mut rng).unwrap();
+        let res = vec![1.0f32; g.num_edges];
+        (g, res)
+    }
+
+    #[test]
+    fn eps_filter_drops_converged() {
+        let (g, mut res) = hot_graph();
+        for e in 0..g.live_edges / 2 {
+            res[e] = 0.0; // converged half
+        }
+        let mut s = Rnbp::new(0.5, 1.0, 7);
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        for &e in &waves[0] {
+            assert!(res[e as usize] >= 1e-4);
+        }
+        assert_eq!(waves[0].len(), g.live_edges / 2); // high_p=1.0 first iter
+    }
+
+    #[test]
+    fn random_filter_selects_fraction() {
+        let (g, res) = hot_graph();
+        let mut s = Rnbp::new(0.3, 0.3, 11);
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        let frac = waves[0].len() as f64 / g.live_edges as f64;
+        assert!((frac - 0.3).abs() < 0.1, "frac={frac}");
+    }
+
+    #[test]
+    fn dynamic_p_switches_on_edge_ratio() {
+        let (g, res) = hot_graph();
+        let mut s = Rnbp::new(0.1, 1.0, 13);
+        // stalling: unconverged barely moves
+        let mut ctx = ctx_with(&g, &res, 1e-4);
+        ctx.iteration = 5;
+        ctx.unconverged = 95;
+        ctx.prev_unconverged = 100;
+        s.select(&ctx);
+        assert!(s.last_used_low, "ratio 0.95 must engage low_p");
+        // converging fast: ratio 0.5
+        ctx.unconverged = 50;
+        s.select(&ctx);
+        assert!(!s.last_used_low);
+        // iteration 0 always high
+        ctx.iteration = 0;
+        ctx.unconverged = 95;
+        s.select(&ctx);
+        assert!(!s.last_used_low);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let (g, res) = hot_graph();
+        let mut a = Rnbp::new(0.4, 0.4, 99);
+        let mut b = Rnbp::new(0.4, 0.4, 99);
+        assert_eq!(a.select(&ctx_with(&g, &res, 1e-4)), b.select(&ctx_with(&g, &res, 1e-4)));
+    }
+
+    #[test]
+    fn never_empty_while_unconverged() {
+        let (g, mut res) = hot_graph();
+        // only one unconverged edge + tiny p: fallback must still select
+        for r in res.iter_mut() {
+            *r = 0.0;
+        }
+        res[5] = 1.0;
+        let mut s = Rnbp::new(0.01, 0.01, 3);
+        for _ in 0..20 {
+            let waves = s.select(&ctx_with(&g, &res, 1e-4));
+            assert!(!waves[0].is_empty());
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal JSON emission (serialization only).
+//!
+//! Experiment results are written as JSON for external plotting; we never
+//! need to *parse* JSON (the artifact manifest is a line-oriented kv file),
+//! so this is a small, total, writer-only implementation.
+
+use std::fmt::Write as _;
+
+/// A JSON value that can be built up and rendered.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(v: impl Into<f64>) -> Json {
+        Json::Num(v.into())
+    }
+
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    /// Object builder preserving insertion order.
+    pub fn obj() -> ObjBuilder {
+        ObjBuilder(Vec::new())
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    if *v == v.trunc() && v.abs() < 1e15 {
+                        let _ = write!(out, "{}", *v as i64);
+                    } else {
+                        let _ = write!(out, "{v}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no inf/nan
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Fluent object builder.
+pub struct ObjBuilder(Vec<(String, Json)>);
+
+impl ObjBuilder {
+    pub fn field(mut self, key: impl Into<String>, value: Json) -> Self {
+        self.0.push((key.into(), value));
+        self
+    }
+
+    pub fn num(self, key: impl Into<String>, v: impl Into<f64>) -> Self {
+        self.field(key, Json::Num(v.into()))
+    }
+
+    pub fn str(self, key: impl Into<String>, v: impl Into<String>) -> Self {
+        self.field(key, Json::Str(v.into()))
+    }
+
+    pub fn build(self) -> Json {
+        Json::Obj(self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::num(3.0).render(), "3");
+        assert_eq!(Json::num(3.5).render(), "3.5");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn string_escaping() {
+        assert_eq!(Json::str("a\"b\\c\nd").render(), r#""a\"b\\c\nd""#);
+        assert_eq!(Json::str("\u{1}").render(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn nested() {
+        let j = Json::obj()
+            .str("name", "fig2")
+            .num("runs", 10.0)
+            .field("series", Json::arr([Json::num(1.0), Json::num(2.5)]))
+            .build();
+        assert_eq!(j.render(), r#"{"name":"fig2","runs":10,"series":[1,2.5]}"#);
+    }
+
+    #[test]
+    fn object_preserves_order() {
+        let j = Json::obj().num("z", 1.0).num("a", 2.0).build();
+        assert_eq!(j.render(), r#"{"z":1,"a":2}"#);
+    }
+}

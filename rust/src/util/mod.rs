@@ -1,0 +1,14 @@
+//! Small self-contained substrates: deterministic RNG, statistics,
+//! JSON emission, wallclock timing, and a scoped parallel map.
+//!
+//! All hand-rolled: the build is fully offline and vendored, so the usual
+//! crates (rand, serde, rayon) are intentionally not dependencies.
+
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,128 @@
+//! Scoped parallel map over std::thread — the campaign runner's fan-out.
+//!
+//! Campaigns run many independent (graph, scheduler) pairs; each pair is
+//! sequential (BP iterations are a dependence chain) but pairs are
+//! embarrassingly parallel. A tiny static work-stealing-free chunker is
+//! all that's needed; no external threadpool crate is vendored.
+
+/// Number of worker threads to use (respects `BP_SCHED_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("BP_SCHED_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Parallel map with deterministic output order.
+///
+/// Spawns at most `threads` scoped workers over an atomic index counter, so
+/// uneven task costs (hard graphs converge slowly) still balance.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots_ptr = slots_ptr;
+            scope.spawn(move || loop {
+                // Force capture of the SendPtr wrapper itself; edition-2021
+                // disjoint capture would otherwise move only the (non-Send)
+                // raw-pointer field into the closure.
+                let slots_ptr = &slots_ptr;
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i, &items[i]);
+                // SAFETY: each index i is claimed exactly once by exactly
+                // one worker, so writes to slot i never race; the scope
+                // joins all workers before `slots` is read.
+                unsafe {
+                    *slots_ptr.0.add(i) = Some(out);
+                }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("slot filled")).collect()
+}
+
+/// Pointer wrapper to move a raw pointer into scoped threads.
+struct SendPtr<T>(*mut T);
+// Manual impls: derive would bound on `T: Copy`/`T: Clone`, but raw
+// pointers are Copy for any T.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        let out = par_map(&items, 1, |_, &x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        let out: Vec<u32> = par_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_costs_balance() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map(&items, 4, |_, &x| {
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            x
+        });
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

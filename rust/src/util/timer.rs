@@ -1,0 +1,127 @@
+//! Wallclock timing with named phase accumulation.
+//!
+//! The coordinator attributes every iteration's time to a phase
+//! (`select`, `update`, `commit`, ...) so the paper's profiling claim —
+//! RBP/RS spend >90% of runtime in sort-and-select — can be measured
+//! directly (EXPERIMENTS.md §Overheads).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let s = self.seconds();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Accumulates wallclock per named phase.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, f64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase label.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.totals.entry(phase).or_insert(0.0) += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, seconds: f64) {
+        *self.totals.entry(phase).or_insert(0.0) += seconds;
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.totals.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    /// (phase, seconds, fraction-of-total), descending by time.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total().max(1e-30);
+        let mut rows: Vec<_> = self
+            .totals
+            .iter()
+            .map(|(&k, &v)| (k, v, v / total))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (&k, &v) in &other.totals {
+            *self.totals.entry(k).or_insert(0.0) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        t.add("select", 0.25);
+        t.add("update", 0.75);
+        t.add("select", 0.25);
+        assert!((t.get("select") - 0.5).abs() < 1e-12);
+        assert!((t.total() - 1.25).abs() < 1e-12);
+        let bd = t.breakdown();
+        assert_eq!(bd[0].0, "update");
+        assert!((bd[0].2 - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("phase", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.get("phase") >= 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = PhaseTimer::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimer::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert!((a.get("x") - 3.0).abs() < 1e-12);
+        assert!((a.get("y") - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,97 @@
+//! Ablation tests for the design choices DESIGN.md calls out:
+//! dynamic-p control, the candidate cache, and bucketed batching.
+
+use bp_sched::coordinator::{run, RunParams};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::native::NativeEngine;
+use bp_sched::sched::{Lbp, Rnbp};
+use bp_sched::util::Rng;
+
+/// Dynamic p: on a hard graph, fixed high parallelism stalls while the
+/// dynamic controller (dropping to low p when EdgeRatio is high) makes
+/// strictly more progress per message update.
+#[test]
+fn dynamic_p_beats_fixed_high_p_on_hard_graphs() {
+    let spec = DatasetSpec::Ising { n: 20, c: 3.0 };
+    let mut wins = 0;
+    let total = 3;
+    for seed in 0..total {
+        let mut rng = Rng::new(seed);
+        let g = spec.generate(&mut rng).unwrap();
+        let params = RunParams {
+            max_iterations: 1500,
+            timeout: 30.0,
+            cost_model: None,
+            ..Default::default()
+        };
+        // dynamic: low_p engages when stalling
+        let mut eng = NativeEngine::new();
+        let mut dynamic = Rnbp::new(0.1, 1.0, seed);
+        let d = run(&g, &mut eng, &mut dynamic, &params).unwrap();
+        // fixed high: always full frontier (LBP-like with eps filter)
+        let mut eng = NativeEngine::new();
+        let mut fixed = Rnbp::new(1.0, 1.0, seed);
+        let f = run(&g, &mut eng, &mut fixed, &params).unwrap();
+        let d_score = (d.converged(), std::cmp::Reverse(d.message_updates));
+        let f_score = (f.converged(), std::cmp::Reverse(f.message_updates));
+        if d_score >= f_score {
+            wins += 1;
+        }
+    }
+    assert!(wins * 2 > total, "dynamic won only {wins}/{total}");
+}
+
+/// Candidate cache: single-wave schedulers never trigger mid-iteration
+/// engine calls — engine_calls == iterations + 1 (the initial refresh),
+/// because commits are served from the cache.
+#[test]
+fn candidate_cache_eliminates_update_calls() {
+    let mut rng = Rng::new(5);
+    let g = DatasetSpec::Ising { n: 8, c: 1.5 }.generate(&mut rng).unwrap();
+    let params = RunParams { cost_model: None, ..Default::default() };
+    let mut eng = NativeEngine::new();
+    let mut s = Lbp::new();
+    let r = run(&g, &mut eng, &mut s, &params).unwrap();
+    assert!(r.converged());
+    assert_eq!(
+        r.engine_calls,
+        r.iterations as u64 + 1,
+        "LBP must be one refresh call per iteration"
+    );
+}
+
+/// Work-efficiency ablation (the paper's LBP-vs-asynchronous story):
+/// on an easy graph, RnBP's eps-filter does strictly less message work
+/// than LBP's update-everything.
+#[test]
+fn eps_filter_saves_work() {
+    let mut rng = Rng::new(9);
+    let g = DatasetSpec::Ising { n: 15, c: 1.5 }.generate(&mut rng).unwrap();
+    let params = RunParams { cost_model: None, ..Default::default() };
+    let mut eng = NativeEngine::new();
+    let r_lbp = run(&g, &mut eng, &mut Lbp::new(), &params).unwrap();
+    let mut eng = NativeEngine::new();
+    let mut s = Rnbp::new(1.0, 1.0, 1); // pure eps-filter, no randomness
+    let r_filter = run(&g, &mut eng, &mut s, &params).unwrap();
+    assert!(r_lbp.converged() && r_filter.converged());
+    assert!(
+        r_filter.message_updates < r_lbp.message_updates,
+        "filter {} vs lbp {}",
+        r_filter.message_updates,
+        r_lbp.message_updates
+    );
+}
+
+/// Simulated clock ablation: the V100 model must preserve ordering
+/// between a cheap-selection scheduler and a sort-based one given equal
+/// iteration counts (RnBP select < RBP select per iteration).
+#[test]
+fn sim_clock_charges_sort_overhead() {
+    use bp_sched::perfmodel::{CostModel, SelectKind};
+    let m = CostModel::v100();
+    for edges in [6240usize, 39_600, 199_998] {
+        let rnbp = m.select_cost(SelectKind::RandomFilter, edges, edges / 4, edges / 2);
+        let rbp = m.select_cost(SelectKind::SortTopK, edges, edges / 4, edges / 2);
+        assert!(rbp > rnbp, "sort must dominate at M={edges}");
+    }
+}

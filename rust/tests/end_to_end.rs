@@ -1,0 +1,120 @@
+//! End-to-end: full stack (dataset -> scheduler -> PJRT engine -> AOT
+//! artifacts) converges and matches exact inference on tractable graphs.
+
+use bp_sched::coordinator::{run, RunParams};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::{native::NativeEngine, pjrt::PjrtEngine};
+use bp_sched::exact;
+use bp_sched::runtime::default_artifacts_dir;
+use bp_sched::sched::{self, srbp, Lbp, Rnbp};
+use bp_sched::util::Rng;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+#[test]
+fn pjrt_rnbp_converges_on_ising10() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(42);
+    let g = DatasetSpec::Ising { n: 10, c: 2.0 }.generate(&mut rng).unwrap();
+    let mut eng = PjrtEngine::from_default_dir().unwrap();
+    let mut s = Rnbp::synthetic(0.7, 1);
+    let params = RunParams { want_marginals: true, ..Default::default() };
+    let r = run(&g, &mut eng, &mut s, &params).unwrap();
+    assert!(r.converged(), "{:?} after {} iters", r.stop, r.iterations);
+    let m = r.marginals.unwrap();
+    for v in 0..g.live_vertices {
+        let s: f32 = m[v * 2..v * 2 + 2].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn pjrt_and_native_runs_agree() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(7);
+    let g = DatasetSpec::Ising { n: 10, c: 2.0 }.generate(&mut rng).unwrap();
+    let params = RunParams {
+        eps: 1e-5,
+        want_marginals: true,
+        ..Default::default()
+    };
+    let mut native = NativeEngine::new();
+    let mut s1 = Lbp::new();
+    let a = run(&g, &mut native, &mut s1, &params).unwrap();
+    let mut pjrt = PjrtEngine::from_default_dir().unwrap();
+    let mut s2 = Lbp::new();
+    let b = run(&g, &mut pjrt, &mut s2, &params).unwrap();
+    assert_eq!(a.converged(), b.converged());
+    assert_eq!(a.iterations, b.iterations, "same schedule, same iterations");
+    for (x, y) in a.marginals.unwrap().iter().zip(&b.marginals.unwrap()) {
+        assert!((x - y).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn bp_matches_exact_on_tractable_ising() {
+    // Fig 5 in miniature: KL(exact || BP) small on Ising 10x10 C=2.
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(5);
+    let g = DatasetSpec::Ising { n: 10, c: 2.0 }.generate(&mut rng).unwrap();
+    let params = RunParams {
+        want_marginals: true,
+        ..Default::default()
+    };
+    let mut eng = PjrtEngine::from_default_dir().unwrap();
+    let mut s = Rnbp::synthetic(0.7, 3);
+    let r = run(&g, &mut eng, &mut s, &params).unwrap();
+    assert!(r.converged());
+    let exact_m = exact::exact_marginals(&g).unwrap();
+    let kl = exact::kl::mean_marginal_kl(&exact_m, &r.marginals.unwrap(), g.max_arity);
+    // loopy BP is approximate on loopy graphs; C=2 is the paper's "easy"
+    // setting where BP is near-exact
+    assert!(kl < 0.05, "mean KL too high: {kl}");
+
+    // SRBP achieves the same quality (paper: "same quality of result")
+    let r2 = srbp::run_serial(&g, &params).unwrap();
+    assert!(r2.converged());
+    let kl2 = exact::kl::mean_marginal_kl(&exact_m, &r2.marginals.unwrap(), g.max_arity);
+    assert!((kl - kl2).abs() < 0.02, "RnBP {kl} vs SRBP {kl2}");
+}
+
+#[test]
+fn protein_rnbp_converges_with_paper_params() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(9);
+    let g = DatasetSpec::Protein.generate(&mut rng).unwrap();
+    let mut eng = PjrtEngine::from_default_dir().unwrap();
+    // paper Fig 4f: LowP = 0.4, HighP = 0.9
+    let mut s = Rnbp::new(0.4, 0.9, 17);
+    // generous wallclock: `cargo test` runs suites in parallel threads on
+    // this single-core box, so each run can be slowed several-fold
+    let params = RunParams { timeout: 400.0, ..Default::default() };
+    let r = run(&g, &mut eng, &mut s, &params).unwrap();
+    assert!(
+        r.converged(),
+        "{:?} iters={} res={}",
+        r.stop,
+        r.iterations,
+        r.final_residual
+    );
+}
+
+#[test]
+fn table_iv_registry() {
+    let reg = sched::algorithm_registry();
+    assert_eq!(reg.len(), 4);
+}

@@ -1,0 +1,125 @@
+//! Integration: the PJRT engine (AOT JAX/Pallas artifacts) and the native
+//! Rust engine must agree to float tolerance on real graphs.
+//!
+//! Requires `make artifacts` to have run; tests are skipped (pass
+//! trivially with a note) when the artifacts directory is missing so
+//! `cargo test` works in a fresh checkout.
+
+use bp_sched::datasets::{chain, ising, protein, DatasetSpec};
+use bp_sched::engine::{native::NativeEngine, pjrt::PjrtEngine, MessageEngine};
+use bp_sched::runtime::default_artifacts_dir;
+use bp_sched::util::Rng;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}]: native={x} pjrt={y} (|d|={})",
+            (x - y).abs()
+        );
+    }
+}
+
+fn parity_on(g: &bp_sched::Mrf, frontiers: &[Vec<i32>], tol: f32) {
+    let mut native = NativeEngine::new();
+    let mut pjrt = PjrtEngine::from_default_dir().expect("open artifacts");
+    let m = g.uniform_messages();
+
+    // iterate a few rounds committing the native candidates so the two
+    // engines are compared at multiple (non-uniform) message states
+    let mut logm = m.as_slice().to_vec();
+    for (round, frontier) in frontiers.iter().enumerate() {
+        let a = native.candidates(g, &logm, frontier).unwrap();
+        let b = pjrt.candidates(g, &logm, frontier).unwrap();
+        assert_close(&a.new_m, &b.new_m, tol, &format!("round{round}.new_m"));
+        assert_close(
+            &a.residuals,
+            &b.residuals,
+            tol,
+            &format!("round{round}.residuals"),
+        );
+        // commit
+        let am = g.max_arity;
+        for (i, &e) in frontier.iter().enumerate() {
+            if e >= 0 {
+                let e = e as usize;
+                logm[e * am..(e + 1) * am].copy_from_slice(a.row(i, am));
+            }
+        }
+    }
+
+    let ma = native.marginals(g, &logm).unwrap();
+    let mb = pjrt.marginals(g, &logm).unwrap();
+    assert_close(&ma, &mb, tol, "marginals");
+}
+
+#[test]
+fn ising10_full_and_partial_frontiers() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(101);
+    let g = ising::generate("ising10", 10, 2.5, &mut rng).unwrap();
+    let all: Vec<i32> = (0..g.live_edges as i32).collect();
+    let mut some: Vec<i32> = (0..g.live_edges as i32).step_by(3).collect();
+    rng.shuffle(&mut some);
+    let few: Vec<i32> = vec![5, 17, 200];
+    parity_on(&g, &[all.clone(), some, few, all], 5e-5);
+}
+
+#[test]
+fn chain_large_bucket() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(102);
+    let g = chain::generate("chain20k", 20_000, 10.0, &mut rng).unwrap();
+    let all: Vec<i32> = (0..g.live_edges as i32).collect();
+    parity_on(&g, &[all], 5e-5);
+}
+
+#[test]
+fn protein_variable_arity() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(103);
+    let g = protein::generate("protein", &Default::default(), &mut rng).unwrap();
+    let all: Vec<i32> = (0..g.live_edges as i32).collect();
+    let mut half: Vec<i32> = (0..g.live_edges as i32).step_by(2).collect();
+    rng.shuffle(&mut half);
+    // protein residuals/messages span a large dynamic range; tolerance is
+    // scaled accordingly (f32 LSE over 81 lanes)
+    parity_on(&g, &[all.clone(), half, all], 5e-4);
+}
+
+#[test]
+fn dataset_specs_generate_into_manifest_envelopes() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = bp_sched::runtime::Runtime::from_default_dir().unwrap();
+    for spec in [
+        DatasetSpec::Ising { n: 10, c: 2.0 },
+        DatasetSpec::Ising { n: 40, c: 2.5 },
+        DatasetSpec::Chain { n: 20_000, c: 10.0 },
+        DatasetSpec::Protein,
+    ] {
+        let mut rng = Rng::new(7);
+        let g = spec.generate(&mut rng).unwrap();
+        let class = rt.class(&g.class_name).unwrap();
+        assert_eq!(g.num_vertices, class.num_vertices, "{}", g.class_name);
+        assert_eq!(g.num_edges, class.num_edges, "{}", g.class_name);
+        assert_eq!(g.max_arity, class.arity, "{}", g.class_name);
+        assert_eq!(g.max_in_degree, class.max_in_degree, "{}", g.class_name);
+    }
+}

@@ -1,0 +1,139 @@
+//! Failure-injection tests: the runtime must fail loudly and descriptively
+//! on corrupted artifacts, never silently compute with a mismatched
+//! manifest.
+
+use bp_sched::engine::Semiring;
+use bp_sched::runtime::{Manifest, Runtime};
+
+fn artifacts_ready() -> bool {
+    bp_sched::runtime::default_artifacts_dir()
+        .join("manifest.txt")
+        .exists()
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bpfail_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_descriptive() {
+    let dir = tmp_dir("nomanifest");
+    let err = match Runtime::new(&dir) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected failure"),
+    };
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_with_missing_artifact_file_fails_on_use() {
+    let dir = tmp_dir("missingfile");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "version=2\nfingerprint=abc\nconfig name=ghost V=10 M=20 A=2 D=2 buckets=512\n",
+    )
+    .unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let msg = match rt.candidate_executable("ghost", 512, Semiring::SumProduct) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected failure"),
+    };
+    assert!(msg.contains("ghost"), "error should name the artifact: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_hlo_text_fails_to_parse() {
+    let dir = tmp_dir("corrupt");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "version=2\nfingerprint=abc\nconfig name=bad V=10 M=20 A=2 D=2 buckets=512\n",
+    )
+    .unwrap();
+    std::fs::create_dir_all(dir.join("bad")).unwrap();
+    std::fs::write(dir.join("bad/cand_sp_k512.hlo.txt"), "this is not HLO {").unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    assert!(rt.candidate_executable("bad", 512, Semiring::SumProduct).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_bucket_rejected() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::from_default_dir().unwrap();
+    let msg = match rt.candidate_executable("ising10", 999, Semiring::SumProduct) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected failure"),
+    };
+    assert!(msg.contains("bucket"));
+}
+
+#[test]
+fn warmup_compiles_every_bucket() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::from_default_dir().unwrap();
+    assert_eq!(rt.compiled_count(), 0);
+    rt.warmup("ising10").unwrap();
+    let expect = rt.class("ising10").unwrap().buckets.len() + 1;
+    assert_eq!(rt.compiled_count(), expect);
+    // idempotent
+    rt.warmup("ising10").unwrap();
+    assert_eq!(rt.compiled_count(), expect);
+}
+
+#[test]
+fn frontier_larger_than_largest_bucket_rejected() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use bp_sched::datasets::DatasetSpec;
+    use bp_sched::engine::{pjrt::PjrtEngine, MessageEngine};
+    use bp_sched::util::Rng;
+    let mut rng = Rng::new(1);
+    let g = DatasetSpec::Ising { n: 10, c: 2.0 }.generate(&mut rng).unwrap();
+    let mut eng = PjrtEngine::from_default_dir().unwrap();
+    let logm = g.uniform_messages();
+    let oversized: Vec<i32> = vec![0; 10_000]; // > largest ising10 bucket
+    let err = eng.candidates(&g, logm.as_slice(), &oversized).unwrap_err();
+    assert!(format!("{err:#}").contains("exceeds"));
+}
+
+#[test]
+fn manifest_rejects_manifest_mismatched_class() {
+    // A graph generated for a class absent from the manifest errors out.
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use bp_sched::datasets::chain;
+    use bp_sched::engine::{pjrt::PjrtEngine, MessageEngine};
+    use bp_sched::util::Rng;
+    let mut rng = Rng::new(2);
+    let g = chain::generate("chain999", 100, 10.0, &mut rng).unwrap();
+    let mut eng = PjrtEngine::from_default_dir().unwrap();
+    let logm = g.uniform_messages();
+    let err = eng
+        .candidates(&g, logm.as_slice(), &[0, 1, 2])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("chain999"));
+}
+
+#[test]
+fn manifest_fingerprint_exposed() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(bp_sched::runtime::default_artifacts_dir()).unwrap();
+    assert!(!m.fingerprint.is_empty());
+}

@@ -1,0 +1,236 @@
+//! Property-style scheduler/coordinator invariants over randomized
+//! inputs (seeded, many cases — the vendored build has no proptest, so
+//! the generators live here).
+
+use bp_sched::coordinator::{run, RunParams, StopReason};
+use bp_sched::datasets::{ising, protein, DatasetSpec};
+use bp_sched::engine::native::NativeEngine;
+use bp_sched::perfmodel::SelectKind;
+use bp_sched::sched::{Lbp, Rbp, ResidualSplash, Rnbp, SchedContext, Scheduler};
+use bp_sched::util::Rng;
+use bp_sched::Mrf;
+
+fn random_residuals(rng: &mut Rng, g: &Mrf, frac_hot: f64) -> Vec<f32> {
+    let mut res = vec![0.0f32; g.num_edges];
+    for e in 0..g.live_edges {
+        if rng.coin(frac_hot) {
+            res[e] = rng.uniform() as f32 + 1e-3;
+        }
+    }
+    res
+}
+
+fn ctx<'a>(g: &'a Mrf, res: &'a [f32], eps: f32, iteration: usize) -> SchedContext<'a> {
+    let unconverged = res[..g.live_edges].iter().filter(|&&r| r >= eps).count();
+    SchedContext {
+        mrf: g,
+        residuals: res,
+        eps,
+        iteration,
+        unconverged,
+        prev_unconverged: unconverged,
+    }
+}
+
+/// Every scheduler returns only live, in-range frontier edges, without
+/// duplicates inside a wave.
+#[test]
+fn frontier_edges_always_live_and_unique_within_wave() {
+    let mut rng = Rng::new(42);
+    for case in 0..25 {
+        let n = 4 + rng.below(6);
+        let c = 1.0 + rng.uniform() * 2.0;
+        let g = ising::generate("i", n, c, &mut rng).unwrap();
+        let frac = 0.3 + 0.5 * rng.uniform();
+        let res = random_residuals(&mut rng, &g, frac);
+        let mut policies: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Lbp::new()),
+            Box::new(Rbp::new(0.25)),
+            Box::new(ResidualSplash::new(0.25, 1 + rng.below(3))),
+            Box::new(Rnbp::new(0.3, 0.9, case as u64)),
+        ];
+        for s in policies.iter_mut() {
+            let c = ctx(&g, &res, 1e-4, case);
+            let waves = s.select(&c);
+            for wave in &waves {
+                let mut seen = std::collections::HashSet::new();
+                for &e in wave {
+                    assert!(e >= 0, "{}: negative edge", s.name());
+                    assert!((e as usize) < g.live_edges, "{}: dead edge", s.name());
+                    assert!(seen.insert(e), "{}: duplicate edge in wave", s.name());
+                }
+            }
+        }
+    }
+}
+
+/// Single-wave schedulers only pick unconverged edges (the eps-filter).
+#[test]
+fn eps_filter_respected_by_rbp_and_rnbp() {
+    let mut rng = Rng::new(7);
+    for case in 0..20 {
+        let n = 5 + rng.below(5);
+        let g = ising::generate("i", n, 2.0, &mut rng).unwrap();
+        let res = random_residuals(&mut rng, &g, 0.4);
+        let mut policies: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Rbp::new(0.5)),
+            Box::new(Rnbp::new(0.5, 0.9, case as u64)),
+        ];
+        for s in policies.iter_mut() {
+            let c = ctx(&g, &res, 1e-4, 1);
+            for wave in s.select(&c) {
+                for &e in &wave {
+                    assert!(
+                        res[e as usize] >= 1e-4,
+                        "{} picked converged edge {e}",
+                        s.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// RBP frontier size is exactly min(k, #unconverged).
+#[test]
+fn rbp_frontier_size_law() {
+    let mut rng = Rng::new(11);
+    for _ in 0..20 {
+        let g = ising::generate("i", 6, 2.0, &mut rng).unwrap();
+        let res = random_residuals(&mut rng, &g, 0.6);
+        let hot = res[..g.live_edges].iter().filter(|&&r| r >= 1e-4).count();
+        if hot == 0 {
+            continue;
+        }
+        let p = 0.1 + 0.4 * rng.uniform();
+        let mut s = Rbp::new(p);
+        let waves = s.select(&ctx(&g, &res, 1e-4, 0));
+        let k = ((p * g.live_edges as f64).ceil() as usize).min(hot);
+        assert_eq!(waves[0].len(), k);
+    }
+}
+
+/// Stop-reason semantics: converged means the maintained residual state
+/// is below eps.
+#[test]
+fn converged_implies_residuals_below_eps() {
+    let mut rng = Rng::new(13);
+    for case in 0..6usize {
+        let g = ising::generate("i", 5 + case, 1.5 + 0.3 * case as f64, &mut rng).unwrap();
+        let params = RunParams {
+            max_iterations: 50 + 10 * case,
+            eps: 1e-4,
+            cost_model: None,
+            ..Default::default()
+        };
+        let mut eng = NativeEngine::new();
+        let mut sched = Rnbp::new(0.4, 0.8, case as u64);
+        let r = run(&g, &mut eng, &mut sched, &params).unwrap();
+        match r.stop {
+            StopReason::Converged => assert!(r.final_residual < params.eps),
+            _ => assert!(r.final_residual >= 0.0),
+        }
+    }
+}
+
+/// Fixed point is schedule-independent: all policies land on the same
+/// marginals on an easy graph.
+#[test]
+fn fixed_point_independent_of_schedule() {
+    let mut rng = Rng::new(17);
+    let g = ising::generate("i", 6, 1.2, &mut rng).unwrap();
+    let params = RunParams {
+        eps: 1e-6,
+        want_marginals: true,
+        cost_model: None,
+        ..Default::default()
+    };
+    let mut results = Vec::new();
+    let mut policies: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Lbp::new()),
+        Box::new(Rbp::new(0.3)),
+        Box::new(ResidualSplash::new(0.3, 2)),
+        Box::new(Rnbp::new(0.5, 1.0, 3)),
+    ];
+    for s in policies.iter_mut() {
+        let mut eng = NativeEngine::new();
+        let r = run(&g, &mut eng, s.as_mut(), &params).unwrap();
+        assert!(r.converged(), "{} failed on easy graph", r.scheduler);
+        results.push(r.marginals.unwrap());
+    }
+    for other in &results[1..] {
+        for (a, b) in results[0].iter().zip(other) {
+            assert!((a - b).abs() < 5e-3, "marginal mismatch {a} vs {b}");
+        }
+    }
+}
+
+/// Work per iteration scales with p (the parallelism knob actually
+/// controls the frontier budget).
+#[test]
+fn parallelism_controls_work_per_iteration() {
+    let mut rng = Rng::new(19);
+    let g = ising::generate("i", 12, 2.0, &mut rng).unwrap();
+    let res = vec![1.0f32; g.num_edges];
+    for (lo, hi) in [(0.05, 0.5), (0.1, 0.8)] {
+        let mut a = Rbp::new(lo);
+        let mut b = Rbp::new(hi);
+        let na: usize = a.select(&ctx(&g, &res, 1e-4, 0)).iter().map(|w| w.len()).sum();
+        let nb: usize = b.select(&ctx(&g, &res, 1e-4, 0)).iter().map(|w| w.len()).sum();
+        assert!(nb > na * 2, "p={hi} gave {nb}, p={lo} gave {na}");
+    }
+}
+
+/// Select kinds map to the cost model correctly.
+#[test]
+fn scheduler_kinds() {
+    assert_eq!(Lbp::new().kind(), SelectKind::All);
+    assert_eq!(Rbp::new(0.5).kind(), SelectKind::SortTopK);
+    assert_eq!(ResidualSplash::new(0.5, 2).kind(), SelectKind::VertexSortSplash);
+    assert_eq!(Rnbp::new(0.5, 1.0, 0).kind(), SelectKind::RandomFilter);
+}
+
+/// Protein graphs (variable arity, irregular) run through the whole
+/// coordinator with the native engine.
+#[test]
+fn protein_native_coordinator_roundtrip() {
+    let mut rng = Rng::new(23);
+    let g = protein::generate("tight", &Default::default(), &mut rng).unwrap();
+    let params = RunParams {
+        timeout: 30.0,
+        want_marginals: true,
+        ..Default::default()
+    };
+    let mut eng = NativeEngine::new();
+    let mut s = Rnbp::new(0.4, 0.9, 31);
+    let r = run(&g, &mut eng, &mut s, &params).unwrap();
+    assert!(r.converged(), "{:?}", r.stop);
+    let m = r.marginals.unwrap();
+    for v in 0..g.live_vertices {
+        let av = g.arity_of(v);
+        let total: f32 = m[v * g.max_arity..v * g.max_arity + av].iter().sum();
+        assert!((total - 1.0).abs() < 1e-3, "vertex {v}: {total}");
+    }
+}
+
+/// Campaign determinism: same seeds, same outcome counts.
+#[test]
+fn campaign_outcomes_deterministic() {
+    let spec = DatasetSpec::Ising { n: 6, c: 2.0 };
+    let run_once = || {
+        let ds = spec.generate_many(3, 99).unwrap();
+        let params = RunParams { cost_model: None, ..Default::default() };
+        bp_sched::coordinator::campaign::run_campaign("x", &ds.graphs, 2, |i, g| {
+            let mut eng = NativeEngine::new();
+            let mut s = Rnbp::new(0.4, 1.0, i as u64);
+            run(g, &mut eng, &mut s, &params)
+        })
+        .unwrap()
+    };
+    let (a, b) = (run_once(), run_once());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.iterations, y.iterations);
+        assert_eq!(x.message_updates, y.message_updates);
+        assert_eq!(x.converged(), y.converged());
+    }
+}
