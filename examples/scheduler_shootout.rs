@@ -3,32 +3,62 @@
 //! Reproduces the paper's qualitative story on one dataset in one command:
 //! LBP is fast but may not converge; RBP/RS converge more but pay
 //! selection overhead; RnBP gets both; SRBP is the serial baseline.
+//! Finishes with a native-vs-parallel engine head-to-head on the same
+//! graphs (the belief-cached wave update of `engine::parallel`).
 //!
 //! ```bash
-//! cargo run --release --example scheduler_shootout -- [ising_n] [C] [graphs]
+//! cargo run --release --example scheduler_shootout -- \
+//!     [ising_n] [C] [graphs] [engine: auto|pjrt|native|parallel]
 //! ```
 
-use bp_sched::coordinator::campaign::{run_campaign, Speedup};
+use bp_sched::coordinator::campaign::{run_campaign, Campaign, Speedup};
 use bp_sched::coordinator::{run, RunParams, TimeBasis};
 use bp_sched::datasets::DatasetSpec;
-use bp_sched::engine::pjrt::PjrtEngine;
+use bp_sched::engine::{
+    native::NativeEngine, parallel::ParallelEngine, pjrt::PjrtEngine, MessageEngine,
+};
 use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
 use bp_sched::util::parallel::default_threads;
 use bp_sched::util::stats::fmt_duration;
+
+fn make_engine(kind: &str) -> anyhow::Result<Box<dyn MessageEngine>> {
+    Ok(match kind {
+        "pjrt" => Box::new(PjrtEngine::from_default_dir()?),
+        "native" => Box::new(NativeEngine::new()),
+        "parallel" => Box::new(ParallelEngine::new()),
+        other => anyhow::bail!("unknown engine {other:?} (want pjrt|native|parallel)"),
+    })
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(40);
     let c: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(2.5);
     let count: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(5);
+    let mut engine_kind = args.get(4).map(|s| s.as_str()).unwrap_or("auto").to_string();
+    if engine_kind == "auto" {
+        // prefer the AOT/PJRT path when artifacts are built, otherwise
+        // the self-contained parallel CPU engine
+        engine_kind = if PjrtEngine::from_default_dir().is_ok() {
+            "pjrt".to_string()
+        } else {
+            "parallel".to_string()
+        };
+    }
 
     let spec = DatasetSpec::Ising { n, c };
     let ds = spec.generate_many(count, 20_260_710)?;
+    // the parallel engine threads *within* each run; nesting it under
+    // per-graph campaign workers would oversubscribe the cores and
+    // distort the cross-scheduler wallclock comparison
+    let campaign_threads = if engine_kind == "parallel" { 1 } else { default_threads() };
     println!(
-        "dataset: {} ({} graphs), threads={}",
+        "dataset: {} ({} graphs), engine={}, threads={}, campaign workers={}",
         ds.name,
         ds.graphs.len(),
-        default_threads()
+        engine_kind,
+        default_threads(),
+        campaign_threads
     );
     let params = RunParams { timeout: 30.0, ..Default::default() };
 
@@ -54,10 +84,10 @@ fn main() -> anyhow::Result<()> {
 
     let mut campaigns = Vec::new();
     for (label, mk) in &policies {
-        let camp = run_campaign(*label, &ds.graphs, default_threads(), |i, g| {
-            let mut eng = PjrtEngine::from_default_dir()?;
+        let camp = run_campaign(*label, &ds.graphs, campaign_threads, |i, g| {
+            let mut eng = make_engine(&engine_kind)?;
             let mut s = mk(i as u64 + 1);
-            run(g, &mut eng, s.as_mut(), &params)
+            run(g, eng.as_mut(), s.as_mut(), &params)
         })?;
         print_row(label, &camp);
         campaigns.push(camp);
@@ -71,10 +101,36 @@ fn main() -> anyhow::Result<()> {
             Speedup::compute(camp, &base, TimeBasis::Simulated).render()
         );
     }
+
+    // --- engine head-to-head: serial native vs belief-cached parallel ---
+    // Same scheduler (lbp, full frontiers = the paper's bulk wave), same
+    // graphs; campaigns run one graph at a time so the parallel engine's
+    // intra-wave threads are the only parallelism being compared.
+    println!("\nengine head-to-head (lbp waves, campaign threads=1):");
+    let mut head: Vec<(&str, Campaign)> = Vec::new();
+    for kind in ["native", "parallel"] {
+        let camp = run_campaign(kind, &ds.graphs, 1, |_, g| {
+            let mut eng = make_engine(kind)?;
+            let mut s = Lbp::new();
+            run(g, eng.as_mut(), &mut s, &params)
+        })?;
+        println!(
+            "  {:<10} mean wallclock {:>11}  ({} msg updates)",
+            kind,
+            fmt_duration(camp.mean_time_lower_bound(TimeBasis::Wallclock)),
+            camp.total_message_updates()
+        );
+        head.push((kind, camp));
+    }
+    if let [(_, native), (_, parallel)] = &head[..] {
+        let s = native.mean_time_lower_bound(TimeBasis::Wallclock)
+            / parallel.mean_time_lower_bound(TimeBasis::Wallclock).max(1e-9);
+        println!("  parallel speedup over native: {s:.2}x");
+    }
     Ok(())
 }
 
-fn print_row(label: &str, c: &bp_sched::coordinator::campaign::Campaign) {
+fn print_row(label: &str, c: &Campaign) {
     println!(
         "{:<16} {:>5.0}% {:>11} {:>11} {:>12} {:>8.0} {:>7.1}%",
         label,

@@ -1,6 +1,7 @@
 //! Microbenchmarks of the hot paths (L3 + engine bridge), with real
-//! timing loops: per-call engine latency by bucket, selection costs per
-//! scheduler, heap throughput, native vs PJRT per-message cost.
+//! timing loops: per-call engine latency by bucket, the belief-cached
+//! parallel wave update vs the serial native path, selection costs per
+//! scheduler, heap throughput.
 //!
 //! These are the numbers the §Perf iteration log in EXPERIMENTS.md
 //! tracks. Run: `cargo bench --bench microbench`.
@@ -9,9 +10,12 @@ mod common;
 
 use bp_sched::collections::IndexedHeap;
 use bp_sched::datasets::DatasetSpec;
-use bp_sched::engine::{native::NativeEngine, pjrt::PjrtEngine, MessageEngine};
+use bp_sched::engine::{
+    native::NativeEngine, parallel::ParallelEngine, pjrt::PjrtEngine, MessageEngine,
+};
 use bp_sched::sched::SchedContext;
 use bp_sched::sched::{Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::parallel::default_threads;
 use bp_sched::util::stats::{fmt_duration, Summary};
 use bp_sched::util::{Rng, Stopwatch};
 
@@ -31,49 +35,105 @@ fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let cfg = common::bench_config();
-    println!("=== microbench (wallclock, single core) ===");
+    let threads = default_threads();
+    println!("=== microbench (wallclock, {threads} threads available) ===");
+
+    // PJRT needs built artifacts + the real backend; columns degrade to
+    // n/a when unavailable so the CPU numbers still run everywhere.
+    let mut pjrt = match PjrtEngine::from_default_dir() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            println!("note: pjrt engine unavailable ({e}); skipping pjrt columns");
+            None
+        }
+    };
+    let mut native = NativeEngine::new();
+    let mut par = ParallelEngine::new();
 
     // --- engine call latency by frontier size ---------------------------
     let mut rng = Rng::new(3);
     let g = DatasetSpec::Ising { n: 40, c: 2.5 }.generate(&mut rng)?;
     let logm = g.uniform_messages();
-    let mut pjrt = PjrtEngine::from_default_dir()?;
-    let mut native = NativeEngine::new();
     println!("\nengine candidates() latency, ising40 (M={}):", g.live_edges);
-    println!("{:>10} {:>14} {:>14} {:>12}", "frontier", "pjrt", "native", "pjrt ns/msg");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>10}",
+        "frontier", "pjrt", "native", "parallel", "par spdup"
+    );
     for &n in &[64usize, 256, 1024, 4096, 6240] {
         let frontier: Vec<i32> = (0..n as i32).collect();
-        let tp = time_it(3, 10, || {
-            pjrt.candidates(&g, logm.as_slice(), &frontier).unwrap();
+        let tp = pjrt.as_mut().map(|p| {
+            time_it(3, 10, || {
+                p.candidates(&g, logm.as_slice(), &frontier).unwrap();
+            })
         });
         let tn = time_it(3, 10, || {
             native.candidates(&g, logm.as_slice(), &frontier).unwrap();
         });
+        let tpar = time_it(3, 10, || {
+            par.candidates(&g, logm.as_slice(), &frontier).unwrap();
+        });
         println!(
-            "{:>10} {:>14} {:>14} {:>12.0}",
+            "{:>10} {:>14} {:>14} {:>14} {:>9.2}x",
             n,
-            fmt_duration(tp),
+            tp.map(fmt_duration).unwrap_or_else(|| "n/a".into()),
             fmt_duration(tn),
-            tp / n as f64 * 1e9
+            fmt_duration(tpar),
+            tn / tpar
         );
     }
 
-    // --- protein large-arity contraction --------------------------------
+    // --- belief-cached wave update: native vs parallel ------------------
+    // The acceptance bar for the parallel engine: >= 2x over the serial
+    // path on the protein graph at full (lbp) frontier with >= 4 threads.
     let mut rng = Rng::new(5);
     let gp = DatasetSpec::Protein.generate(&mut rng)?;
     let logmp = gp.uniform_messages();
     let frontier: Vec<i32> = (0..gp.live_edges as i32).collect();
-    let tp = time_it(2, 5, || {
-        pjrt.candidates(&gp, logmp.as_slice(), &frontier).unwrap();
-    });
-    let tn = time_it(2, 5, || {
+    println!(
+        "\nfull-frontier (lbp) wave update, protein (M={}, A=81):",
+        gp.live_edges
+    );
+    let tn = time_it(2, 7, || {
         native.candidates(&gp, logmp.as_slice(), &frontier).unwrap();
     });
+    println!("  native (serial, per-row gather)   {:>12}", fmt_duration(tn));
+    // sweep thread counts up to (not past) the actual core budget:
+    // oversubscribed numbers would misstate the engine's scaling
+    let mut sweep: Vec<usize> = [1usize, 2, 4, 8, threads]
+        .into_iter()
+        .filter(|&t| t <= threads)
+        .collect();
+    sweep.dedup();
+    for t in sweep {
+        let mut eng = ParallelEngine::with_threads(t);
+        let tt = time_it(2, 7, || {
+            eng.candidates(&gp, logmp.as_slice(), &frontier).unwrap();
+        });
+        println!(
+            "  parallel t={:<2} (belief cache)     {:>12}   {:>6.2}x vs native",
+            t,
+            fmt_duration(tt),
+            tn / tt
+        );
+    }
+    if let Some(p) = pjrt.as_mut() {
+        let tp = time_it(2, 5, || {
+            p.candidates(&gp, logmp.as_slice(), &frontier).unwrap();
+        });
+        println!("  pjrt (AOT artifacts)              {:>12}", fmt_duration(tp));
+    }
+
+    // --- marginals: shared belief cache vs per-vertex gather ------------
+    let tm_native = time_it(2, 7, || {
+        native.marginals(&gp, logmp.as_slice()).unwrap();
+    });
+    let tm_par = time_it(2, 7, || {
+        par.marginals(&gp, logmp.as_slice()).unwrap();
+    });
     println!(
-        "\nprotein full frontier (M={}, A=81): pjrt {} native {}",
-        gp.live_edges,
-        fmt_duration(tp),
-        fmt_duration(tn)
+        "\nmarginals(), protein: native {} parallel {}",
+        fmt_duration(tm_native),
+        fmt_duration(tm_par)
     );
 
     // --- scheduler selection cost ----------------------------------------

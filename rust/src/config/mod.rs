@@ -21,8 +21,11 @@ use crate::engine::{Semiring, UpdateOptions};
 pub enum EngineKind {
     /// AOT XLA programs through PJRT (the many-core path; default).
     Pjrt,
-    /// Pure-Rust reference engine (no artifacts needed).
+    /// Pure-Rust reference engine, serial (no artifacts needed).
     Native,
+    /// Belief-cached multi-threaded CPU engine — bit-identical to
+    /// `native`, chunk-parallel over the frontier (no artifacts needed).
+    Parallel,
 }
 
 /// Shared configuration for experiments and the CLI.
@@ -106,7 +109,8 @@ impl HarnessConfig {
                 self.engine = match value.as_str().context("engine")? {
                     "pjrt" => EngineKind::Pjrt,
                     "native" => EngineKind::Native,
-                    other => bail!("engine must be pjrt|native, got {other:?}"),
+                    "parallel" => EngineKind::Parallel,
+                    other => bail!("engine must be pjrt|native|parallel, got {other:?}"),
                 }
             }
             "mode" => {
@@ -228,6 +232,14 @@ mod tests {
         let mut c = HarnessConfig::default();
         c.apply_args(&args(&["--max-iterations", "77"])).unwrap();
         assert_eq!(c.max_iterations, 77);
+    }
+
+    #[test]
+    fn parallel_engine_key() {
+        let mut c = HarnessConfig::default();
+        c.apply_args(&args(&["--engine", "parallel"])).unwrap();
+        assert_eq!(c.engine, EngineKind::Parallel);
+        assert!(c.apply_args(&args(&["--engine", "cuda"])).is_err());
     }
 
     #[test]

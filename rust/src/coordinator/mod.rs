@@ -223,9 +223,15 @@ pub fn run(
     let mut message_updates = 0u64;
     let mut engine_calls = 0u64;
 
+    // One candidate batch reused for every engine call of the run: the
+    // engines resize it in place, so the hot loop does not allocate.
+    let mut batch = crate::engine::CandidateBatch::default();
+
     // Initial residual computation: all live edges.
     let init_frontier: Vec<i32> = (0..live as i32).collect();
-    let batch = phases.time("refresh", || engine.candidates(mrf, &st.logm, &init_frontier))?;
+    phases.time("refresh", || {
+        engine.candidates_into(mrf, &st.logm, &init_frontier, &mut batch)
+    })?;
     engine_calls += 1;
     if let Some(m) = &model {
         let c = m.update_cost(live, arity, degree);
@@ -284,8 +290,9 @@ pub fn run(
             debug_assert!(wave.iter().all(|&e| (e as usize) < live));
             let needs_compute = wave.iter().any(|&e| st.dirty[e as usize]);
             if needs_compute {
-                let batch =
-                    phases.time("update", || engine.candidates(mrf, &st.logm, wave))?;
+                phases.time("update", || {
+                    engine.candidates_into(mrf, &st.logm, wave, &mut batch)
+                })?;
                 engine_calls += 1;
                 phases.time("commit", || st.commit(mrf, wave, Some(&batch)));
             } else {
@@ -303,8 +310,9 @@ pub fn run(
         // 3. refresh dirtied candidates/residuals (one bulk call)
         if !st.dirty_list.is_empty() {
             let dirty_list = std::mem::take(&mut st.dirty_list);
-            let batch =
-                phases.time("refresh", || engine.candidates(mrf, &st.logm, &dirty_list))?;
+            phases.time("refresh", || {
+                engine.candidates_into(mrf, &st.logm, &dirty_list, &mut batch)
+            })?;
             engine_calls += 1;
             for (i, &ei) in dirty_list.iter().enumerate() {
                 let e = ei as usize;

@@ -1,0 +1,272 @@
+//! Shared per-vertex belief cache — the gather-once/scatter-many core of
+//! the wave update.
+//!
+//! The BP candidate for directed edge `e = (u -> v)` is a contraction of
+//! `cavity = belief_u - logm[rev[e]]`, where
+//! `belief_u = log_unary[u] + Σ_{k ∈ in(u)} logm[k]`. The seed engine
+//! recomputed `belief_u` from scratch for every candidate row — an
+//! O(Σ_v deg(v)² · A) sweep per full frontier. Gathering all beliefs once
+//! per wave costs O(E · A) and every row then derives its cavity with a
+//! single subtraction, which is exactly the structure Residual Splash and
+//! the GPU-LBP kernels exploit (and what the paper's bulk update assumes).
+//!
+//! ## Snapshot invariant
+//!
+//! A [`BeliefCache`] is valid **only** for the `logm` snapshot it was
+//! gathered from: committing any message row invalidates the beliefs of
+//! that row's destination vertex. Engines therefore re-gather at the top
+//! of every `candidates` call (bulk-synchronous semantics — all rows of a
+//! wave read the same state) and never reuse a cache across commits.
+//!
+//! ## Bit-exactness
+//!
+//! [`BeliefCache::gather`] accumulates incoming messages in `in_edges`
+//! order with the same sequential f32 adds as
+//! [`super::native::NativeEngine`]'s per-row gather, and
+//! [`candidate_row_from_belief`] performs the identical clamped-LSE / max
+//! contraction, normalization, damping, and residual ops in the identical
+//! order. Parity is asserted bitwise in `tests/parallel_parity.rs`.
+
+use super::{Semiring, UpdateOptions};
+use crate::graph::Mrf;
+use crate::NEG;
+
+/// In-place log-space normalization of the valid lanes.
+#[inline]
+pub(crate) fn normalize(row: &mut [f32]) {
+    let mut mx = NEG;
+    for &o in row.iter() {
+        if o > mx {
+            mx = o;
+        }
+    }
+    let mut s = 0.0f32;
+    for &o in row.iter() {
+        s += (o - mx).exp();
+    }
+    let z = mx + s.ln();
+    for o in row.iter_mut() {
+        *o -= z;
+    }
+}
+
+/// Reusable per-vertex belief accumulator `[live_vertices * A]`.
+///
+/// Owned by an engine and refilled by [`gather`](Self::gather) — no
+/// per-call allocation once the backing vector has grown to the largest
+/// envelope seen.
+#[derive(Debug, Default)]
+pub struct BeliefCache {
+    belief: Vec<f32>,
+    arity: usize,
+}
+
+impl BeliefCache {
+    pub fn new() -> BeliefCache {
+        BeliefCache::default()
+    }
+
+    /// Recompute every live vertex's belief from `logm` in one O(E·A)
+    /// pass. Padded arity lanes come out as `NEG` (log-unary padding)
+    /// plus zeros (message padding), matching the per-row gather.
+    pub fn gather(&mut self, mrf: &Mrf, logm: &[f32]) {
+        let a = mrf.max_arity;
+        self.arity = a;
+        self.belief.clear();
+        self.belief.resize(mrf.live_vertices * a, 0.0);
+        for v in 0..mrf.live_vertices {
+            let row = &mut self.belief[v * a..(v + 1) * a];
+            row.copy_from_slice(&mrf.log_unary[v * a..(v + 1) * a]);
+            for k in mrf.incoming(v) {
+                let m = &logm[k * a..(k + 1) * a];
+                for (b, r) in row.iter_mut().zip(m) {
+                    *b += r;
+                }
+            }
+        }
+    }
+
+    /// Belief row of vertex `v` (full padded width).
+    #[inline]
+    pub fn row(&self, v: usize) -> &[f32] {
+        &self.belief[v * self.arity..(v + 1) * self.arity]
+    }
+
+    /// Write normalized vertex marginals (probabilities) for every live
+    /// vertex into `out` (`[>= live_vertices * A]`, row-major). Rows of
+    /// padding vertices are left untouched.
+    pub fn write_marginals(&self, mrf: &Mrf, out: &mut [f32]) {
+        let a = self.arity;
+        for v in 0..mrf.live_vertices {
+            let av = mrf.arity_of(v);
+            let b = self.row(v);
+            let mx = b[..av].iter().copied().fold(NEG, f32::max);
+            let mut total = 0.0f32;
+            for x in 0..av {
+                let p = (b[x] - mx).exp();
+                out[v * a + x] = p;
+                total += p;
+            }
+            for x in 0..av {
+                out[v * a + x] /= total.max(1e-30);
+            }
+        }
+    }
+}
+
+/// Gather one vertex's belief into caller-owned scratch:
+/// `belief_v = log_unary[v] + Σ_{k ∈ in(v)} logm[k]`, accumulated in
+/// `in_edges` order — op-for-op the same as [`BeliefCache::gather`]'s
+/// per-vertex body, so both paths produce identical bits.
+#[inline]
+pub(crate) fn gather_vertex(mrf: &Mrf, logm: &[f32], v: usize, belief: &mut Vec<f32>) {
+    let a = mrf.max_arity;
+    belief.clear();
+    belief.extend_from_slice(&mrf.log_unary[v * a..v * a + a]);
+    for k in mrf.incoming(v) {
+        let row = &logm[k * a..k * a + a];
+        for (b, r) in belief.iter_mut().zip(row) {
+            *b += r;
+        }
+    }
+}
+
+/// Candidate row for edge `e` given the gathered belief row of `src[e]`.
+///
+/// `cavity` is caller-owned scratch (per thread in the parallel engine);
+/// `out` is the full-width destination row. Returns the max-norm residual
+/// against the current `logm` row. Must stay op-for-op identical to
+/// [`super::native::NativeEngine::candidate_row`] — both call this.
+pub(crate) fn candidate_row_from_belief(
+    mrf: &Mrf,
+    logm: &[f32],
+    belief_u: &[f32],
+    opts: UpdateOptions,
+    e: usize,
+    cavity: &mut Vec<f32>,
+    out: &mut [f32],
+) -> f32 {
+    let a_max = mrf.max_arity;
+    debug_assert_eq!(out.len(), a_max);
+    let u = mrf.src[e] as usize;
+    let v = mrf.dst[e] as usize;
+    let (au, av) = (mrf.arity_of(u), mrf.arity_of(v));
+
+    // cavity = belief_u - logm[rev[e]]
+    let r = mrf.rev[e] as usize;
+    let rrow = &logm[r * a_max..(r + 1) * a_max];
+    cavity.clear();
+    cavity.extend(belief_u.iter().zip(rrow).map(|(b, m)| b - m));
+
+    // new[b] = contract_a(pair[a, b] + cavity[a]) over valid source
+    // lanes: LSE for sum-product, max for max-product (MAP)
+    let pair = &mrf.log_pair[e * a_max * a_max..(e + 1) * a_max * a_max];
+    match opts.semiring {
+        Semiring::SumProduct => {
+            for b in 0..av {
+                let mut mx = NEG;
+                for a in 0..au {
+                    let t = pair[a * a_max + b] + cavity[a];
+                    if t > mx {
+                        mx = t;
+                    }
+                }
+                let mut s = 0.0f32;
+                for a in 0..au {
+                    s += (pair[a * a_max + b] + cavity[a] - mx).exp();
+                }
+                out[b] = mx + s.ln();
+            }
+        }
+        Semiring::MaxProduct => {
+            for b in 0..av {
+                let mut mx = NEG;
+                for a in 0..au {
+                    let t = pair[a * a_max + b] + cavity[a];
+                    if t > mx {
+                        mx = t;
+                    }
+                }
+                out[b] = mx;
+            }
+        }
+    }
+    normalize(&mut out[..av]);
+    // log-domain damping: geometric mixing, renormalized (matches the
+    // AOT program in model.py)
+    let lam = opts.damping;
+    if lam > 0.0 {
+        let old = &logm[e * a_max..(e + 1) * a_max];
+        for (o, &prev) in out[..av].iter_mut().zip(old) {
+            *o = (1.0 - lam) * *o + lam * prev;
+        }
+        normalize(&mut out[..av]);
+    }
+    for o in out[av..].iter_mut() {
+        *o = 0.0;
+    }
+
+    // residual vs current row
+    let old = &logm[e * a_max..(e + 1) * a_max];
+    out.iter()
+        .zip(old)
+        .map(|(n, o)| (n - o).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{ising, protein};
+    use crate::util::Rng;
+
+    #[test]
+    fn gathered_beliefs_match_per_vertex_gather() {
+        let mut rng = Rng::new(11);
+        let g = ising::generate("i", 6, 2.0, &mut rng).unwrap();
+        let m = g.uniform_messages();
+        let a = g.max_arity;
+        let mut cache = BeliefCache::new();
+        cache.gather(&g, m.as_slice());
+        for v in 0..g.live_vertices {
+            let mut b = g.log_unary[v * a..(v + 1) * a].to_vec();
+            for k in g.incoming(v) {
+                for (bi, r) in b.iter_mut().zip(&m.as_slice()[k * a..(k + 1) * a]) {
+                    *bi += r;
+                }
+            }
+            assert_eq!(cache.row(v), &b[..], "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn marginals_rows_are_distributions() {
+        let mut rng = Rng::new(12);
+        let g = protein::generate("p", &Default::default(), &mut rng).unwrap();
+        let m = g.uniform_messages();
+        let mut cache = BeliefCache::new();
+        cache.gather(&g, m.as_slice());
+        let mut out = vec![0.0f32; g.num_vertices * g.max_arity];
+        cache.write_marginals(&g, &mut out);
+        for v in 0..g.live_vertices {
+            let av = g.arity_of(v);
+            let row = &out[v * g.max_arity..v * g.max_arity + av];
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "vertex {v}: {s}");
+            assert!(row.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn cache_reuse_across_graphs_resizes() {
+        let mut rng = Rng::new(13);
+        let big = ising::generate("i", 8, 2.0, &mut rng).unwrap();
+        let small = ising::generate("i", 3, 2.0, &mut rng).unwrap();
+        let mut cache = BeliefCache::new();
+        cache.gather(&big, big.uniform_messages().as_slice());
+        cache.gather(&small, small.uniform_messages().as_slice());
+        // belief of the small graph's last vertex is in range and correct
+        let v = small.live_vertices - 1;
+        assert_eq!(cache.row(v).len(), small.max_arity);
+    }
+}

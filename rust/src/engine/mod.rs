@@ -7,12 +7,18 @@
 //! * [`native::NativeEngine`] — straightforward vectorized Rust. Serves as
 //!   the correctness oracle and as the compute path of the *serial* SRBP
 //!   baseline (the paper's CPU comparator).
-//! * [`pjrt::PjrtEngine`] — the many-core path: executes the AOT-compiled
-//!   XLA programs (JAX/Pallas-authored) through the PJRT CPU client with
-//!   bucketed frontier capacities. This is the stand-in for the paper's
-//!   CUDA implementation.
+//! * [`parallel::ParallelEngine`] — the many-core CPU path: one O(E·A)
+//!   belief gather per wave ([`belief::BeliefCache`]), then the frontier
+//!   fanned across threads in chunks. Bit-identical to the native engine
+//!   at any thread count.
+//! * [`pjrt::PjrtEngine`] — the accelerator path: executes the
+//!   AOT-compiled XLA programs (JAX/Pallas-authored) through the PJRT
+//!   CPU client with bucketed frontier capacities. This is the stand-in
+//!   for the paper's CUDA implementation.
 
+pub mod belief;
 pub mod native;
+pub mod parallel;
 pub mod pjrt;
 
 use crate::graph::Mrf;
@@ -85,8 +91,26 @@ impl CandidateBatch {
 /// buffers / executable caches.
 pub trait MessageEngine {
     /// Evaluate the BP update for every edge id in `frontier` against the
-    /// *current* messages (bulk-synchronous: all rows read the same state).
-    fn candidates(&mut self, mrf: &Mrf, logm: &[f32], frontier: &[i32]) -> Result<CandidateBatch>;
+    /// *current* messages (bulk-synchronous: all rows read the same
+    /// state), writing into a caller-owned batch. Implementations resize
+    /// `out` to the frontier (reusing its capacity) and overwrite every
+    /// slot — the coordinator passes one batch for the whole run, so the
+    /// hot loop performs no per-call allocation.
+    fn candidates_into(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        frontier: &[i32],
+        out: &mut CandidateBatch,
+    ) -> Result<()>;
+
+    /// Allocating convenience wrapper around
+    /// [`candidates_into`](Self::candidates_into).
+    fn candidates(&mut self, mrf: &Mrf, logm: &[f32], frontier: &[i32]) -> Result<CandidateBatch> {
+        let mut out = CandidateBatch::default();
+        self.candidates_into(mrf, logm, frontier, &mut out)?;
+        Ok(out)
+    }
 
     /// Normalized vertex marginals `[V * A]` (probabilities).
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>>;

@@ -11,28 +11,9 @@
 
 use anyhow::Result;
 
-use super::{CandidateBatch, MessageEngine, Semiring, UpdateOptions};
-
-/// In-place log-space normalization of the valid lanes.
-#[inline]
-fn normalize(row: &mut [f32]) {
-    let mut mx = crate::NEG;
-    for &o in row.iter() {
-        if o > mx {
-            mx = o;
-        }
-    }
-    let mut s = 0.0f32;
-    for &o in row.iter() {
-        s += (o - mx).exp();
-    }
-    let z = mx + s.ln();
-    for o in row.iter_mut() {
-        *o -= z;
-    }
-}
+use super::belief::{candidate_row_from_belief, gather_vertex, BeliefCache};
+use super::{CandidateBatch, MessageEngine, UpdateOptions};
 use crate::graph::Mrf;
-use crate::NEG;
 
 /// See module docs.
 #[derive(Debug, Default)]
@@ -41,6 +22,8 @@ pub struct NativeEngine {
     /// Scratch: belief accumulator reused across calls.
     belief: Vec<f32>,
     cavity: Vec<f32>,
+    /// Scratch: full belief table, used by `marginals`.
+    cache: BeliefCache,
 }
 
 impl NativeEngine {
@@ -60,127 +43,46 @@ impl NativeEngine {
     /// clamped-LSE contraction + normalization, all in f32 like the
     /// artifact programs.
     pub fn candidate_row(&mut self, mrf: &Mrf, logm: &[f32], e: usize, out: &mut [f32]) -> f32 {
-        let a_max = mrf.max_arity;
-        debug_assert_eq!(out.len(), a_max);
-        let u = mrf.src[e] as usize;
-        let v = mrf.dst[e] as usize;
-        let (au, av) = (mrf.arity_of(u), mrf.arity_of(v));
-
-        // belief_u = log_unary[u] + sum of incoming messages (valid lanes)
-        self.belief.clear();
-        self.belief
-            .extend_from_slice(&mrf.log_unary[u * a_max..u * a_max + a_max]);
-        for k in mrf.incoming(u) {
-            let row = &logm[k * a_max..k * a_max + a_max];
-            for (b, r) in self.belief.iter_mut().zip(row) {
-                *b += r;
-            }
-        }
-        // cavity = belief - logm[rev[e]]
-        let r = mrf.rev[e] as usize;
-        let rrow = &logm[r * a_max..r * a_max + a_max];
-        self.cavity.clear();
-        self.cavity
-            .extend(self.belief.iter().zip(rrow).map(|(b, m)| b - m));
-
-        // new[b] = contract_a(pair[a, b] + cavity[a]) over valid source
-        // lanes: LSE for sum-product, max for max-product (MAP)
-        let pair = &mrf.log_pair[e * a_max * a_max..(e + 1) * a_max * a_max];
-        match self.opts.semiring {
-            Semiring::SumProduct => {
-                for b in 0..av {
-                    let mut mx = NEG;
-                    for a in 0..au {
-                        let t = pair[a * a_max + b] + self.cavity[a];
-                        if t > mx {
-                            mx = t;
-                        }
-                    }
-                    let mut s = 0.0f32;
-                    for a in 0..au {
-                        s += (pair[a * a_max + b] + self.cavity[a] - mx).exp();
-                    }
-                    out[b] = mx + s.ln();
-                }
-            }
-            Semiring::MaxProduct => {
-                for b in 0..av {
-                    let mut mx = NEG;
-                    for a in 0..au {
-                        let t = pair[a * a_max + b] + self.cavity[a];
-                        if t > mx {
-                            mx = t;
-                        }
-                    }
-                    out[b] = mx;
-                }
-            }
-        }
-        normalize(&mut out[..av]);
-        // log-domain damping: geometric mixing, renormalized (matches the
-        // AOT program in model.py)
-        let lam = self.opts.damping;
-        if lam > 0.0 {
-            let old = &logm[e * a_max..(e + 1) * a_max];
-            for (o, &prev) in out[..av].iter_mut().zip(old) {
-                *o = (1.0 - lam) * *o + lam * prev;
-            }
-            normalize(&mut out[..av]);
-        }
-        for o in out[av..].iter_mut() {
-            *o = 0.0;
-        }
-
-        // residual vs current row
-        let old = &logm[e * a_max..(e + 1) * a_max];
-        out.iter()
-            .zip(old)
-            .map(|(n, o)| (n - o).abs())
-            .fold(0.0f32, f32::max)
+        debug_assert_eq!(out.len(), mrf.max_arity);
+        // belief_u = log_unary[u] + sum of incoming messages, then
+        // cavity + contraction + normalize + damping + residual: the op
+        // sequence shared bit-for-bit with the parallel engine.
+        gather_vertex(mrf, logm, mrf.src[e] as usize, &mut self.belief);
+        candidate_row_from_belief(mrf, logm, &self.belief, self.opts, e, &mut self.cavity, out)
     }
 }
 
 impl MessageEngine for NativeEngine {
-    fn candidates(&mut self, mrf: &Mrf, logm: &[f32], frontier: &[i32]) -> Result<CandidateBatch> {
+    fn candidates_into(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        frontier: &[i32],
+        out: &mut CandidateBatch,
+    ) -> Result<()> {
         let a_max = mrf.max_arity;
-        let mut batch = CandidateBatch {
-            new_m: vec![0.0; frontier.len() * a_max],
-            residuals: vec![0.0; frontier.len()],
-        };
+        // clear + resize zero-fills within retained capacity — padded
+        // (-1) slots must come out as zero rows, not stale data.
+        out.new_m.clear();
+        out.new_m.resize(frontier.len() * a_max, 0.0);
+        out.residuals.clear();
+        out.residuals.resize(frontier.len(), 0.0);
         for (i, &f) in frontier.iter().enumerate() {
             if f < 0 {
                 continue; // padded slot (callers normally pass unpadded)
             }
-            let out = &mut batch.new_m[i * a_max..(i + 1) * a_max];
-            batch.residuals[i] = self.candidate_row(mrf, logm, f as usize, out);
+            let row = &mut out.new_m[i * a_max..(i + 1) * a_max];
+            out.residuals[i] = self.candidate_row(mrf, logm, f as usize, row);
         }
-        Ok(batch)
+        Ok(())
     }
 
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {
-        let a_max = mrf.max_arity;
-        let mut out = vec![0.0f32; mrf.num_vertices * a_max];
-        for v in 0..mrf.live_vertices {
-            let av = mrf.arity_of(v);
-            let mut b: Vec<f32> =
-                mrf.log_unary[v * a_max..v * a_max + a_max].to_vec();
-            for k in mrf.incoming(v) {
-                let row = &logm[k * a_max..k * a_max + a_max];
-                for (bi, r) in b.iter_mut().zip(row) {
-                    *bi += r;
-                }
-            }
-            let mx = b[..av].iter().copied().fold(NEG, f32::max);
-            let mut total = 0.0f32;
-            for x in 0..av {
-                let p = (b[x] - mx).exp();
-                out[v * a_max + x] = p;
-                total += p;
-            }
-            for x in 0..av {
-                out[v * a_max + x] /= total.max(1e-30);
-            }
-        }
+        // one O(E·A) gather into engine-owned scratch (no per-vertex
+        // allocation), then exp-normalize per vertex
+        self.cache.gather(mrf, logm);
+        let mut out = vec![0.0f32; mrf.num_vertices * mrf.max_arity];
+        self.cache.write_marginals(mrf, &mut out);
         Ok(out)
     }
 

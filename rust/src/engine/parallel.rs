@@ -1,0 +1,224 @@
+//! Multi-threaded wave engine: belief-cached candidate evaluation fanned
+//! across CPU cores.
+//!
+//! The many-core thesis of the paper is that a *wave* of messages can be
+//! updated bulk-parallel because every row of the wave reads the same
+//! message snapshot. This engine is the CPU realization of that claim:
+//!
+//! 1. **Gather once** — one O(E·A) pass fills the shared
+//!    [`BeliefCache`] (`belief_v = log_unary[v] + Σ incoming logm`),
+//!    replacing the seed's per-row re-gather (O(Σ deg(v)²·A) per full
+//!    frontier);
+//! 2. **Scatter many** — the frontier is split into chunks of
+//!    [`CHUNK_ROWS`] rows and fanned across threads with
+//!    [`par_rows`]; each row derives its cavity as
+//!    `belief[src[e]] − logm[rev[e]]` and runs the clamped-LSE / max
+//!    contraction into its own slot of the output batch, with per-thread
+//!    cavity scratch and no locks on the hot path.
+//!
+//! ## Determinism and parity
+//!
+//! Rows are computed independently in the exact op order of
+//! [`NativeEngine`](super::native::NativeEngine) (both engines call
+//! [`candidate_row_from_belief`]), and each row writes only its own
+//! disjoint output slot — so candidates, residuals, and marginals are
+//! **bit-identical** to the native engine at *any* thread count, and two
+//! runs at the same or different thread counts produce identical bits
+//! (`tests/parallel_parity.rs`).
+//!
+//! ## Belief-cache invariant
+//!
+//! The cache is valid only for the `logm` snapshot it was gathered from
+//! (see [`super::belief`] module docs); `candidates` and `marginals`
+//! re-gather on entry, which keeps the engine correct under the
+//! coordinator's commit-then-refresh loop at ~1/deg of the old gather
+//! cost. Frontiers smaller than the vertex count skip the full-table
+//! gather entirely and fall back to the native-style per-row gather
+//! (still threaded, still bit-identical) — otherwise narrow waves (rbp
+//! top-k, dirty refreshes) would pay O(E·A) for O(k·deg·A) of work.
+
+use anyhow::Result;
+
+use super::belief::{candidate_row_from_belief, gather_vertex, BeliefCache};
+use super::{CandidateBatch, MessageEngine, UpdateOptions};
+use crate::graph::Mrf;
+use crate::util::parallel::{default_threads, par_rows};
+
+/// Rows per work unit: large enough to amortize the atomic chunk claim,
+/// small enough to balance the variable-arity rows of protein graphs.
+const CHUNK_ROWS: usize = 128;
+
+/// Minimum rows of work per spawned thread: below this, spawn/join
+/// overhead (~tens of µs) exceeds the row work, so the effective thread
+/// count scales down with the frontier (1 thread under 128 rows).
+const MIN_ROWS_PER_THREAD: usize = 64;
+
+/// See module docs.
+#[derive(Debug)]
+pub struct ParallelEngine {
+    opts: UpdateOptions,
+    threads: usize,
+    cache: BeliefCache,
+}
+
+impl Default for ParallelEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ParallelEngine {
+    /// Engine over `BP_SCHED_THREADS` (or all available) worker threads.
+    pub fn new() -> ParallelEngine {
+        Self::with_threads(default_threads())
+    }
+
+    /// Engine with an explicit worker-thread count (tests, benches).
+    pub fn with_threads(threads: usize) -> ParallelEngine {
+        ParallelEngine {
+            opts: UpdateOptions::default(),
+            threads: threads.max(1),
+            cache: BeliefCache::new(),
+        }
+    }
+
+    /// Engine with explicit semiring / damping options.
+    pub fn with_options(opts: UpdateOptions) -> ParallelEngine {
+        let mut e = Self::new();
+        e.opts = opts;
+        e
+    }
+
+    /// Engine with explicit options and thread count.
+    pub fn with_options_threads(opts: UpdateOptions, threads: usize) -> ParallelEngine {
+        let mut e = Self::with_threads(threads);
+        e.opts = opts;
+        e
+    }
+
+    /// Configured worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl MessageEngine for ParallelEngine {
+    fn candidates_into(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        frontier: &[i32],
+        out: &mut CandidateBatch,
+    ) -> Result<()> {
+        let a = mrf.max_arity;
+        let n = frontier.len();
+        // clear + resize zero-fills within retained capacity: padded
+        // (-1) slots must come out as zero rows, not stale data.
+        out.new_m.clear();
+        out.new_m.resize(n * a, 0.0);
+        out.residuals.clear();
+        out.residuals.resize(n, 0.0);
+
+        // Gather-scope policy: the full-table gather costs O(E·A); the
+        // per-row gather costs O(Σ deg(src) · A) ≈ n·deg·A. With
+        // E = V·deg they cross at n ≈ V, so small frontiers (rbp top-k
+        // waves, dirty-list refreshes after narrow waves) keep the
+        // native-style per-row gather and only wave-scale frontiers pay
+        // for the shared cache. Both paths are bit-identical.
+        let use_cache = n >= mrf.live_vertices;
+        if use_cache {
+            self.cache.gather(mrf, logm);
+        }
+        let cache = &self.cache;
+        let opts = self.opts;
+        let threads = self.threads.min(n / MIN_ROWS_PER_THREAD).max(1);
+        par_rows(
+            n,
+            CHUNK_ROWS,
+            threads,
+            &mut out.new_m,
+            a,
+            &mut out.residuals,
+            || (Vec::with_capacity(a), Vec::with_capacity(a)),
+            |(belief, cavity), i, row| {
+                let e = frontier[i];
+                if e < 0 {
+                    return 0.0; // padded slot: row already zeroed
+                }
+                let e = e as usize;
+                let u = mrf.src[e] as usize;
+                let belief_u: &[f32] = if use_cache {
+                    cache.row(u)
+                } else {
+                    gather_vertex(mrf, logm, u, belief);
+                    belief
+                };
+                candidate_row_from_belief(mrf, logm, belief_u, opts, e, cavity, row)
+            },
+        );
+        Ok(())
+    }
+
+    fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {
+        self.cache.gather(mrf, logm);
+        let mut out = vec![0.0f32; mrf.num_vertices * mrf.max_arity];
+        self.cache.write_marginals(mrf, &mut out);
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{ising, protein};
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_native_on_full_frontier() {
+        let mut rng = Rng::new(21);
+        let g = ising::generate("i", 8, 2.5, &mut rng).unwrap();
+        let m = g.uniform_messages();
+        let frontier: Vec<i32> = (0..g.live_edges as i32).collect();
+        let mut native = super::super::native::NativeEngine::new();
+        let mut par = ParallelEngine::with_threads(4);
+        let a = native.candidates(&g, m.as_slice(), &frontier).unwrap();
+        let b = par.candidates(&g, m.as_slice(), &frontier).unwrap();
+        assert_eq!(a.new_m, b.new_m);
+        assert_eq!(a.residuals, b.residuals);
+    }
+
+    #[test]
+    fn padded_slots_zeroed_on_reuse() {
+        let mut rng = Rng::new(22);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let m = g.uniform_messages();
+        let mut par = ParallelEngine::with_threads(2);
+        let a = g.max_arity;
+        // first call fills rows with real data
+        let full: Vec<i32> = (0..g.live_edges as i32).collect();
+        let mut batch = CandidateBatch::default();
+        par.candidates_into(&g, m.as_slice(), &full, &mut batch).unwrap();
+        // second call reuses the batch with a padded frontier
+        let padded: Vec<i32> = vec![0, -1, 3];
+        par.candidates_into(&g, m.as_slice(), &padded, &mut batch).unwrap();
+        assert_eq!(batch.residuals.len(), 3);
+        assert!(batch.row(1, a).iter().all(|&x| x == 0.0));
+        assert_eq!(batch.residuals[1], 0.0);
+    }
+
+    #[test]
+    fn marginals_match_native_bitwise() {
+        let mut rng = Rng::new(23);
+        let g = protein::generate("p", &Default::default(), &mut rng).unwrap();
+        let m = g.uniform_messages();
+        let mut native = super::super::native::NativeEngine::new();
+        let mut par = ParallelEngine::with_threads(8);
+        let a = native.marginals(&g, m.as_slice()).unwrap();
+        let b = par.marginals(&g, m.as_slice()).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -112,7 +112,13 @@ impl PjrtEngine {
 }
 
 impl MessageEngine for PjrtEngine {
-    fn candidates(&mut self, mrf: &Mrf, logm: &[f32], frontier: &[i32]) -> Result<CandidateBatch> {
+    fn candidates_into(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        frontier: &[i32],
+        out: &mut CandidateBatch,
+    ) -> Result<()> {
         let a = mrf.max_arity;
         let n = frontier.len();
         let class = self.rt.class(&mrf.class_name)?;
@@ -160,7 +166,11 @@ impl MessageEngine for PjrtEngine {
         let mut residuals = res_lit.to_vec::<f32>()?;
         new_m.truncate(n * a);
         residuals.truncate(n);
-        Ok(CandidateBatch { new_m, residuals })
+        // device transfers allocate host vectors anyway; hand them to the
+        // caller's batch instead of copying into its scratch
+        out.new_m = new_m;
+        out.residuals = residuals;
+        Ok(())
     }
 
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {

@@ -15,7 +15,9 @@ use crate::config::{EngineKind, HarnessConfig};
 use crate::coordinator::campaign::{run_campaign, Campaign};
 use crate::coordinator::{run, RunParams};
 use crate::datasets::{Dataset, DatasetSpec};
-use crate::engine::{native::NativeEngine, pjrt::PjrtEngine, MessageEngine};
+use crate::engine::{
+    native::NativeEngine, parallel::ParallelEngine, pjrt::PjrtEngine, MessageEngine,
+};
 use crate::sched::{srbp, Scheduler};
 
 /// Ising grid side used for the paper's 100x100 experiments.
@@ -73,6 +75,7 @@ pub fn make_engine(cfg: &HarnessConfig) -> Result<Box<dyn MessageEngine>> {
     Ok(match cfg.engine {
         EngineKind::Pjrt => Box::new(PjrtEngine::from_default_dir_with(opts)?),
         EngineKind::Native => Box::new(NativeEngine::with_options(opts)),
+        EngineKind::Parallel => Box::new(ParallelEngine::with_options(opts)),
     })
 }
 

@@ -11,10 +11,9 @@
 
 use anyhow::{bail, Context, Result};
 
-use bp_sched::config::{EngineKind, HarnessConfig};
+use bp_sched::config::HarnessConfig;
 use bp_sched::coordinator::run;
 use bp_sched::datasets::{serialize, DatasetSpec};
-use bp_sched::engine::{native::NativeEngine, pjrt::PjrtEngine, MessageEngine};
 use bp_sched::harness;
 use bp_sched::runtime::{default_artifacts_dir, Manifest};
 use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
@@ -46,7 +45,8 @@ COMMON FLAGS (also settable via --config file.toml):
   --eps X               convergence threshold (default 1e-4)
   --timeout S           wallclock budget per run
   --srbp-timeout S      serial-baseline budget (paper: 90)
-  --engine pjrt|native  update engine (default pjrt)
+  --engine pjrt|native|parallel   update engine (default pjrt;
+                        `parallel` = belief-cached multi-threaded CPU)
   --out-dir DIR         JSON report directory (default results/)
 
 RUN FLAGS:
@@ -173,12 +173,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let result = if flags.scheduler == "srbp" {
         srbp::run_serial(&graph, &harness::srbp_params(&cfg))?
     } else {
-        let mut engine: Box<dyn MessageEngine> = match cfg.engine {
-            EngineKind::Pjrt => {
-                Box::new(PjrtEngine::from_default_dir_with(cfg.update_options())?)
-            }
-            EngineKind::Native => Box::new(NativeEngine::with_options(cfg.update_options())),
-        };
+        let mut engine = harness::make_engine(&cfg)?;
         let mut sched: Box<dyn Scheduler> = match flags.scheduler.as_str() {
             "lbp" => Box::new(Lbp::new()),
             "rbp" => Box::new(Rbp::new(flags.p)),

@@ -69,7 +69,14 @@ impl Scheduler for Rnbp {
         let p = if use_low { self.low_p } else { self.high_p };
 
         let m = ctx.mrf.live_edges;
-        let mut frontier = Vec::with_capacity((ctx.unconverged as f64 * p) as usize + 8);
+        // p >= 1.0 keeps the whole ε-filtered set, whose size is known
+        // exactly; only the RNG path needs the estimated headroom.
+        let cap = if p >= 1.0 {
+            ctx.unconverged
+        } else {
+            (ctx.unconverged as f64 * p) as usize + 8
+        };
+        let mut frontier = Vec::with_capacity(cap);
         if p >= 1.0 {
             // full update of the ε-filtered frontier — no RNG draws
             for (e, &r) in ctx.residuals[..m].iter().enumerate() {
@@ -124,6 +131,17 @@ mod tests {
             assert!(res[e as usize] >= 1e-4);
         }
         assert_eq!(waves[0].len(), g.live_edges / 2); // high_p=1.0 first iter
+    }
+
+    #[test]
+    fn no_rng_path_sizes_frontier_exactly() {
+        // p >= 1.0: the ε-filtered count is known, so the frontier must
+        // not over-reserve (the old estimate added +8 headroom).
+        let (g, res) = hot_graph();
+        let mut s = Rnbp::new(0.5, 1.0, 5);
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        assert_eq!(waves[0].len(), g.live_edges);
+        assert!(waves[0].capacity() <= g.live_edges, "over-reserved");
     }
 
     #[test]

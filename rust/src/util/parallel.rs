@@ -68,6 +68,96 @@ where
     slots.into_iter().map(|s| s.expect("slot filled")).collect()
 }
 
+/// Chunked parallel fill of per-item output rows with per-worker scratch
+/// — the engine-side fan-out behind
+/// [`crate::engine::parallel::ParallelEngine`].
+///
+/// Items `0..n` are split into chunks of `chunk` consecutive items;
+/// workers claim whole chunks from an atomic counter (amortizing the
+/// claim over `chunk` items while still balancing uneven row costs).
+/// Item `i` exclusively owns `rows[i*width..(i+1)*width]` and
+/// `residuals[i]`; `f(scratch, i, row) -> residual` fills them. Each
+/// worker gets its own scratch from `mk_scratch`, so `f` needs no
+/// interior mutability.
+///
+/// Deterministic by construction: every item is computed independently
+/// and written to its own disjoint slot, so the output is bit-identical
+/// for any `threads` / `chunk` / schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn par_rows<S, Mk, F>(
+    n: usize,
+    chunk: usize,
+    threads: usize,
+    rows: &mut [f32],
+    width: usize,
+    residuals: &mut [f32],
+    mk_scratch: Mk,
+    f: F,
+) where
+    Mk: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [f32]) -> f32 + Sync,
+{
+    assert_eq!(rows.len(), n * width, "rows buffer sized n * width");
+    assert_eq!(residuals.len(), n, "residuals buffer sized n");
+    if n == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let nchunks = n.div_ceil(chunk);
+    let threads = threads.clamp(1, nchunks);
+    if threads == 1 {
+        let mut scratch = mk_scratch();
+        for i in 0..n {
+            residuals[i] = f(&mut scratch, i, &mut rows[i * width..(i + 1) * width]);
+        }
+        return;
+    }
+
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let rows_ptr = SendPtr(rows.as_mut_ptr());
+    let res_ptr = SendPtr(residuals.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let mk_scratch = &mk_scratch;
+            let rows_ptr = rows_ptr;
+            let res_ptr = res_ptr;
+            scope.spawn(move || {
+                // Force capture of the SendPtr wrappers themselves (see
+                // par_map above for why).
+                let rows_ptr = &rows_ptr;
+                let res_ptr = &res_ptr;
+                let mut scratch = mk_scratch();
+                loop {
+                    let c = next.fetch_add(1, Ordering::Relaxed);
+                    let start = c * chunk;
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        // SAFETY: each chunk id is claimed exactly once,
+                        // chunks cover disjoint item ranges, and item i's
+                        // row slice / residual slot are touched only by
+                        // the worker owning its chunk; the scope joins
+                        // all workers before the buffers are read again.
+                        let row = unsafe {
+                            std::slice::from_raw_parts_mut(rows_ptr.0.add(i * width), width)
+                        };
+                        let r = f(&mut scratch, i, row);
+                        unsafe {
+                            *res_ptr.0.add(i) = r;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// Pointer wrapper to move a raw pointer into scoped threads.
 struct SendPtr<T>(*mut T);
 // Manual impls: derive would bound on `T: Copy`/`T: Clone`, but raw
@@ -124,5 +214,83 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn par_rows_fills_every_slot() {
+        let n = 1000;
+        let width = 3;
+        let mut rows = vec![0.0f32; n * width];
+        let mut res = vec![-1.0f32; n];
+        par_rows(
+            n,
+            16,
+            8,
+            &mut rows,
+            width,
+            &mut res,
+            || 0usize,
+            |count, i, row| {
+                *count += 1;
+                for (k, o) in row.iter_mut().enumerate() {
+                    *o = (i * width + k) as f32;
+                }
+                i as f32
+            },
+        );
+        for i in 0..n {
+            assert_eq!(res[i], i as f32);
+            for k in 0..width {
+                assert_eq!(rows[i * width + k], (i * width + k) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_matches_serial_bitwise() {
+        let n = 513; // deliberately not a multiple of the chunk size
+        let width = 4;
+        let fill = |threads: usize| {
+            let mut rows = vec![0.0f32; n * width];
+            let mut res = vec![0.0f32; n];
+            par_rows(
+                n,
+                64,
+                threads,
+                &mut rows,
+                width,
+                &mut res,
+                || (),
+                |_, i, row| {
+                    let x = (i as f32 + 1.0).sqrt();
+                    for (k, o) in row.iter_mut().enumerate() {
+                        *o = x / (k as f32 + 1.0);
+                    }
+                    x
+                },
+            );
+            (rows, res)
+        };
+        let (r1, s1) = fill(1);
+        for t in [2, 3, 8] {
+            let (rt, st) = fill(t);
+            assert_eq!(r1, rt, "rows differ at {t} threads");
+            assert_eq!(s1, st, "residuals differ at {t} threads");
+        }
+    }
+
+    #[test]
+    fn par_rows_empty_and_tiny() {
+        let mut rows: Vec<f32> = vec![];
+        let mut res: Vec<f32> = vec![];
+        par_rows(0, 8, 4, &mut rows, 2, &mut res, || (), |_, _, _| 0.0);
+        let mut rows = vec![0.0f32; 2];
+        let mut res = vec![0.0f32; 1];
+        par_rows(1, 8, 4, &mut rows, 2, &mut res, || (), |_, _, row| {
+            row[0] = 7.0;
+            7.0
+        });
+        assert_eq!(rows[0], 7.0);
+        assert_eq!(res[0], 7.0);
     }
 }

@@ -1,0 +1,198 @@
+//! Bit-exact parity: `ParallelEngine` must reproduce `NativeEngine`
+//! exactly — same candidate rows, same residuals, same marginals, to the
+//! last bit — on every graph family and at every thread count.
+//!
+//! This is stronger than the float-tolerance parity the PJRT engine gets:
+//! the parallel engine computes each row with the identical scalar op
+//! sequence (shared with the native engine via
+//! `engine::belief::candidate_row_from_belief`), so any drift is a bug.
+
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
+use bp_sched::util::Rng;
+use bp_sched::Mrf;
+
+fn test_graphs() -> Vec<(&'static str, Mrf)> {
+    let mut rng = Rng::new(20_260_729);
+    vec![
+        (
+            "ising8",
+            DatasetSpec::Ising { n: 8, c: 2.5 }.generate(&mut rng).unwrap(),
+        ),
+        (
+            "potts6_q5",
+            DatasetSpec::Potts { n: 6, q: 5, c: 1.5 }.generate(&mut rng).unwrap(),
+        ),
+        ("protein", DatasetSpec::Protein.generate(&mut rng).unwrap()),
+    ]
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}[{i}]: native={x:?} parallel={y:?}"
+        );
+    }
+}
+
+/// Drive both engines through several rounds of compute-and-commit on
+/// mixed frontiers, asserting bitwise equality at every step.
+fn parity_run(label: &str, g: &Mrf, threads: usize) {
+    let mut native = NativeEngine::new();
+    let mut par = ParallelEngine::with_threads(threads);
+    let a = g.max_arity;
+    let mut logm = g.uniform_messages().as_slice().to_vec();
+    let mut rng = Rng::new(7 + threads as u64);
+
+    let full: Vec<i32> = (0..g.live_edges as i32).collect();
+    let mut strided: Vec<i32> = (0..g.live_edges as i32).step_by(3).collect();
+    rng.shuffle(&mut strided);
+    let padded: Vec<i32> = vec![0, -1, 2, -1, (g.live_edges - 1) as i32];
+    let frontiers = [&full, &strided, &padded, &full];
+
+    for (round, frontier) in frontiers.iter().enumerate() {
+        let nb = native.candidates(g, &logm, frontier).unwrap();
+        let pb = par.candidates(g, &logm, frontier).unwrap();
+        let what = format!("{label} t={threads} round{round}");
+        assert_bits_equal(&nb.new_m, &pb.new_m, &format!("{what}.new_m"));
+        assert_bits_equal(&nb.residuals, &pb.residuals, &format!("{what}.residuals"));
+        // commit the native rows so later rounds compare at a
+        // non-uniform message state
+        for (i, &e) in frontier.iter().enumerate() {
+            if e >= 0 {
+                let e = e as usize;
+                logm[e * a..(e + 1) * a].copy_from_slice(nb.row(i, a));
+            }
+        }
+    }
+
+    let nm = native.marginals(g, &logm).unwrap();
+    let pm = par.marginals(g, &logm).unwrap();
+    assert_bits_equal(&nm, &pm, &format!("{label} t={threads} marginals"));
+}
+
+#[test]
+fn parity_single_thread() {
+    for (label, g) in &test_graphs() {
+        parity_run(label, g, 1);
+    }
+}
+
+#[test]
+fn parity_two_threads() {
+    for (label, g) in &test_graphs() {
+        parity_run(label, g, 2);
+    }
+}
+
+#[test]
+fn parity_eight_threads() {
+    for (label, g) in &test_graphs() {
+        parity_run(label, g, 8);
+    }
+}
+
+#[test]
+fn thread_counts_agree_with_each_other() {
+    // Transitivity gives this from the parity tests, but assert it
+    // directly: the parallel engine is deterministic across thread
+    // counts, not just faithful to the native engine.
+    let mut rng = Rng::new(31);
+    let g = DatasetSpec::Ising { n: 10, c: 3.0 }.generate(&mut rng).unwrap();
+    let logm = g.uniform_messages();
+    let full: Vec<i32> = (0..g.live_edges as i32).collect();
+    let base = ParallelEngine::with_threads(1)
+        .candidates(&g, logm.as_slice(), &full)
+        .unwrap();
+    for t in [2, 3, 8] {
+        let out = ParallelEngine::with_threads(t)
+            .candidates(&g, logm.as_slice(), &full)
+            .unwrap();
+        assert_bits_equal(&base.new_m, &out.new_m, &format!("threads={t}"));
+    }
+}
+
+/// Restores an env var's prior state on drop, so a failing assertion
+/// cannot leak the override into other code in this process.
+struct EnvGuard {
+    key: &'static str,
+    prev: Option<String>,
+}
+
+impl EnvGuard {
+    fn set(key: &'static str, value: &str) -> EnvGuard {
+        let prev = std::env::var(key).ok();
+        std::env::set_var(key, value);
+        EnvGuard { key, prev }
+    }
+}
+
+impl Drop for EnvGuard {
+    fn drop(&mut self) {
+        match &self.prev {
+            Some(v) => std::env::set_var(self.key, v),
+            None => std::env::remove_var(self.key),
+        }
+    }
+}
+
+#[test]
+fn determinism_under_env_thread_count() {
+    // Two runs with BP_SCHED_THREADS=8 (the knob `ParallelEngine::new`
+    // reads) produce identical marginals, bit for bit. (Env mutation is
+    // process-global; the guard restores the prior value even on panic.
+    // No other test in this binary reads the variable.)
+    let _guard = EnvGuard::set("BP_SCHED_THREADS", "8");
+    let run = || {
+        let mut rng = Rng::new(42);
+        let g = DatasetSpec::Ising { n: 8, c: 2.0 }.generate(&mut rng).unwrap();
+        let mut eng = ParallelEngine::new();
+        assert_eq!(eng.threads(), 8);
+        let mut logm = g.uniform_messages().as_slice().to_vec();
+        let a = g.max_arity;
+        let full: Vec<i32> = (0..g.live_edges as i32).collect();
+        for _ in 0..5 {
+            let batch = eng.candidates(&g, &logm, &full).unwrap();
+            for (i, &e) in full.iter().enumerate() {
+                let e = e as usize;
+                logm[e * a..(e + 1) * a].copy_from_slice(batch.row(i, a));
+            }
+        }
+        eng.marginals(&g, &logm).unwrap()
+    };
+    let m1 = run();
+    let m2 = run();
+    assert_bits_equal(&m1, &m2, "marginals across identical runs");
+}
+
+#[test]
+fn coordinator_runs_agree_between_engines() {
+    // Full-stack check: Algorithm 1 with the parallel engine lands on
+    // exactly the same iterate sequence as with the native engine.
+    use bp_sched::coordinator::{run, RunParams};
+    use bp_sched::sched::Lbp;
+    let mut rng = Rng::new(55);
+    let g = DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap();
+    let params = RunParams {
+        want_marginals: true,
+        timeout: 30.0,
+        ..Default::default()
+    };
+    let rn = run(&g, &mut NativeEngine::new(), &mut Lbp::new(), &params).unwrap();
+    let rp = run(
+        &g,
+        &mut ParallelEngine::with_threads(8),
+        &mut Lbp::new(),
+        &params,
+    )
+    .unwrap();
+    assert_eq!(rn.iterations, rp.iterations);
+    assert_eq!(rn.message_updates, rp.message_updates);
+    assert_bits_equal(
+        &rn.marginals.unwrap(),
+        &rp.marginals.unwrap(),
+        "coordinator marginals",
+    );
+}

@@ -1,0 +1,249 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline (see ROADMAP.md), so instead of the
+//! crates.io `anyhow` this minimal implementation provides exactly the
+//! surface the workspace uses:
+//!
+//! * [`Error`] / [`Result`] with context chains;
+//! * the [`Context`] extension trait (`.context(..)` /
+//!   `.with_context(..)`) on `Result` and `Option`;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Formatting matches `anyhow` where the workspace depends on it:
+//! `{}` prints the outermost context, `{:#}` prints the whole chain
+//! joined by `": "`, and `{:?}` prints the chain in the
+//! "Caused by" layout.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` alias, like the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error. Stored as the rendered message chain,
+/// outermost context first — enough for an application crate that only
+/// ever formats its errors.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with one more (outermost) context frame.
+    fn push_context(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The message chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for frame in &self.chain[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real crate, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent alongside the identity `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().push_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context_only() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .context("starting up")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "starting up: reading config: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+        assert_eq!(Some(7u32).context("no value").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, Error> = Ok(1);
+        let out = ok
+            .with_context(|| -> String { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(out, 1);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: u32) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(())
+        }
+        assert!(inner(1).is_ok());
+        assert_eq!(inner(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(inner(3).unwrap_err().to_string(), "three is right out");
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(e.to_string(), "plain message");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn debug_uses_caused_by_layout() {
+        let e: Error = Err::<(), _>(io_err()).context("ctx").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.starts_with("ctx"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("missing file"));
+    }
+}
