@@ -19,8 +19,16 @@ use bp_sched::util::parallel::default_threads;
 use bp_sched::util::stats::{fmt_duration, Summary};
 use bp_sched::util::{Rng, Stopwatch};
 
+/// Smoke mode (`BP_BENCH_SMOKE=1`): run every timed section exactly once
+/// with no warmup — the CI bench-rot check ("does every bench still
+/// compile and run?"), not a measurement.
+fn smoke() -> bool {
+    std::env::var("BP_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
 /// Time `f` with warmup; returns per-iteration median seconds.
 fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    let (warmup, iters) = if smoke() { (0, 1) } else { (warmup, iters) };
     for _ in 0..warmup {
         f();
     }
@@ -122,6 +130,84 @@ fn main() -> anyhow::Result<()> {
         });
         println!("  pjrt (AOT artifacts)              {:>12}", fmt_duration(tp));
     }
+
+    // --- narrow-frontier wave update: belief-maintenance regimes --------
+    // One commit + one |frontier|-row engine read per wave, timed under
+    // three maintenance regimes:
+    //   * untracked (K=0)      — the PR-1 narrow-frontier baseline: the
+    //     engine re-derives each row's belief with a per-row gather
+    //     (O(n·deg·A); narrow frontiers never paid O(E·A) in PR 1);
+    //   * incremental (K=64)   — the shipped default: O(A) delta per
+    //     commit, cache-row reads, one O(E·A) guard refresh amortized
+    //     over 64 commits (too rare to surface in a 7-wave median —
+    //     worst-case waves pay the full-re-gather column);
+    //   * full re-gather (K=1) — the naive every-wave-pays-O(E·A)
+    //     contract the acceptance bar is stated against (>= 5x at
+    //     |frontier| <= 1% of V on protein).
+    // The hot loop mirrors the coordinator: candidates_into with one
+    // reused batch, no per-wave allocation.
+    let a = gp.max_arity;
+    let k = (gp.live_vertices / 100).max(1);
+    let narrow: Vec<i32> = (0..k as i32).collect();
+    println!(
+        "\nnarrow-frontier wave update, protein (|frontier|={k} = {:.1}% of V={}, M={}):",
+        100.0 * k as f64 / gp.live_vertices as f64,
+        gp.live_vertices,
+        gp.live_edges
+    );
+    // a commit that genuinely changes a row, replayed every wave: edge 0
+    // toggles between its uniform row and its first candidate row
+    let mut alt = vec![0.0f32; a];
+    NativeEngine::new().candidate_row(&gp, logmp.as_slice(), 0, &mut alt);
+    let base: Vec<f32> = logmp.as_slice()[0..a].to_vec();
+    let commit_wave = |eng: &mut ParallelEngine,
+                       batch: &mut bp_sched::engine::CandidateBatch,
+                       frontier: &[i32],
+                       refresh_every: usize|
+     -> f64 {
+        let mut logm = logmp.as_slice().to_vec();
+        eng.begin_tracking(&gp, &logm, refresh_every);
+        let mut flip = false;
+        let t = time_it(2, 7, || {
+            let (old, new) = if flip { (&alt, &base) } else { (&base, &alt) };
+            eng.notify_commit(&gp, 0, old, new);
+            logm[0..a].copy_from_slice(new);
+            flip = !flip;
+            eng.candidates_into(&gp, &logm, frontier, batch).unwrap();
+        });
+        eng.end_tracking();
+        t
+    };
+    let mut batch = bp_sched::engine::CandidateBatch::default();
+    let mut tsweep = vec![1usize];
+    if threads > 1 {
+        tsweep.push(threads);
+    }
+    for t in tsweep {
+        let mut eng = ParallelEngine::with_threads(t);
+        let t_untracked = commit_wave(&mut eng, &mut batch, &narrow, 0);
+        let t_inc = commit_wave(&mut eng, &mut batch, &narrow, 64);
+        let t_full = commit_wave(&mut eng, &mut batch, &narrow, 1);
+        println!(
+            "  t={t:<2} untracked(K=0) {:>10}   incremental(K=64) {:>10}   \
+             full-regather(K=1) {:>10}   {:>5.2}x vs full  {:>5.2}x vs untracked",
+            fmt_duration(t_untracked),
+            fmt_duration(t_inc),
+            fmt_duration(t_full),
+            t_full / t_inc,
+            t_untracked / t_inc
+        );
+    }
+    // incremental wave cost must scale with |frontier|, not E
+    print!("  incremental (K=64) wave latency by |frontier|:");
+    for &n in &[1usize, 4, 16, 64] {
+        let n = n.min(gp.live_edges);
+        let f: Vec<i32> = (0..n as i32).collect();
+        let mut eng = ParallelEngine::with_threads(1);
+        let tt = commit_wave(&mut eng, &mut batch, &f, 64);
+        print!("  {n}: {}", fmt_duration(tt));
+    }
+    println!();
 
     // --- marginals: shared belief cache vs per-vertex gather ------------
     let tm_native = time_it(2, 7, || {

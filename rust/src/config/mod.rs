@@ -53,6 +53,17 @@ pub struct HarnessConfig {
     pub out_dir: PathBuf,
     /// Worker threads for campaigns.
     pub threads: usize,
+    /// Worker threads *inside* the parallel engine (frontier fan-out and
+    /// belief gather) — separate from campaign `threads`, which
+    /// parallelizes across independent runs. A campaign of single-core
+    /// runs wants `threads = N, engine_threads = 1`; one many-core run
+    /// wants the opposite.
+    pub engine_threads: usize,
+    /// Drift-guard cadence for incremental belief maintenance: full
+    /// belief re-gather every this many committed row deltas
+    /// (see [`crate::engine::belief::drift_bound`]). `0` disables
+    /// incremental maintenance (gather on every engine call).
+    pub belief_refresh_every: usize,
     /// Engine selection.
     pub engine: EngineKind,
     /// Semiring: marginal (sum-product) or MAP (max-product) inference.
@@ -74,6 +85,8 @@ impl Default for HarnessConfig {
             max_iterations: 20_000,
             out_dir: PathBuf::from("results"),
             threads: crate::util::parallel::default_threads(),
+            engine_threads: crate::util::parallel::default_threads(),
+            belief_refresh_every: crate::engine::belief::DEFAULT_REFRESH_EVERY,
             engine: EngineKind::Pjrt,
             semiring: Semiring::SumProduct,
             damping: 0.0,
@@ -105,6 +118,12 @@ impl HarnessConfig {
             }
             "out_dir" => self.out_dir = PathBuf::from(value.as_str().context("out_dir")?),
             "threads" => self.threads = value.as_usize().context("threads")?.max(1),
+            "engine_threads" => {
+                self.engine_threads = value.as_usize().context("engine_threads")?.max(1)
+            }
+            "belief_refresh_every" => {
+                self.belief_refresh_every = value.as_usize().context("belief_refresh_every")?
+            }
             "engine" => {
                 self.engine = match value.as_str().context("engine")? {
                     "pjrt" => EngineKind::Pjrt,
@@ -240,6 +259,30 @@ mod tests {
         c.apply_args(&args(&["--engine", "parallel"])).unwrap();
         assert_eq!(c.engine, EngineKind::Parallel);
         assert!(c.apply_args(&args(&["--engine", "cuda"])).is_err());
+    }
+
+    #[test]
+    fn engine_thread_and_refresh_knobs() {
+        let mut c = HarnessConfig::default();
+        assert_eq!(
+            c.belief_refresh_every,
+            crate::engine::belief::DEFAULT_REFRESH_EVERY
+        );
+        c.apply_args(&args(&[
+            "--engine-threads",
+            "3",
+            "--belief-refresh-every",
+            "128",
+        ]))
+        .unwrap();
+        assert_eq!(c.engine_threads, 3);
+        assert_eq!(c.belief_refresh_every, 128);
+        // 0 is meaningful for the guard (incremental disabled) but not
+        // for the thread count (clamped to 1)
+        c.apply_args(&args(&["--engine-threads", "0", "--belief-refresh-every", "0"]))
+            .unwrap();
+        assert_eq!(c.engine_threads, 1);
+        assert_eq!(c.belief_refresh_every, 0);
     }
 
     #[test]

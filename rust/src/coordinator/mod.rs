@@ -24,6 +24,24 @@
 //! Residual Splash's multi-wave frontiers are committed wave-by-wave;
 //! a wave containing dirtied edges triggers a mid-iteration engine call
 //! (sequential semantics), matching the paper's per-level splash kernels.
+//!
+//! ## Incremental belief maintenance
+//!
+//! Engine-side per-vertex beliefs are *owned, stateful, and updated in
+//! place* across the run. At run start the coordinator calls
+//! [`MessageEngine::begin_tracking`]; from then on every committed
+//! message row is reported through [`MessageEngine::notify_commit`]
+//! *before* the row copy, and the engine applies the O(A)
+//! per-destination delta (subtract the old log-message row, add the new
+//! one) instead of re-gathering all E edges on its next call. A drift
+//! guard re-gathers in full every [`RunParams::belief_refresh_every`]
+//! commits so accumulated f32 error stays below
+//! [`crate::engine::belief::drift_bound`]; `belief_refresh_every == 0`
+//! restores the gather-per-call contract (the differential reference in
+//! `tests/incremental_parity.rs`, which also proves the two regimes
+//! select identical frontiers). Engines without belief state ignore the
+//! notifications and stay correct — every engine call still receives the
+//! current messages.
 
 pub mod campaign;
 
@@ -52,6 +70,12 @@ pub struct RunParams {
     /// Simulated-time budget; runs stop with [`StopReason::Timeout`] when
     /// the modeled device time exceeds this (used with `cost_model`).
     pub sim_timeout: f64,
+    /// Drift-guard cadence for incremental belief maintenance: the
+    /// engine re-gathers beliefs in full every this many committed row
+    /// deltas. `0` disables tracking (gather-per-call, the pre-PR-2
+    /// contract); `1` is tracked but bit-identical to `0`, since any
+    /// commit forces a re-gather before the next read.
+    pub belief_refresh_every: usize,
 }
 
 impl Default for RunParams {
@@ -63,7 +87,43 @@ impl Default for RunParams {
             want_marginals: false,
             cost_model: Some(CostModel::v100()),
             sim_timeout: f64::INFINITY,
+            belief_refresh_every: crate::engine::belief::DEFAULT_REFRESH_EVERY,
         }
+    }
+}
+
+/// Order-sensitive FNV-1a digest of a run's selected frontier sequence:
+/// every edge id of every wave, with a wave-end marker between waves.
+/// Two runs with equal digests selected identical frontiers in identical
+/// order — the equality `tests/incremental_parity.rs` asserts between
+/// incremental and full-gather belief maintenance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrontierDigest(u64);
+
+impl Default for FrontierDigest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrontierDigest {
+    pub fn new() -> FrontierDigest {
+        FrontierDigest(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    pub fn push_edge(&mut self, e: i32) {
+        self.0 = (self.0 ^ (e as u32 as u64)).wrapping_mul(0x100_0000_01b3);
+    }
+
+    /// Mark a wave boundary, so `[[0,1]]` and `[[0],[1]]` digest apart.
+    #[inline]
+    pub fn push_wave_end(&mut self) {
+        self.0 = (self.0 ^ u64::MAX).wrapping_mul(0x100_0000_01b3);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
     }
 }
 
@@ -100,6 +160,10 @@ pub struct RunResult {
     pub engine_calls: u64,
     /// Max residual at stop.
     pub final_residual: f32,
+    /// [`FrontierDigest`] over every selected wave, in order (for serial
+    /// SRBP: over the pop sequence). Equal digests ⇒ identical frontier
+    /// trajectories.
+    pub frontier_digest: u64,
     /// Wallclock attribution: select / commit / refresh / converge.
     pub phases: PhaseTimer,
     /// Modeled many-core device time (None for serial runs).
@@ -159,14 +223,23 @@ impl State {
 
     /// Commit candidate rows for a frontier; marks dependents dirty.
     /// Rows come from `batch` if provided (mid-iteration recompute), else
-    /// from the candidate cache.
+    /// from the candidate cache. Every changed row is reported to the
+    /// engine (before its overwrite) so incrementally maintained beliefs
+    /// stay coherent — unchanged rows carry a zero delta and are skipped,
+    /// which also spares the drift-guard budget.
     ///
     /// Two passes: first copy every row and tentatively mark the committed
     /// edges clean (their candidate now equals their value), then dirty
     /// the dependents of every changed edge. The order matters — a single
     /// wave can contain both an edge and its dependent, and the dependent
     /// must come out *dirty* regardless of its position in the wave.
-    fn commit(&mut self, mrf: &Mrf, wave: &[i32], batch: Option<&crate::engine::CandidateBatch>) {
+    fn commit(
+        &mut self,
+        mrf: &Mrf,
+        wave: &[i32],
+        batch: Option<&crate::engine::CandidateBatch>,
+        engine: &mut dyn MessageEngine,
+    ) {
         let a = self.arity;
         let mut changed: Vec<usize> = Vec::with_capacity(wave.len());
         for (i, &ei) in wave.iter().enumerate() {
@@ -176,6 +249,7 @@ impl State {
                 None => &self.cand[e * a..(e + 1) * a],
             };
             if self.logm[e * a..(e + 1) * a] != *row {
+                engine.notify_commit(mrf, e, &self.logm[e * a..(e + 1) * a], row);
                 changed.push(e);
             }
             self.logm[e * a..(e + 1) * a].copy_from_slice(row);
@@ -226,6 +300,12 @@ pub fn run(
     // One candidate batch reused for every engine call of the run: the
     // engines resize it in place, so the hot loop does not allocate.
     let mut batch = crate::engine::CandidateBatch::default();
+    let mut digest = FrontierDigest::new();
+
+    // Incremental belief maintenance: the engine snapshots per-vertex
+    // beliefs now and keeps them coherent from the commit notifications
+    // below (see module docs; no-op for engines without belief state).
+    engine.begin_tracking(mrf, &st.logm, params.belief_refresh_every);
 
     // Initial residual computation: all live edges.
     let init_frontier: Vec<i32> = (0..live as i32).collect();
@@ -288,15 +368,19 @@ pub fn run(
         // 2. Update(frontier): commit wave-by-wave
         for wave in &waves {
             debug_assert!(wave.iter().all(|&e| (e as usize) < live));
+            for &e in wave.iter() {
+                digest.push_edge(e);
+            }
+            digest.push_wave_end();
             let needs_compute = wave.iter().any(|&e| st.dirty[e as usize]);
             if needs_compute {
                 phases.time("update", || {
                     engine.candidates_into(mrf, &st.logm, wave, &mut batch)
                 })?;
                 engine_calls += 1;
-                phases.time("commit", || st.commit(mrf, wave, Some(&batch)));
+                phases.time("commit", || st.commit(mrf, wave, Some(&batch), engine));
             } else {
-                phases.time("commit", || st.commit(mrf, wave, None));
+                phases.time("commit", || st.commit(mrf, wave, None, engine));
             }
             message_updates += wave.len() as u64;
             if let Some(m) = &model {
@@ -342,10 +426,13 @@ pub fn run(
     }
 
     let marginals = if params.want_marginals {
+        // engines compute marginals from a from-scratch gather, so the
+        // report carries no incremental drift
         Some(engine.marginals(mrf, &st.logm)?)
     } else {
         None
     };
+    engine.end_tracking();
 
     Ok(RunResult {
         scheduler: scheduler.name(),
@@ -356,6 +443,7 @@ pub fn run(
         message_updates,
         engine_calls,
         final_residual: st.max_residual(live),
+        frontier_digest: digest.value(),
         phases,
         sim_wall: model.map(|_| sim_wall),
         sim_phases,
@@ -452,6 +540,63 @@ mod tests {
         };
         let r = run_with(&g, &mut Lbp::new(), &params);
         assert!(r.iterations <= 3);
+    }
+
+    #[test]
+    fn frontier_digest_is_order_and_wave_sensitive() {
+        let mut d1 = FrontierDigest::new();
+        d1.push_edge(0);
+        d1.push_edge(1);
+        d1.push_wave_end();
+        let mut d2 = FrontierDigest::new();
+        d2.push_edge(0);
+        d2.push_wave_end();
+        d2.push_edge(1);
+        d2.push_wave_end();
+        let mut d3 = FrontierDigest::new();
+        d3.push_edge(1);
+        d3.push_edge(0);
+        d3.push_wave_end();
+        assert_ne!(d1.value(), d2.value(), "wave split must digest apart");
+        assert_ne!(d1.value(), d3.value(), "order must digest apart");
+        let mut d4 = FrontierDigest::new();
+        d4.push_edge(0);
+        d4.push_edge(1);
+        d4.push_wave_end();
+        assert_eq!(d1.value(), d4.value());
+    }
+
+    #[test]
+    fn refresh_cadence_one_is_bit_identical_to_gather_per_call() {
+        // K=1 tracked runs re-gather before every read that follows a
+        // commit, so they must reproduce the K=0 (untracked) run bit for
+        // bit: same frontier trajectory, same iterate count, same
+        // marginals.
+        let mut rng = Rng::new(8);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let base = RunParams {
+            want_marginals: true,
+            timeout: 30.0,
+            ..Default::default()
+        };
+        let full = run_with(
+            &g,
+            &mut Rbp::new(0.25),
+            &RunParams { belief_refresh_every: 0, ..base.clone() },
+        );
+        let inc = run_with(
+            &g,
+            &mut Rbp::new(0.25),
+            &RunParams { belief_refresh_every: 1, ..base },
+        );
+        assert_eq!(full.stop, inc.stop);
+        assert_eq!(full.iterations, inc.iterations);
+        assert_eq!(full.message_updates, inc.message_updates);
+        assert_eq!(full.frontier_digest, inc.frontier_digest);
+        let (mf, mi) = (full.marginals.unwrap(), inc.marginals.unwrap());
+        for (x, y) in mf.iter().zip(&mi) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
     }
 
     #[test]

@@ -10,26 +10,76 @@
 //! single subtraction, which is exactly the structure Residual Splash and
 //! the GPU-LBP kernels exploit (and what the paper's bulk update assumes).
 //!
-//! ## Snapshot invariant
+//! ## Snapshot invariant and incremental maintenance
 //!
 //! A [`BeliefCache`] is valid **only** for the `logm` snapshot it was
 //! gathered from: committing any message row invalidates the beliefs of
-//! that row's destination vertex. Engines therefore re-gather at the top
-//! of every `candidates` call (bulk-synchronous semantics — all rows of a
-//! wave read the same state) and never reuse a cache across commits.
+//! that row's destination vertex. Two regimes keep the cache coherent:
+//!
+//! * **Untracked** (the default, and the only regime before PR 2):
+//!   engines re-gather at the top of every `candidates` call
+//!   (bulk-synchronous semantics — all rows of a wave read the same
+//!   state) and never reuse a cache across commits. Every wave pays
+//!   O(E·A) regardless of frontier size.
+//! * **Tracked** ([`BeliefCache::begin_tracking`]): the caller promises
+//!   to report every message-row overwrite through
+//!   [`BeliefCache::apply_commit`], which applies a per-destination
+//!   *delta* — subtract the old log-message row, add the new one — in
+//!   O(A). Narrow-frontier wave cost then scales with |frontier|, not E.
+//!
+//! ## Drift guard
+//!
+//! Each applied delta rounds twice in f32, so tracked beliefs slowly
+//! drift away from what a from-scratch gather would produce. A guard
+//! counts applied deltas and demands a full re-gather
+//! ([`BeliefCache::refresh_if_due`]) once they reach `refresh_every`
+//! commits; the accumulated error between refreshes stays below the
+//! tested [`drift_bound`]. A refresh *is* a from-scratch gather, so the
+//! cache is bit-exact at every refresh point (asserted in
+//! `tests/incremental_parity.rs`). `refresh_every == 1` therefore makes
+//! the tracked regime bit-identical to the untracked one: any commit
+//! forces a re-gather before the next read.
 //!
 //! ## Bit-exactness
 //!
 //! [`BeliefCache::gather`] accumulates incoming messages in `in_edges`
 //! order with the same sequential f32 adds as
-//! [`super::native::NativeEngine`]'s per-row gather, and
-//! [`candidate_row_from_belief`] performs the identical clamped-LSE / max
-//! contraction, normalization, damping, and residual ops in the identical
-//! order. Parity is asserted bitwise in `tests/parallel_parity.rs`.
+//! [`super::native::NativeEngine`]'s per-row gather;
+//! [`BeliefCache::gather_par`] computes every vertex row independently
+//! with the identical per-row op sequence, so it is bit-identical to the
+//! serial gather at any thread count. [`candidate_row_from_belief`]
+//! performs the identical clamped-LSE / max contraction, normalization,
+//! damping, and residual ops in the identical order. Parity is asserted
+//! bitwise in `tests/parallel_parity.rs`.
 
 use super::{Semiring, UpdateOptions};
 use crate::graph::Mrf;
+use crate::util::parallel::par_rows;
 use crate::NEG;
+
+/// Default drift-guard cadence: full re-gather every this many committed
+/// row deltas (`belief_refresh_every` knob; 0 disables tracking).
+pub const DEFAULT_REFRESH_EVERY: usize = 64;
+
+/// Vertex rows per parallel-gather work unit: belief rows are cheap
+/// (deg·A adds), so chunks stay large to amortize the atomic claim.
+const GATHER_CHUNK_ROWS: usize = 64;
+
+/// Tested upper bound on the max-norm belief drift the delta path can
+/// accumulate between guard refreshes.
+///
+/// One [`BeliefCache::apply_commit`] perturbs each lane of one vertex row
+/// by at most two f32 roundings (`new - old`, then the `+=`), each within
+/// half an ulp of the operand magnitude — beliefs are sums of a log-unary
+/// row and at most D normalized log-message rows, so |belief| stays well
+/// under 2^7 and one delta contributes < 1.6e-5 per lane. At most
+/// `refresh_every` deltas land between refreshes (a refresh re-gathers
+/// from scratch and zeroes the accumulation); the linear worst case plus
+/// a cushion for the comparison gather's own rounding gives the bound
+/// asserted by `drift_stays_under_guard_bound_long_run`.
+pub fn drift_bound(refresh_every: usize) -> f32 {
+    3.2e-5 * refresh_every as f32 + 1e-5
+}
 
 /// In-place log-space normalization of the valid lanes.
 #[inline]
@@ -50,20 +100,61 @@ pub(crate) fn normalize(row: &mut [f32]) {
     }
 }
 
+/// Fill one vertex's belief row in place:
+/// `row = log_unary[v] + Σ_{k ∈ in(v)} logm[k]`, accumulated in
+/// `in_edges` order. The single per-vertex body shared by the serial and
+/// parallel gathers — both must produce identical bits.
+#[inline]
+fn fill_belief_row(mrf: &Mrf, logm: &[f32], v: usize, row: &mut [f32]) {
+    let a = mrf.max_arity;
+    row.copy_from_slice(&mrf.log_unary[v * a..(v + 1) * a]);
+    for k in mrf.incoming(v) {
+        let m = &logm[k * a..(k + 1) * a];
+        for (b, r) in row.iter_mut().zip(m) {
+            *b += r;
+        }
+    }
+}
+
 /// Reusable per-vertex belief accumulator `[live_vertices * A]`.
 ///
-/// Owned by an engine and refilled by [`gather`](Self::gather) — no
-/// per-call allocation once the backing vector has grown to the largest
-/// envelope seen.
+/// Owned by an engine and refilled by [`gather`](Self::gather) /
+/// [`gather_par`](Self::gather_par) — no per-call allocation once the
+/// backing vectors have grown to the largest envelope seen. In tracked
+/// mode (see module docs) the buffer is additionally kept coherent in
+/// place by [`apply_commit`](Self::apply_commit) deltas under the drift
+/// guard.
 #[derive(Debug, Default)]
 pub struct BeliefCache {
     belief: Vec<f32>,
     arity: usize,
+    /// Graph instance whose beliefs the buffer currently holds.
+    held: Option<u64>,
+    /// Graph instance [`Self::begin_tracking`] was called for, while
+    /// tracking is active. Tracked reads require *both* ids to match:
+    /// `held` alone would phantom-promote any graph that merely passed
+    /// through an untracked gather to tracked status, and its commits
+    /// are not being reported.
+    tracked_instance: Option<u64>,
+    /// Drift-guard cadence; deltas applied since the last full gather.
+    refresh_every: usize,
+    commits_since_refresh: usize,
+    /// Ignored per-row outputs for the `par_rows` gather (it contracts
+    /// for residual-producing row fills; a gather has no residuals).
+    par_res: Vec<f32>,
 }
 
 impl BeliefCache {
     pub fn new() -> BeliefCache {
         BeliefCache::default()
+    }
+
+    /// Bookkeeping after any full gather: the buffer now holds exactly
+    /// `logm`-derived beliefs for this graph, with zero accumulated
+    /// drift.
+    fn note_fresh(&mut self, mrf: &Mrf) {
+        self.held = Some(mrf.instance_id);
+        self.commits_since_refresh = 0;
     }
 
     /// Recompute every live vertex's belief from `logm` in one O(E·A)
@@ -72,17 +163,132 @@ impl BeliefCache {
     pub fn gather(&mut self, mrf: &Mrf, logm: &[f32]) {
         let a = mrf.max_arity;
         self.arity = a;
-        self.belief.clear();
+        // plain resize (no clear): every live row is fully overwritten
+        // below, so zero-filling retained capacity would be pure memset
+        // waste on the guard-refresh hot path
         self.belief.resize(mrf.live_vertices * a, 0.0);
         for v in 0..mrf.live_vertices {
+            fill_belief_row(mrf, logm, v, &mut self.belief[v * a..(v + 1) * a]);
+        }
+        self.note_fresh(mrf);
+    }
+
+    /// [`gather`](Self::gather) with the vertex loop fanned across
+    /// `threads` workers in chunks of [`GATHER_CHUNK_ROWS`] rows. Each
+    /// vertex row is computed independently by the shared per-row body
+    /// and written to its own disjoint slot, so the result is
+    /// bit-identical to the serial gather at any thread count.
+    pub fn gather_par(&mut self, mrf: &Mrf, logm: &[f32], threads: usize) {
+        let a = mrf.max_arity;
+        let n = mrf.live_vertices;
+        self.arity = a;
+        // plain resizes, as in `gather`: rows and residual slots are
+        // fully overwritten by the fan-out
+        self.belief.resize(n * a, 0.0);
+        self.par_res.resize(n, 0.0);
+        par_rows(
+            n,
+            GATHER_CHUNK_ROWS,
+            threads,
+            &mut self.belief,
+            a,
+            &mut self.par_res,
+            || (),
+            |_, v, row| {
+                fill_belief_row(mrf, logm, v, row);
+                0.0
+            },
+        );
+        self.note_fresh(mrf);
+    }
+
+    /// Enter tracked mode for `mrf`: gather now (in parallel), then keep
+    /// the buffer coherent through [`apply_commit`](Self::apply_commit)
+    /// deltas, re-gathering every `refresh_every` commits.
+    /// `refresh_every == 0` disables tracking entirely (callers fall
+    /// back to gather-per-call).
+    pub fn begin_tracking(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        refresh_every: usize,
+        threads: usize,
+    ) {
+        if refresh_every == 0 {
+            self.tracked_instance = None;
+            return;
+        }
+        self.refresh_every = refresh_every;
+        self.tracked_instance = Some(mrf.instance_id);
+        self.gather_par(mrf, logm, threads);
+    }
+
+    /// Leave tracked mode; the buffer contents stay usable as an
+    /// ordinary (re-gather-per-call) cache.
+    pub fn end_tracking(&mut self) {
+        self.tracked_instance = None;
+    }
+
+    /// True when this cache incrementally tracks `mrf`'s beliefs: `mrf`
+    /// is the graph `begin_tracking` was called for *and* the buffer
+    /// still holds its beliefs. False after a gather for a different
+    /// graph displaced the buffer — tracked engines then degrade
+    /// gracefully to gather-per-call for the displaced graph (its
+    /// commits are dropped as no-ops, which is sound precisely because
+    /// untracked reads re-gather; tracking resumes if a full gather for
+    /// the tracked graph restores the buffer). Graphs that merely pass
+    /// through an untracked gather never count as tracked.
+    pub fn is_tracking(&self, mrf: &Mrf) -> bool {
+        self.tracked_instance == Some(mrf.instance_id) && self.held == Some(mrf.instance_id)
+    }
+
+    /// Apply one committed row's delta: the caller is replacing message
+    /// row `e` (currently `old_row`) with `new_row`, which shifts the
+    /// belief of `dst[e]` by `new - old` per lane. O(A), vs O(E·A) for a
+    /// re-gather. No-op unless tracking `mrf`.
+    ///
+    /// Once the guard is already due, the arithmetic is skipped: every
+    /// tracked read goes through [`refresh_if_due`](Self::refresh_if_due)
+    /// first, so the buffer is unconditionally re-gathered before anyone
+    /// looks at it again — wide waves (lbp commits ≫ `refresh_every`
+    /// rows) would otherwise pay O(E·A) of delta work per commit phase
+    /// just to have the refresh discard it.
+    pub fn apply_commit(&mut self, mrf: &Mrf, e: usize, old_row: &[f32], new_row: &[f32]) {
+        if !self.is_tracking(mrf) {
+            return;
+        }
+        if self.commits_since_refresh < self.refresh_every {
+            let a = self.arity;
+            let v = mrf.dst[e] as usize;
             let row = &mut self.belief[v * a..(v + 1) * a];
-            row.copy_from_slice(&mrf.log_unary[v * a..(v + 1) * a]);
-            for k in mrf.incoming(v) {
-                let m = &logm[k * a..(k + 1) * a];
-                for (b, r) in row.iter_mut().zip(m) {
-                    *b += r;
-                }
+            for ((b, n), o) in row.iter_mut().zip(new_row).zip(old_row) {
+                *b += n - o;
             }
+        }
+        self.commits_since_refresh += 1;
+    }
+
+    /// Deltas applied since the last full gather.
+    pub fn commits_since_refresh(&self) -> usize {
+        self.commits_since_refresh
+    }
+
+    /// True when the drift guard demands a re-gather before the next
+    /// read of tracked beliefs.
+    pub fn refresh_due(&self) -> bool {
+        self.tracked_instance.is_some() && self.commits_since_refresh >= self.refresh_every
+    }
+
+    /// Re-gather (in parallel) if tracking `mrf` and the guard is due;
+    /// returns whether a refresh ran. Engines call this at the top of
+    /// every candidate evaluation, so tracked beliefs carry at most
+    /// `refresh_every` deltas of float drift (see [`drift_bound`]).
+    pub fn refresh_if_due(&mut self, mrf: &Mrf, logm: &[f32], threads: usize) -> bool {
+        if self.is_tracking(mrf) && self.commits_since_refresh >= self.refresh_every {
+            self.gather_par(mrf, logm, threads);
+            true
+        } else {
+            false
         }
     }
 
@@ -255,6 +461,130 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-5, "vertex {v}: {s}");
             assert!(row.iter().all(|&p| p >= 0.0));
         }
+    }
+
+    /// Write a random normalized log-message row for edge `e` into `out`
+    /// (padded lanes zero), matching the message-row conventions.
+    fn random_row(g: &crate::graph::Mrf, rng: &mut Rng, e: usize, out: &mut [f32]) {
+        let av = g.arity_of(g.dst[e] as usize);
+        for x in out[..av].iter_mut() {
+            *x = rng.range(-4.0, 4.0) as f32;
+        }
+        normalize(&mut out[..av]);
+        for x in out[av..].iter_mut() {
+            *x = 0.0;
+        }
+    }
+
+    #[test]
+    fn drift_stays_under_guard_bound_long_run() {
+        // Adversarial long run on a cyclic graph: >= 10k committed row
+        // deltas of random normalized rows, measuring max belief drift
+        // against a from-scratch gather, under each guard cadence. The
+        // read contract is commit -> refresh_if_due -> read (engines
+        // run the guard at the top of every candidate evaluation), so
+        // drift is measured exactly where reads happen; the observable
+        // worst case — refresh_every - 1 deltas since the last gather —
+        // is included.
+        for &k in &[1usize, 64, 1024] {
+            let mut rng = Rng::new(77);
+            let g = ising::generate("i", 6, 2.0, &mut rng).unwrap();
+            let a = g.max_arity;
+            let mut logm = g.uniform_messages().as_slice().to_vec();
+            let mut cache = BeliefCache::new();
+            cache.begin_tracking(&g, &logm, k, 1);
+            let mut reference = BeliefCache::new();
+            let mut row = vec![0.0f32; a];
+            let mut max_drift = 0.0f32;
+            let mut refreshes = 0usize;
+            for step in 0..10_000 {
+                let e = rng.below(g.live_edges);
+                random_row(&g, &mut rng, e, &mut row);
+                cache.apply_commit(&g, e, &logm[e * a..(e + 1) * a], &row);
+                logm[e * a..(e + 1) * a].copy_from_slice(&row);
+                if cache.refresh_if_due(&g, &logm, 1) {
+                    refreshes += 1;
+                    assert_eq!(cache.commits_since_refresh(), 0);
+                }
+                // the state a read would see now: <= K-1 deltas of drift
+                if step % 7 == 0 || cache.commits_since_refresh() + 1 == k {
+                    reference.gather(&g, &logm);
+                    for v in 0..g.live_vertices {
+                        for (x, y) in cache.row(v).iter().zip(reference.row(v)) {
+                            max_drift = max_drift.max((x - y).abs());
+                        }
+                    }
+                }
+            }
+            assert_eq!(refreshes, 10_000 / k, "guard cadence");
+            assert!(max_drift.is_finite());
+            assert!(
+                max_drift <= drift_bound(k),
+                "K={k}: drift {max_drift} exceeds bound {}",
+                drift_bound(k)
+            );
+        }
+    }
+
+    // (Bit-exactness at guard refresh points and serial/parallel gather
+    // parity across thread counts are asserted at integration level —
+    // tests/incremental_parity.rs and tests/parallel_parity.rs — over
+    // every graph family; no unit-level copies here.)
+
+    #[test]
+    fn single_delta_tracks_regather_closely() {
+        let mut rng = Rng::new(79);
+        let g = ising::generate("i", 4, 1.5, &mut rng).unwrap();
+        let a = g.max_arity;
+        let mut logm = g.uniform_messages().as_slice().to_vec();
+        let mut cache = BeliefCache::new();
+        cache.begin_tracking(&g, &logm, 1000, 1);
+        let mut row = vec![0.0f32; a];
+        random_row(&g, &mut rng, 3, &mut row);
+        cache.apply_commit(&g, 3, &logm[3 * a..4 * a], &row);
+        logm[3 * a..4 * a].copy_from_slice(&row);
+        assert_eq!(cache.commits_since_refresh(), 1);
+        let mut fresh = BeliefCache::new();
+        fresh.gather(&g, &logm);
+        let v = g.dst[3] as usize;
+        for (x, y) in cache.row(v).iter().zip(fresh.row(v)) {
+            assert!((x - y).abs() <= drift_bound(1), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tracking_guards_and_disabling() {
+        let mut rng = Rng::new(80);
+        let g = ising::generate("i", 4, 1.5, &mut rng).unwrap();
+        let logm = g.uniform_messages();
+        let mut cache = BeliefCache::new();
+        // refresh_every == 0 disables tracking outright
+        cache.begin_tracking(&g, logm.as_slice(), 0, 1);
+        assert!(!cache.is_tracking(&g));
+        // normal tracking: due after exactly refresh_every commits
+        cache.begin_tracking(&g, logm.as_slice(), 2, 1);
+        assert!(cache.is_tracking(&g));
+        assert!(!cache.refresh_due());
+        let a = g.max_arity;
+        let row = vec![0.0f32; a];
+        cache.apply_commit(&g, 0, &logm.as_slice()[0..a], &row);
+        assert!(!cache.refresh_due());
+        cache.apply_commit(&g, 1, &logm.as_slice()[a..2 * a], &row);
+        assert!(cache.refresh_due());
+        // gathering a different graph displaces the buffer: tracking of
+        // the old graph degrades gracefully, and the *other* graph must
+        // NOT be phantom-promoted to tracked status (its commits are not
+        // reported; a stale tracked read would be silently wrong)
+        let other = ising::generate("i", 3, 1.5, &mut rng).unwrap();
+        cache.gather(&other, other.uniform_messages().as_slice());
+        assert!(!cache.is_tracking(&g));
+        assert!(!cache.is_tracking(&other));
+        // a full gather for the tracked graph restores tracked status
+        cache.gather(&g, logm.as_slice());
+        assert!(cache.is_tracking(&g));
+        cache.end_tracking();
+        assert!(!cache.is_tracking(&g));
+        assert!(!cache.is_tracking(&other));
     }
 
     #[test]

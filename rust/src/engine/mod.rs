@@ -7,10 +7,11 @@
 //! * [`native::NativeEngine`] — straightforward vectorized Rust. Serves as
 //!   the correctness oracle and as the compute path of the *serial* SRBP
 //!   baseline (the paper's CPU comparator).
-//! * [`parallel::ParallelEngine`] — the many-core CPU path: one O(E·A)
-//!   belief gather per wave ([`belief::BeliefCache`]), then the frontier
-//!   fanned across threads in chunks. Bit-identical to the native engine
-//!   at any thread count.
+//! * [`parallel::ParallelEngine`] — the many-core CPU path: beliefs from
+//!   the shared [`belief::BeliefCache`] (incrementally maintained under
+//!   the coordinator's commit notifications, parallel-gathered
+//!   otherwise), then the frontier fanned across threads in chunks.
+//!   Bit-identical to the native engine at any thread count.
 //! * [`pjrt::PjrtEngine`] — the accelerator path: executes the
 //!   AOT-compiled XLA programs (JAX/Pallas-authored) through the PJRT
 //!   CPU client with bucketed frontier capacities. This is the stand-in
@@ -114,6 +115,29 @@ pub trait MessageEngine {
 
     /// Normalized vertex marginals `[V * A]` (probabilities).
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>>;
+
+    /// Begin incremental belief maintenance for a run over `mrf` whose
+    /// current messages are `logm`: the engine may snapshot per-vertex
+    /// beliefs now and keep them coherent from
+    /// [`notify_commit`](Self::notify_commit) deltas instead of
+    /// re-gathering on every call, re-gathering in full every
+    /// `refresh_every` commits (the drift guard; see
+    /// [`belief::drift_bound`]). `refresh_every == 0` requests the
+    /// gather-per-call behavior.
+    ///
+    /// Tracking is an *optimization contract*, not a correctness
+    /// requirement: `candidates_into` always receives the current
+    /// `logm`, so engines without belief state (default no-op) stay
+    /// correct by re-deriving everything per call.
+    fn begin_tracking(&mut self, _mrf: &Mrf, _logm: &[f32], _refresh_every: usize) {}
+
+    /// The caller is about to overwrite message row `e` (currently
+    /// `old`) with `new`. Called once per committed row, *before* the
+    /// overwrite, only between `begin_tracking` and `end_tracking`.
+    fn notify_commit(&mut self, _mrf: &Mrf, _e: usize, _old: &[f32], _new: &[f32]) {}
+
+    /// End incremental belief maintenance (default no-op).
+    fn end_tracking(&mut self) {}
 
     /// Engine label for reports.
     fn name(&self) -> &'static str;

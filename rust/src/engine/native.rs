@@ -22,7 +22,9 @@ pub struct NativeEngine {
     /// Scratch: belief accumulator reused across calls.
     belief: Vec<f32>,
     cavity: Vec<f32>,
-    /// Scratch: full belief table, used by `marginals`.
+    /// Full belief table: scratch for `marginals`, and — under the
+    /// coordinator's commit tracking — the incrementally maintained
+    /// belief state candidate rows read from.
     cache: BeliefCache,
 }
 
@@ -67,12 +69,34 @@ impl MessageEngine for NativeEngine {
         out.new_m.resize(frontier.len() * a_max, 0.0);
         out.residuals.clear();
         out.residuals.resize(frontier.len(), 0.0);
+        // Tracked mode: beliefs are maintained in the cache by the
+        // coordinator's commit notifications (O(A) per commit), so rows
+        // read cache rows instead of re-gathering O(deg·A) each. The
+        // drift guard re-gathers in full every `refresh_every` commits.
+        let tracked = self.cache.is_tracking(mrf);
+        if tracked {
+            self.cache.refresh_if_due(mrf, logm, 1);
+        }
         for (i, &f) in frontier.iter().enumerate() {
             if f < 0 {
                 continue; // padded slot (callers normally pass unpadded)
             }
+            let e = f as usize;
             let row = &mut out.new_m[i * a_max..(i + 1) * a_max];
-            out.residuals[i] = self.candidate_row(mrf, logm, f as usize, row);
+            out.residuals[i] = if tracked {
+                let u = mrf.src[e] as usize;
+                candidate_row_from_belief(
+                    mrf,
+                    logm,
+                    self.cache.row(u),
+                    self.opts,
+                    e,
+                    &mut self.cavity,
+                    row,
+                )
+            } else {
+                self.candidate_row(mrf, logm, e, row)
+            };
         }
         Ok(())
     }
@@ -84,6 +108,20 @@ impl MessageEngine for NativeEngine {
         let mut out = vec![0.0f32; mrf.num_vertices * mrf.max_arity];
         self.cache.write_marginals(mrf, &mut out);
         Ok(out)
+    }
+
+    fn begin_tracking(&mut self, mrf: &Mrf, logm: &[f32], refresh_every: usize) {
+        // serial engine: the tracking gather (and guard refreshes) stay
+        // single-threaded, bit-identical to `BeliefCache::gather`
+        self.cache.begin_tracking(mrf, logm, refresh_every, 1);
+    }
+
+    fn notify_commit(&mut self, mrf: &Mrf, e: usize, old: &[f32], new: &[f32]) {
+        self.cache.apply_commit(mrf, e, old, new);
+    }
+
+    fn end_tracking(&mut self) {
+        self.cache.end_tracking();
     }
 
     fn name(&self) -> &'static str {

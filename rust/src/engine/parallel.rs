@@ -29,13 +29,18 @@
 //! ## Belief-cache invariant
 //!
 //! The cache is valid only for the `logm` snapshot it was gathered from
-//! (see [`super::belief`] module docs); `candidates` and `marginals`
-//! re-gather on entry, which keeps the engine correct under the
-//! coordinator's commit-then-refresh loop at ~1/deg of the old gather
-//! cost. Frontiers smaller than the vertex count skip the full-table
-//! gather entirely and fall back to the native-style per-row gather
-//! (still threaded, still bit-identical) — otherwise narrow waves (rbp
-//! top-k, dirty refreshes) would pay O(E·A) for O(k·deg·A) of work.
+//! (see [`super::belief`] module docs). Under the coordinator's commit
+//! tracking ([`MessageEngine::begin_tracking`]) the cache is maintained
+//! *incrementally*: every committed row applies an O(A) per-destination
+//! delta, a drift guard re-gathers in full every `refresh_every`
+//! commits, and `candidates` reads the maintained rows directly — so
+//! narrow-frontier wave cost scales with |frontier|, not E. Untracked
+//! `candidates` calls re-gather on entry: full table for wave-scale
+//! frontiers, native-style per-row gather for frontiers smaller than
+//! the vertex count (otherwise narrow waves would pay O(E·A) for
+//! O(k·deg·A) of work). Both full gathers go through
+//! [`BeliefCache::gather_par`], chunk-parallel over vertices and
+//! bit-identical to the serial gather at any thread count.
 
 use anyhow::Result;
 
@@ -119,15 +124,21 @@ impl MessageEngine for ParallelEngine {
         out.residuals.clear();
         out.residuals.resize(n, 0.0);
 
-        // Gather-scope policy: the full-table gather costs O(E·A); the
-        // per-row gather costs O(Σ deg(src) · A) ≈ n·deg·A. With
-        // E = V·deg they cross at n ≈ V, so small frontiers (rbp top-k
-        // waves, dirty-list refreshes after narrow waves) keep the
-        // native-style per-row gather and only wave-scale frontiers pay
-        // for the shared cache. Both paths are bit-identical.
-        let use_cache = n >= mrf.live_vertices;
-        if use_cache {
-            self.cache.gather(mrf, logm);
+        // Tracked mode: the coordinator keeps the cache coherent through
+        // commit deltas, so no per-call gather at all — only the drift
+        // guard's periodic full re-gather. Untracked gather-scope
+        // policy: the full-table gather costs O(E·A); the per-row gather
+        // costs O(Σ deg(src) · A) ≈ n·deg·A. With E = V·deg they cross
+        // at n ≈ V, so small frontiers (rbp top-k waves, dirty-list
+        // refreshes after narrow waves) keep the native-style per-row
+        // gather and only wave-scale frontiers pay for the shared cache.
+        // All paths are bit-identical.
+        let tracked = self.cache.is_tracking(mrf);
+        let use_cache = tracked || n >= mrf.live_vertices;
+        if tracked {
+            self.cache.refresh_if_due(mrf, logm, self.threads);
+        } else if use_cache {
+            self.cache.gather_par(mrf, logm, self.threads);
         }
         let cache = &self.cache;
         let opts = self.opts;
@@ -160,10 +171,24 @@ impl MessageEngine for ParallelEngine {
     }
 
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {
-        self.cache.gather(mrf, logm);
+        // always a from-scratch (parallel, bit-identical-to-serial)
+        // gather: reported marginals carry no incremental drift
+        self.cache.gather_par(mrf, logm, self.threads);
         let mut out = vec![0.0f32; mrf.num_vertices * mrf.max_arity];
         self.cache.write_marginals(mrf, &mut out);
         Ok(out)
+    }
+
+    fn begin_tracking(&mut self, mrf: &Mrf, logm: &[f32], refresh_every: usize) {
+        self.cache.begin_tracking(mrf, logm, refresh_every, self.threads);
+    }
+
+    fn notify_commit(&mut self, mrf: &Mrf, e: usize, old: &[f32], new: &[f32]) {
+        self.cache.apply_commit(mrf, e, old, new);
+    }
+
+    fn end_tracking(&mut self) {
+        self.cache.end_tracking();
     }
 
     fn name(&self) -> &'static str {

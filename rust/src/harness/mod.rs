@@ -54,6 +54,7 @@ pub fn gpu_params(cfg: &HarnessConfig) -> RunParams {
         max_iterations: cfg.max_iterations,
         timeout: cfg.timeout,
         sim_timeout: cfg.sim_timeout,
+        belief_refresh_every: cfg.belief_refresh_every,
         ..Default::default()
     }
 }
@@ -69,13 +70,17 @@ pub fn srbp_params(cfg: &HarnessConfig) -> RunParams {
     }
 }
 
-/// Build the configured engine.
+/// Build the configured engine. The parallel engine gets
+/// `cfg.engine_threads` workers — deliberately decoupled from campaign
+/// `threads` (across-run parallelism).
 pub fn make_engine(cfg: &HarnessConfig) -> Result<Box<dyn MessageEngine>> {
     let opts = cfg.update_options();
     Ok(match cfg.engine {
         EngineKind::Pjrt => Box::new(PjrtEngine::from_default_dir_with(opts)?),
         EngineKind::Native => Box::new(NativeEngine::with_options(opts)),
-        EngineKind::Parallel => Box::new(ParallelEngine::with_options(opts)),
+        EngineKind::Parallel => {
+            Box::new(ParallelEngine::with_options_threads(opts, cfg.engine_threads))
+        }
     })
 }
 
@@ -172,5 +177,12 @@ mod tests {
         let cfg = HarnessConfig::default();
         assert!(srbp_params(&cfg).cost_model.is_none());
         assert!(gpu_params(&cfg).cost_model.is_some());
+    }
+
+    #[test]
+    fn gpu_params_carry_refresh_cadence() {
+        let mut cfg = HarnessConfig::default();
+        cfg.belief_refresh_every = 7;
+        assert_eq!(gpu_params(&cfg).belief_refresh_every, 7);
     }
 }

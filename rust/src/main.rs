@@ -47,6 +47,12 @@ COMMON FLAGS (also settable via --config file.toml):
   --srbp-timeout S      serial-baseline budget (paper: 90)
   --engine pjrt|native|parallel   update engine (default pjrt;
                         `parallel` = belief-cached multi-threaded CPU)
+  --engine-threads N    worker threads inside the parallel engine
+                        (default: all cores; campaign --threads is the
+                        separate across-run fan-out)
+  --belief-refresh-every K   incremental belief maintenance drift guard:
+                        full re-gather every K committed rows
+                        (default 64; 0 = re-gather every engine call)
   --out-dir DIR         JSON report directory (default results/)
 
 RUN FLAGS:

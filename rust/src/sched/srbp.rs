@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use crate::collections::IndexedHeap;
-use crate::coordinator::{RunParams, RunResult, StopReason};
+use crate::coordinator::{FrontierDigest, RunParams, RunResult, StopReason};
 use crate::engine::native::NativeEngine;
 use crate::engine::MessageEngine;
 use crate::graph::Mrf;
@@ -56,6 +56,7 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
     });
 
     let mut message_updates = 0u64;
+    let mut digest = FrontierDigest::new();
     let mut updates_cap = params.max_iterations as u64;
     if updates_cap < u64::MAX / 2 {
         // the frontier coordinator counts iterations (bulk rounds); a fair
@@ -89,6 +90,9 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
 
         // pop-max and commit its cached candidate (asynchronously)
         phases.time("select", || heap.pop());
+        // each pop is its own single-edge wave in the digest's terms
+        digest.push_edge(e as i32);
+        digest.push_wave_end();
         phases.time("commit", || {
             logm[e * a..(e + 1) * a].copy_from_slice(&cand[e * a..(e + 1) * a]);
         });
@@ -124,6 +128,7 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         message_updates,
         engine_calls: message_updates,
         final_residual,
+        frontier_digest: digest.value(),
         phases,
         // serial CPU runs are *measured*, not simulated: this testbed's
         // single core is the paper's CPU setup (see perfmodel docs)

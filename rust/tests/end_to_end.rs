@@ -44,6 +44,12 @@ fn pjrt_and_native_runs_agree() {
     let params = RunParams {
         eps: 1e-5,
         want_marginals: true,
+        // pin the drift guard to its bit-identical cadence: the native
+        // engine honors commit tracking while pjrt ignores it, and this
+        // test asserts iteration-exact agreement between the two — at
+        // K=1 the tracked path provably equals gather-per-call, so the
+        // comparison stays about the engines, not belief maintenance
+        belief_refresh_every: 1,
         ..Default::default()
     };
     let mut native = NativeEngine::new();

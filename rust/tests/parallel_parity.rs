@@ -8,6 +8,7 @@
 //! `engine::belief::candidate_row_from_belief`), so any drift is a bug.
 
 use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::belief::BeliefCache;
 use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
 use bp_sched::util::Rng;
 use bp_sched::Mrf;
@@ -91,6 +92,80 @@ fn parity_two_threads() {
 fn parity_eight_threads() {
     for (label, g) in &test_graphs() {
         parity_run(label, g, 8);
+    }
+}
+
+#[test]
+fn parallel_gather_bit_identical_at_every_thread_count() {
+    // The chunk-parallel belief gather must fill the cache with exactly
+    // the serial gather's bits on every graph family, at 1/2/4/8
+    // threads — it is the drift guard's refresh path, so any divergence
+    // would silently leak into tracked candidate evaluation.
+    for (label, g) in &test_graphs() {
+        let m = g.uniform_messages();
+        let mut serial = BeliefCache::new();
+        serial.gather(g, m.as_slice());
+        for t in [1usize, 2, 4, 8] {
+            let mut par = BeliefCache::new();
+            par.gather_par(g, m.as_slice(), t);
+            for v in 0..g.live_vertices {
+                assert_bits_equal(
+                    serial.row(v),
+                    par.row(v),
+                    &format!("{label} t={t} vertex {v}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tracked_cache_parity_on_narrow_frontiers() {
+    // Incremental maintenance with frontiers smaller than the vertex
+    // count: every engine (native, parallel at 1/2/4/8 threads)
+    // consumes the delta-maintained cache and must produce identical
+    // bits round after round. Commits go through notify_commit exactly
+    // as the coordinator would route them.
+    for (label, g) in &test_graphs() {
+        let a = g.max_arity;
+        // frontier strictly smaller than the vertex count: the narrow
+        // regime the incremental path exists for
+        let k = (g.live_vertices / 2).max(1).min(g.live_edges);
+        let frontier: Vec<i32> = (0..k as i32).collect();
+        let mut engines: Vec<Box<dyn MessageEngine>> = vec![Box::new(NativeEngine::new())];
+        for t in [1usize, 2, 4, 8] {
+            engines.push(Box::new(ParallelEngine::with_threads(t)));
+        }
+        let mut logm = g.uniform_messages().as_slice().to_vec();
+        for eng in engines.iter_mut() {
+            eng.begin_tracking(g, &logm, 8);
+        }
+        for round in 0..6 {
+            let mut batches = Vec::with_capacity(engines.len());
+            for eng in engines.iter_mut() {
+                batches.push(eng.candidates(g, &logm, &frontier).unwrap());
+            }
+            let base = &batches[0];
+            for (i, b) in batches.iter().enumerate().skip(1) {
+                let what = format!("{label} round{round} engine{i}");
+                assert_bits_equal(&base.new_m, &b.new_m, &format!("{what}.new_m"));
+                assert_bits_equal(&base.residuals, &b.residuals, &format!("{what}.residuals"));
+            }
+            // commit the wave through every engine's cache, then into logm
+            for (i, &e) in frontier.iter().enumerate() {
+                let e = e as usize;
+                let row = base.row(i, a).to_vec();
+                if logm[e * a..(e + 1) * a] != row[..] {
+                    for eng in engines.iter_mut() {
+                        eng.notify_commit(g, e, &logm[e * a..(e + 1) * a], &row);
+                    }
+                    logm[e * a..(e + 1) * a].copy_from_slice(&row);
+                }
+            }
+        }
+        for eng in engines.iter_mut() {
+            eng.end_tracking();
+        }
     }
 }
 
