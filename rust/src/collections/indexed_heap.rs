@@ -230,7 +230,7 @@ mod tests {
                         let got = h.pop();
                         let want = reference
                             .iter()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(b.0)));
+                            .max_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(b.0)));
                         match (got, want) {
                             (None, None) => {}
                             (Some((gp, _gk)), Some((_, &wp))) => {

@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use toml_lite::Value;
 
+use crate::coordinator::ResidualRefresh;
 use crate::engine::{Semiring, UpdateOptions};
 
 /// Which engine executes message updates.
@@ -64,6 +65,11 @@ pub struct HarnessConfig {
     /// (see [`crate::engine::belief::drift_bound`]). `0` disables
     /// incremental maintenance (gather on every engine call).
     pub belief_refresh_every: usize,
+    /// Dirty-list refresh policy: `exact` recomputes every dirtied
+    /// candidate row; `bounded` skips rows whose residual upper bound
+    /// (last exact residual + accumulated commit-delta slack) stays
+    /// below ε (see [`crate::coordinator::ResidualRefresh`]).
+    pub residual_refresh: ResidualRefresh,
     /// Engine selection.
     pub engine: EngineKind,
     /// Semiring: marginal (sum-product) or MAP (max-product) inference.
@@ -87,6 +93,7 @@ impl Default for HarnessConfig {
             threads: crate::util::parallel::default_threads(),
             engine_threads: crate::util::parallel::default_threads(),
             belief_refresh_every: crate::engine::belief::DEFAULT_REFRESH_EVERY,
+            residual_refresh: ResidualRefresh::Exact,
             engine: EngineKind::Pjrt,
             semiring: Semiring::SumProduct,
             damping: 0.0,
@@ -123,6 +130,13 @@ impl HarnessConfig {
             }
             "belief_refresh_every" => {
                 self.belief_refresh_every = value.as_usize().context("belief_refresh_every")?
+            }
+            "residual_refresh" => {
+                self.residual_refresh = match value.as_str().context("residual_refresh")? {
+                    "exact" => ResidualRefresh::Exact,
+                    "bounded" => ResidualRefresh::Bounded,
+                    other => bail!("residual_refresh must be exact|bounded, got {other:?}"),
+                }
             }
             "engine" => {
                 self.engine = match value.as_str().context("engine")? {
@@ -283,6 +297,17 @@ mod tests {
             .unwrap();
         assert_eq!(c.engine_threads, 1);
         assert_eq!(c.belief_refresh_every, 0);
+    }
+
+    #[test]
+    fn residual_refresh_key() {
+        let mut c = HarnessConfig::default();
+        assert_eq!(c.residual_refresh, ResidualRefresh::Exact);
+        c.apply_args(&args(&["--residual-refresh", "bounded"])).unwrap();
+        assert_eq!(c.residual_refresh, ResidualRefresh::Bounded);
+        c.apply_args(&args(&["--residual-refresh=exact"])).unwrap();
+        assert_eq!(c.residual_refresh, ResidualRefresh::Exact);
+        assert!(c.apply_args(&args(&["--residual-refresh", "lazy"])).is_err());
     }
 
     #[test]

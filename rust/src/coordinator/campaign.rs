@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 
-use super::{RunResult, TimeBasis};
+use super::{RunResult, StopReason, TimeBasis};
 use crate::graph::Mrf;
 use crate::util::json::Json;
 use crate::util::parallel;
@@ -44,13 +44,26 @@ where
 }
 
 impl Campaign {
-    /// Fraction of runs that converged.
+    /// Fraction of runs that converged. Stalled runs
+    /// ([`StopReason::Stalled`]) count as failures, exactly like
+    /// timeouts — before PR 3 they were misreported as converged.
     pub fn converged_fraction(&self) -> f64 {
         if self.outcomes.is_empty() {
             return 0.0;
         }
         self.outcomes.iter().filter(|r| r.converged()).count() as f64
             / self.outcomes.len() as f64
+    }
+
+    /// Runs that wedged: the scheduler returned an empty frontier while
+    /// residual upper bounds were still above ε. Reported separately so
+    /// a nonzero count is visible in tables and JSON instead of being
+    /// silently folded into either success or timeout.
+    pub fn stalled_count(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|r| r.stop == StopReason::Stalled)
+            .count()
     }
 
     /// Cumulative convergence curve: sorted (time, fraction) steps, one
@@ -62,7 +75,7 @@ impl Campaign {
             .filter(|r| r.converged())
             .map(|r| r.time(basis))
             .collect();
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         let n = self.outcomes.len().max(1) as f64;
         times
             .iter()
@@ -170,6 +183,11 @@ impl Campaign {
                 "converged",
                 Json::arr(self.outcomes.iter().map(|r| Json::Bool(r.converged()))),
             )
+            .field(
+                "stop",
+                Json::arr(self.outcomes.iter().map(|r| Json::str(r.stop.label()))),
+            )
+            .num("stalled", self.stalled_count() as f64)
             .num("total_message_updates", self.total_message_updates() as f64)
             .num("mean_iterations", self.mean_iterations())
             .build()
@@ -268,5 +286,22 @@ mod tests {
         assert!(j.contains("curve_sim_time_s"));
         assert!(j.contains("curve_wall_time_s"));
         assert!(j.contains("\"runs\":4"));
+        assert!(j.contains("\"stop\":[\"converged\""));
+        assert!(j.contains("\"stalled\":0"));
+    }
+
+    #[test]
+    fn stalled_runs_counted_separately_not_as_converged() {
+        let mut c = mini_campaign();
+        assert_eq!(c.stalled_count(), 0);
+        let full = c.converged_fraction();
+        // wedge one outcome: convergence fraction must drop, the stall
+        // must surface in both the counter and the JSON stop labels
+        c.outcomes[0].stop = StopReason::Stalled;
+        assert_eq!(c.stalled_count(), 1);
+        assert!(c.converged_fraction() < full);
+        let j = c.to_json().render();
+        assert!(j.contains("\"stalled\":1"));
+        assert!(j.contains("\"stop\":[\"stalled\""));
     }
 }

@@ -245,27 +245,45 @@ impl BeliefCache {
     /// Apply one committed row's delta: the caller is replacing message
     /// row `e` (currently `old_row`) with `new_row`, which shifts the
     /// belief of `dst[e]` by `new - old` per lane. O(A), vs O(E·A) for a
-    /// re-gather. No-op unless tracking `mrf`.
+    /// re-gather. Belief delta is a no-op unless tracking `mrf`.
     ///
-    /// Once the guard is already due, the arithmetic is skipped: every
-    /// tracked read goes through [`refresh_if_due`](Self::refresh_if_due)
-    /// first, so the buffer is unconditionally re-gathered before anyone
-    /// looks at it again — wide waves (lbp commits ≫ `refresh_every`
-    /// rows) would otherwise pay O(E·A) of delta work per commit phase
-    /// just to have the refresh discard it.
-    pub fn apply_commit(&mut self, mrf: &Mrf, e: usize, old_row: &[f32], new_row: &[f32]) {
+    /// Returns the commit's max-norm delta `max_lane |new - old|` —
+    /// computed fused with the belief update when one runs, directly
+    /// otherwise — so callers always receive a sound per-commit bound for
+    /// the coordinator's residual slack accounting.
+    ///
+    /// Once the guard is already due, the belief arithmetic is skipped:
+    /// every tracked read goes through
+    /// [`refresh_if_due`](Self::refresh_if_due) first, so the buffer is
+    /// unconditionally re-gathered before anyone looks at it again — wide
+    /// waves (lbp commits ≫ `refresh_every` rows) would otherwise pay
+    /// O(E·A) of delta work per commit phase just to have the refresh
+    /// discard it.
+    pub fn apply_commit(&mut self, mrf: &Mrf, e: usize, old_row: &[f32], new_row: &[f32]) -> f32 {
         if !self.is_tracking(mrf) {
-            return;
+            return super::row_delta_norm(old_row, new_row);
         }
+        let norm;
         if self.commits_since_refresh < self.refresh_every {
             let a = self.arity;
             let v = mrf.dst[e] as usize;
             let row = &mut self.belief[v * a..(v + 1) * a];
+            let mut mx = 0.0f32;
             for ((b, n), o) in row.iter_mut().zip(new_row).zip(old_row) {
-                *b += n - o;
+                let d = n - o;
+                let ad = d.abs();
+                // NaN-propagating, matching `row_delta_norm`
+                if ad.is_nan() || ad > mx {
+                    mx = ad;
+                }
+                *b += d;
             }
+            norm = mx;
+        } else {
+            norm = super::row_delta_norm(old_row, new_row);
         }
         self.commits_since_refresh += 1;
+        norm
     }
 
     /// Deltas applied since the last full gather.
@@ -541,7 +559,10 @@ mod tests {
         cache.begin_tracking(&g, &logm, 1000, 1);
         let mut row = vec![0.0f32; a];
         random_row(&g, &mut rng, 3, &mut row);
-        cache.apply_commit(&g, 3, &logm[3 * a..4 * a], &row);
+        let norm = cache.apply_commit(&g, 3, &logm[3 * a..4 * a], &row);
+        let want = super::super::row_delta_norm(&logm[3 * a..4 * a], &row);
+        assert_eq!(norm, want, "fused delta norm");
+        assert!(norm > 0.0);
         logm[3 * a..4 * a].copy_from_slice(&row);
         assert_eq!(cache.commits_since_refresh(), 1);
         let mut fresh = BeliefCache::new();

@@ -58,6 +58,8 @@ pub struct UpdateOptions {
 }
 
 /// MAP decode: per-vertex argmax of (max-)marginal rows `[V * A]`.
+/// Total order (`f32::total_cmp`), so a NaN lane — e.g. from a divergent
+/// run — decodes deterministically instead of panicking.
 pub fn map_decode(mrf: &Mrf, marginals: &[f32]) -> Vec<usize> {
     let a = mrf.max_arity;
     (0..mrf.live_vertices)
@@ -65,11 +67,30 @@ pub fn map_decode(mrf: &Mrf, marginals: &[f32]) -> Vec<usize> {
             let row = &marginals[v * a..v * a + mrf.arity_of(v)];
             row.iter()
                 .enumerate()
-                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .max_by(|x, y| x.1.total_cmp(y.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0)
         })
         .collect()
+}
+
+/// Max-norm of `new - old` over two message rows — the per-commit delta
+/// the coordinator's bound-guided residual refresh accumulates (see
+/// [`MessageEngine::notify_commit`]). Padded lanes hold 0.0 in both rows,
+/// so they contribute nothing. NaN-propagating: a poisoned row must
+/// yield a NaN delta (hence NaN slack that can never pass an `< eps`
+/// skip check), not a silent 0 that would mark its dependents as
+/// certainly converged.
+#[inline]
+pub fn row_delta_norm(old: &[f32], new: &[f32]) -> f32 {
+    let mut mx = 0.0f32;
+    for (n, o) in new.iter().zip(old) {
+        let d = (n - o).abs();
+        if d.is_nan() || d > mx {
+            mx = d;
+        }
+    }
+    mx
 }
 
 /// Candidate updates for one frontier, row `i` aligned with `frontier[i]`.
@@ -134,7 +155,17 @@ pub trait MessageEngine {
     /// The caller is about to overwrite message row `e` (currently
     /// `old`) with `new`. Called once per committed row, *before* the
     /// overwrite, only between `begin_tracking` and `end_tracking`.
-    fn notify_commit(&mut self, _mrf: &Mrf, _e: usize, _old: &[f32], _new: &[f32]) {}
+    ///
+    /// Returns the commit's max-norm delta `max_lane |new - old|` — the
+    /// quantity the coordinator's bound-guided residual refresh
+    /// accumulates into dependents' slack (see
+    /// [`crate::coordinator::ResidualRefresh`]). Engines that maintain
+    /// belief state compute it fused with the per-destination delta
+    /// application; the default computes it directly, so engines without
+    /// belief state (e.g. PJRT) still report a sound delta.
+    fn notify_commit(&mut self, _mrf: &Mrf, _e: usize, old: &[f32], new: &[f32]) -> f32 {
+        row_delta_norm(old, new)
+    }
 
     /// End incremental belief maintenance (default no-op).
     fn end_tracking(&mut self) {}
@@ -158,6 +189,52 @@ mod tests {
         };
         assert_eq!(b.row(0, 2), &[1.0, 2.0]);
         assert_eq!(b.row(1, 2), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn map_decode_survives_nan_marginals() {
+        let mut rng = Rng::new(9);
+        let g = ising::generate("i", 3, 1.0, &mut rng).unwrap();
+        let mut marg = vec![0.5f32; g.num_vertices * g.max_arity];
+        marg[0] = f32::NAN; // divergent run: decode must not panic
+        let decoded = map_decode(&g, &marg);
+        assert_eq!(decoded.len(), g.live_vertices);
+        for (v, &x) in decoded.iter().enumerate() {
+            assert!(x < g.arity_of(v), "vertex {v} decoded out of range");
+        }
+    }
+
+    #[test]
+    fn row_delta_norm_is_max_abs_difference() {
+        assert_eq!(row_delta_norm(&[0.0, 1.0], &[0.5, -1.0]), 2.0);
+        assert_eq!(row_delta_norm(&[0.25, 0.25], &[0.25, 0.25]), 0.0);
+    }
+
+    #[test]
+    fn default_notify_commit_reports_delta_norm() {
+        let mut rng = Rng::new(10);
+        let g = ising::generate("i", 3, 1.0, &mut rng).unwrap();
+        // an engine that never overrides tracking still reports deltas
+        struct Stub;
+        impl MessageEngine for Stub {
+            fn candidates_into(
+                &mut self,
+                _mrf: &Mrf,
+                _logm: &[f32],
+                _frontier: &[i32],
+                _out: &mut CandidateBatch,
+            ) -> Result<()> {
+                Ok(())
+            }
+            fn marginals(&mut self, _mrf: &Mrf, _logm: &[f32]) -> Result<Vec<f32>> {
+                Ok(vec![])
+            }
+            fn name(&self) -> &'static str {
+                "stub"
+            }
+        }
+        let d = Stub.notify_commit(&g, 0, &[0.0, 0.0], &[0.125, -0.25]);
+        assert_eq!(d, 0.25);
     }
 
     #[test]

@@ -183,8 +183,8 @@ impl MessageEngine for ParallelEngine {
         self.cache.begin_tracking(mrf, logm, refresh_every, self.threads);
     }
 
-    fn notify_commit(&mut self, mrf: &Mrf, e: usize, old: &[f32], new: &[f32]) {
-        self.cache.apply_commit(mrf, e, old, new);
+    fn notify_commit(&mut self, mrf: &Mrf, e: usize, old: &[f32], new: &[f32]) -> f32 {
+        self.cache.apply_commit(mrf, e, old, new)
     }
 
     fn end_tracking(&mut self) {

@@ -55,6 +55,7 @@ pub fn gpu_params(cfg: &HarnessConfig) -> RunParams {
         timeout: cfg.timeout,
         sim_timeout: cfg.sim_timeout,
         belief_refresh_every: cfg.belief_refresh_every,
+        residual_refresh: cfg.residual_refresh,
         ..Default::default()
     }
 }
@@ -184,5 +185,14 @@ mod tests {
         let mut cfg = HarnessConfig::default();
         cfg.belief_refresh_every = 7;
         assert_eq!(gpu_params(&cfg).belief_refresh_every, 7);
+    }
+
+    #[test]
+    fn gpu_params_carry_residual_refresh_mode() {
+        use crate::coordinator::ResidualRefresh;
+        let mut cfg = HarnessConfig::default();
+        assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Exact);
+        cfg.residual_refresh = ResidualRefresh::Bounded;
+        assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Bounded);
     }
 }

@@ -25,6 +25,9 @@ struct SpeedupRow {
     settings: String,
     speedup: Speedup,
     converged: f64,
+    /// Runs that stalled (empty frontier with hot residual bounds) —
+    /// failures, broken out so they can't hide inside the timeout count.
+    stalled: usize,
     sim_time: f64,
     srbp_time: f64,
 }
@@ -45,6 +48,7 @@ fn speedup_table(
             settings,
             speedup: Speedup::compute(&ours, &base, TimeBasis::Simulated),
             converged: ours.converged_fraction(),
+            stalled: ours.stalled_count(),
             sim_time: ours.mean_time_lower_bound(TimeBasis::Simulated),
             srbp_time: base.mean_time_lower_bound(TimeBasis::Wallclock),
         });
@@ -60,11 +64,16 @@ fn speedup_table(
     ]);
     let mut json_rows = Vec::new();
     for r in &rows {
+        let conv = if r.stalled > 0 {
+            format!("{:.0}% ({} stalled)", r.converged * 100.0, r.stalled)
+        } else {
+            format!("{:.0}%", r.converged * 100.0)
+        };
         table.row(&[
             r.dataset.clone(),
             r.settings.clone(),
             r.speedup.render(),
-            format!("{:.0}%", r.converged * 100.0),
+            conv,
             format!("{:.2}ms", r.sim_time * 1e3),
             format!("{:.2}s", r.srbp_time),
         ]);
@@ -75,6 +84,7 @@ fn speedup_table(
                 .num("speedup", r.speedup.factor)
                 .field("lower_bound", Json::Bool(r.speedup.lower_bound))
                 .num("converged_fraction", r.converged)
+                .num("stalled", r.stalled as f64)
                 .num("sim_time_s", r.sim_time)
                 .num("srbp_wall_s", r.srbp_time)
                 .build(),

@@ -53,6 +53,11 @@ COMMON FLAGS (also settable via --config file.toml):
   --belief-refresh-every K   incremental belief maintenance drift guard:
                         full re-gather every K committed rows
                         (default 64; 0 = re-gather every engine call)
+  --residual-refresh exact|bounded   dirty-list refresh policy
+                        (default exact; bounded skips recomputing edges
+                        whose residual upper bound stays below eps —
+                        sound, same fixed point; saves engine work for
+                        rs/lbp, no-op for the eps-filtered rbp/rnbp)
   --out-dir DIR         JSON report directory (default results/)
 
 RUN FLAGS:
@@ -205,6 +210,10 @@ fn cmd_run(args: &[String]) -> Result<()> {
     println!(
         "  {} message updates, {} engine calls, final residual {:.2e}",
         result.message_updates, result.engine_calls, result.final_residual
+    );
+    println!(
+        "  dirty refresh: {} rows recomputed, {} skipped by residual bound",
+        result.refresh_rows, result.refresh_skipped
     );
     println!("  wallclock phases:");
     for (phase, secs, frac) in result.phases.breakdown() {

@@ -23,6 +23,15 @@
 //!
 //! Constants are documented V100 figures de-rated to realistic
 //! efficiencies; see [`CostModel::v100`].
+//!
+//! Cost accounting follows the *work actually issued*: under the
+//! bound-guided dirty-list refresh
+//! ([`crate::coordinator::ResidualRefresh::Bounded`]) only genuinely
+//! recomputed rows are billed as update-kernel work — skipped rows cost
+//! nothing, and the residual-bound filter itself is covered by the
+//! per-iteration convergence reduction already billed via
+//! [`CostModel::reduce_cost`] (on a device the filter fuses into the
+//! update kernel's predicate).
 
 /// How a scheduler builds its frontier — determines selection cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -54,10 +54,10 @@ impl Scheduler for Rbp {
             return vec![];
         }
         let k = k.min(self.scratch.len());
-        // partial select: top-k by residual (descending)
+        // partial select: top-k by residual (descending); total order so
+        // a NaN residual (divergent run) cannot panic the selection
         let idx = k - 1;
-        self.scratch
-            .select_nth_unstable_by(idx, |a, b| b.0.partial_cmp(&a.0).unwrap());
+        self.scratch.select_nth_unstable_by(idx, |a, b| b.0.total_cmp(&a.0));
         let frontier: Vec<i32> = self.scratch[..k].iter().map(|&(_, e)| e).collect();
         vec![frontier]
     }
@@ -91,7 +91,7 @@ mod tests {
             .map(|&e| res[e as usize])
             .fold(f32::INFINITY, f32::min);
         let mut all: Vec<f32> = res[..m].to_vec();
-        all.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        all.sort_by(|a, b| b.total_cmp(a));
         assert!(min_sel >= all[k - 1]);
     }
 
@@ -122,5 +122,22 @@ mod tests {
     #[should_panic(expected = "p must be in")]
     fn rejects_bad_p() {
         Rbp::new(0.0);
+    }
+
+    #[test]
+    fn nan_residuals_do_not_panic_select() {
+        // NaN residuals (divergent run) fail the eps filter; the top-k
+        // selection over the survivors must not panic and must still
+        // return the hot edges.
+        let mut rng = Rng::new(4);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let mut res = vec![f32::NAN; g.num_edges];
+        res[3] = 0.5;
+        res[7] = 0.2;
+        let mut s = Rbp::new(1.0);
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        let mut got = waves[0].clone();
+        got.sort();
+        assert_eq!(got, vec![3, 7]);
     }
 }

@@ -21,8 +21,15 @@ pub struct ResidualSplash {
     /// Splash (BFS) depth.
     pub h: usize,
     vertex_res: Vec<(f32, i32)>,
-    /// Per-vertex BFS level stamp: (epoch, level).
-    level: Vec<(u64, u32)>,
+    /// Per-vertex BFS claim stamp (epoch of the splash that absorbed it).
+    level: Vec<u64>,
+    /// Inward tree edge per BFS level `d`: child(d) -> parent(d-1).
+    /// Reused across selects — only the returned waves are cloned out.
+    tree_edges: Vec<Vec<i32>>,
+    /// BFS frontier scratch (current / next level), reused across roots
+    /// and selects.
+    bfs_cur: Vec<usize>,
+    bfs_next: Vec<usize>,
     epoch: u64,
 }
 
@@ -35,6 +42,9 @@ impl ResidualSplash {
             h,
             vertex_res: Vec::new(),
             level: Vec::new(),
+            tree_edges: Vec::new(),
+            bfs_cur: Vec::new(),
+            bfs_next: Vec::new(),
             epoch: 0,
         }
     }
@@ -72,52 +82,56 @@ impl Scheduler for ResidualSplash {
         }
         // 2. sort-and-select roots by vertex residual (descending). A full
         //    sort mirrors the paper's radix sort; the scan over all
-        //    vertices above is the dominant term either way.
-        self.vertex_res
-            .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        //    vertices above is the dominant term either way. Total order
+        //    so a NaN residual (divergent run) cannot panic the sort.
+        self.vertex_res.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
 
         // 3. grow merged splashes level-by-level until the message budget
-        //    is spent. `level` stamps vertices with their BFS depth; a
-        //    vertex claimed by an earlier root keeps its first level.
+        //    is spent. `level` stamps claimed vertices with the current
+        //    epoch; a vertex claimed by an earlier root stays with its
+        //    first splash. All per-select buffers are reused (cleared,
+        //    never reallocated once grown).
         self.epoch += 1;
         if self.level.len() != mrf.live_vertices {
-            self.level = vec![(0, 0); mrf.live_vertices];
+            self.level = vec![0; mrf.live_vertices];
         }
-        let mut levels: Vec<Vec<i32>> = vec![Vec::new(); self.h + 1]; // vertices per level
-        let mut tree_edges: Vec<Vec<i32>> = vec![Vec::new(); self.h]; // inward edge per level d: child(d)->parent(d-1)
+        if self.tree_edges.len() != self.h {
+            self.tree_edges = vec![Vec::new(); self.h];
+        }
+        for lv in self.tree_edges.iter_mut() {
+            lv.clear();
+        }
         let mut msg_count = 0usize;
 
-        'roots: for &(_, root) in self.vertex_res.iter() {
+        for &(_, root) in self.vertex_res.iter() {
             let root = root as usize;
-            if self.level[root].0 == self.epoch {
+            if self.level[root] == self.epoch {
                 continue; // already absorbed into another splash
             }
-            self.level[root] = (self.epoch, 0);
-            levels[0].push(root as i32);
-            // BFS
-            let mut frontier = vec![root];
+            self.level[root] = self.epoch;
+            // BFS, level by level
+            self.bfs_cur.clear();
+            self.bfs_cur.push(root);
             for d in 1..=self.h {
-                let mut next = Vec::new();
-                for &v in &frontier {
+                self.bfs_next.clear();
+                for &v in &self.bfs_cur {
                     for e in mrf.incoming(v) {
                         let u = mrf.src[e] as usize;
-                        if self.level[u].0 == self.epoch {
+                        if self.level[u] == self.epoch {
                             continue;
                         }
-                        self.level[u] = (self.epoch, d as u32);
-                        levels[d].push(u as i32);
-                        // inward message: u -> v is exactly edge e's
-                        // reverse? incoming(v) yields e with dst=v, src=u,
-                        // i.e. e IS the u->v message.
-                        tree_edges[d - 1].push(e as i32);
-                        next.push(u);
+                        self.level[u] = self.epoch;
+                        // incoming(v) yields e with dst=v, src=u, i.e. e
+                        // IS the inward u -> v message of this level.
+                        self.tree_edges[d - 1].push(e as i32);
+                        self.bfs_next.push(u);
                         msg_count += 2; // inward + outward update
                     }
                 }
-                frontier = next;
+                std::mem::swap(&mut self.bfs_cur, &mut self.bfs_next);
             }
             if msg_count >= budget {
-                break 'roots;
+                break;
             }
         }
 
@@ -125,13 +139,13 @@ impl Scheduler for ResidualSplash {
         //    then outward passes (reverse edges) from roots to leaves.
         let mut waves: Vec<Vec<i32>> = Vec::with_capacity(2 * self.h);
         for d in (0..self.h).rev() {
-            if !tree_edges[d].is_empty() {
-                waves.push(tree_edges[d].clone());
+            if !self.tree_edges[d].is_empty() {
+                waves.push(self.tree_edges[d].clone());
             }
         }
         for d in 0..self.h {
-            if !tree_edges[d].is_empty() {
-                let out: Vec<i32> = tree_edges[d]
+            if !self.tree_edges[d].is_empty() {
+                let out: Vec<i32> = self.tree_edges[d]
                     .iter()
                     .map(|&e| mrf.rev[e as usize])
                     .collect();
@@ -226,5 +240,37 @@ mod tests {
         let res = vec![0.0f32; g.num_edges];
         let mut s = ResidualSplash::new(0.1, 2);
         assert!(s.select(&ctx_with(&g, &res, 1e-4)).is_empty());
+    }
+
+    #[test]
+    fn repeated_selects_reuse_buffers_and_agree() {
+        // The live buffers (tree_edges, BFS scratch, claim stamps) are
+        // reused across selects; a second identical select must return
+        // identical waves, not artifacts of stale state.
+        let mut rng = Rng::new(5);
+        let g = ising::generate("i", 6, 2.0, &mut rng).unwrap();
+        let res = vec![1.0f32; g.num_edges];
+        let mut s = ResidualSplash::new(0.2, 2);
+        let first = s.select(&ctx_with(&g, &res, 1e-4));
+        let second = s.select(&ctx_with(&g, &res, 1e-4));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn nan_residuals_do_not_panic_select() {
+        // A NaN residual (divergent run) fails the eps filter and must
+        // not panic the vertex sort; hot edges still get scheduled.
+        let mut rng = Rng::new(6);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let mut res = vec![f32::NAN; g.num_edges];
+        for e in g.incoming(3) {
+            res[e] = 0.5;
+        }
+        let mut s = ResidualSplash::new(1.0, 2);
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        let all: std::collections::HashSet<i32> = waves.into_iter().flatten().collect();
+        for e in g.incoming(3) {
+            assert!(all.contains(&(e as i32)), "hot edge {e} missing");
+        }
     }
 }

@@ -49,7 +49,9 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         for e in 0..live {
             let r = engine.candidate_row(mrf, &logm, e, &mut row);
             cand[e * a..(e + 1) * a].copy_from_slice(&row);
-            if r >= params.eps {
+            // NaN residuals (divergent run) stay in the queue: dropping
+            // them would let the run drain the heap and report Converged
+            if r >= params.eps || r.is_nan() {
                 heap.set(e, r);
             }
         }
@@ -103,7 +105,8 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
             for d in mrf.dependents(e) {
                 let r = engine.candidate_row(mrf, &logm, d, &mut row);
                 cand[d * a..(d + 1) * a].copy_from_slice(&row);
-                if r >= params.eps {
+                // NaN stays queued (see the initialization pass)
+                if r >= params.eps || r.is_nan() {
                     heap.set(d, r);
                 } else {
                     heap.remove(d);
@@ -127,6 +130,10 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         wall: clock.seconds(),
         message_updates,
         engine_calls: message_updates,
+        // serial RBP has no bulk dirty-list refresh: dependents are
+        // recomputed eagerly per pop, so neither counter applies
+        refresh_rows: 0,
+        refresh_skipped: 0,
         final_residual,
         frontier_digest: digest.value(),
         phases,
@@ -191,14 +198,22 @@ mod tests {
     fn timeout_bounds_runtime() {
         let mut rng = Rng::new(4);
         let g = ising::generate("i", 12, 3.5, &mut rng).unwrap();
+        // zero budget on a hard graph at tiny eps: the first amortized
+        // timeout check (after <= 256 updates) must trip —
+        // unconditionally, so this test cannot pass without exercising
+        // the stop path
         let params = RunParams {
-            timeout: 0.05,
+            timeout: 0.0,
             eps: 1e-10,
             ..Default::default()
         };
         let r = run_serial(&g, &params).unwrap();
-        if r.stop == StopReason::Timeout {
-            assert!(r.wall < 2.0);
-        }
+        assert_eq!(r.stop, StopReason::Timeout);
+        assert!(r.wall < 2.0);
+        assert!(
+            r.message_updates <= 256,
+            "timeout must fire at the first amortized check, after {} updates",
+            r.message_updates
+        );
     }
 }

@@ -69,7 +69,7 @@ impl PhaseTimer {
             .iter()
             .map(|(&k, &v)| (k, v, v / total))
             .collect();
-        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1));
         rows
     }
 
