@@ -210,31 +210,40 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
 
-    // --- dirty-list refresh: exact vs bounded residual maintenance ------
+    // --- dirty-list refresh: exact vs bounded vs lazy -------------------
     // Full coordinator runs (deterministic seeds, run once — each run IS
-    // the workload), comparing the step-3 refresh policies. The
-    // acceptance signal is the *engine-call row* count on workloads
-    // that commit sub-eps rows: rs (narrow splash frontiers, the
-    // paper-relevant case) and lbp (all changed messages) must show
-    // strictly fewer bounded refresh rows. rbp is the control: its
-    // commits all carry >= eps deltas, so the bound filter provably
-    // never fires and the two modes are bit-identical at zero cost.
-    println!("\ndirty-list refresh, ising20 (exact vs bounded --residual-refresh):");
+    // the workload), comparing the step-3 refresh policies. Acceptance
+    // signals on the *engine-call row* counts:
+    //   * bounded < exact for the sub-eps committers (rs narrow
+    //     frontiers — the paper-relevant case — and lbp);
+    //   * lazy < bounded on the narrow-frontier rs and rbp rows
+    //     (estimate-first: only boundary-relevant rows resolve), while
+    //     staying digest-identical to exact — which bounded is not for
+    //     rs;
+    //   * the full-frontier rbp control pins the degenerate boundary:
+    //     lazy rows == bounded rows == exact rows, identical digests.
+    println!("\ndirty-list refresh, ising20 (--residual-refresh exact|bounded|lazy):");
     println!(
-        "{:>12} {:>9} {:>12} {:>12} {:>12} {:>10}",
-        "scheduler", "mode", "refresh rows", "skipped", "engine calls", "wall"
+        "{:>12} {:>9} {:>12} {:>9} {:>9} {:>9} {:>12} {:>10}",
+        "scheduler", "mode", "refresh rows", "skipped", "deferred", "resolved", "engine calls",
+        "wall"
     );
     let mut rng = Rng::new(9);
     let gi = DatasetSpec::Ising { n: 20, c: 2.0 }.generate(&mut rng)?;
-    let mk_narrow: [(&str, fn() -> Box<dyn Scheduler>); 3] = [
+    let mk_narrow: [(&str, fn() -> Box<dyn Scheduler>); 4] = [
         ("rs p=1/64", || Box::new(ResidualSplash::new(1.0 / 64.0, 2))),
         ("lbp", || Box::new(Lbp::new())),
         ("rbp p=1/64", || Box::new(Rbp::new(1.0 / 64.0))),
+        ("rbp p=1", || Box::new(Rbp::new(1.0))),
     ];
     for (label, mk) in mk_narrow {
         let mut digests = Vec::new();
         let mut rows = Vec::new();
-        for mode in [ResidualRefresh::Exact, ResidualRefresh::Bounded] {
+        for mode in [
+            ResidualRefresh::Exact,
+            ResidualRefresh::Bounded,
+            ResidualRefresh::Lazy,
+        ] {
             let params = RunParams {
                 timeout: 10.0,
                 max_iterations: 50_000,
@@ -248,28 +257,39 @@ fn main() -> anyhow::Result<()> {
             let r = coordinator_run(&gi, &mut eng, sched.as_mut(), &params)?;
             let wall = t.seconds();
             println!(
-                "{:>12} {:>9} {:>12} {:>12} {:>12} {:>10}",
+                "{:>12} {:>9} {:>12} {:>9} {:>9} {:>9} {:>12} {:>10}",
                 label,
                 format!("{mode:?}").to_lowercase(),
                 r.refresh_rows,
                 r.refresh_skipped,
+                r.refresh_deferred,
+                r.refresh_resolved,
                 r.engine_calls,
                 fmt_duration(wall)
             );
             digests.push(r.frontier_digest);
             rows.push(r.refresh_rows);
         }
-        // rbp trajectories are bit-identical by construction; rs/lbp
-        // may differ at sub-eps scale when waves commit ε-stale rows
-        let trajectory = if digests[0] == digests[1] {
+        // rbp (both p) and lazy-vs-exact trajectories are bit-identical
+        // by construction; bounded rs/lbp may differ at sub-eps scale
+        // when waves commit ε-stale rows
+        let bounded_traj = if digests[0] == digests[1] {
             "identical"
         } else {
             "sub-eps-diverged"
         };
-        let ratio = rows[0] as f64 / (rows[1].max(1)) as f64;
+        let lazy_traj = if digests[0] == digests[2] {
+            "identical"
+        } else {
+            "DIVERGED (bug!)"
+        };
         println!(
-            "{:>12} trajectories {trajectory}, exact/bounded row ratio {ratio:.2}x",
-            ""
+            "{:>12} bounded trajectory {bounded_traj} ({:.2}x rows), \
+             lazy trajectory {lazy_traj} ({:.2}x rows vs exact, {:.2}x vs bounded)",
+            "",
+            rows[0] as f64 / (rows[1].max(1)) as f64,
+            rows[0] as f64 / (rows[2].max(1)) as f64,
+            rows[1] as f64 / (rows[2].max(1)) as f64,
         );
     }
 

@@ -2,7 +2,18 @@
 //!
 //! Keys are `0..capacity` (directed-edge ids); priorities are `f32`
 //! residuals. Supports O(log n) push / pop-max / update-priority and O(1)
-//! contains / peek — the operation mix of serial Residual BP.
+//! contains / peek — the operation mix of serial Residual BP and of the
+//! coordinator's lazy residual oracle (deferred dirty edges keyed by
+//! their residual upper bound, resolved in certified max-bound order).
+//!
+//! Ordering is **total and canonical**: priorities compare with
+//! [`f32::total_cmp`] (a NaN priority — a poisoned residual bound —
+//! ranks *above* every finite value, so a divergent edge surfaces at the
+//! root instead of hiding mid-heap where `<`/`>` comparisons would
+//! strand it), and equal priorities break toward the *smaller key*.
+//! Pop order is therefore a pure function of the (priority, key) set,
+//! independent of insertion history — what the lazy oracle's
+//! resolve-in-bound-order loop and the differential tests rely on.
 
 /// Max-heap with an inverse index from key to heap slot.
 #[derive(Clone, Debug)]
@@ -14,6 +25,17 @@ pub struct IndexedHeap {
 }
 
 const NONE: usize = usize::MAX;
+
+/// True when entry `a` outranks entry `b`: higher priority under
+/// `total_cmp` (NaN above +inf), ties to the smaller key.
+#[inline]
+fn outranks(a: (f32, usize), b: (f32, usize)) -> bool {
+    match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => a.1 < b.1,
+    }
+}
 
 impl IndexedHeap {
     /// Create for keys in `0..capacity`.
@@ -30,6 +52,32 @@ impl IndexedHeap {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Key capacity (valid keys are `0..capacity`).
+    pub fn capacity(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// Remove every entry, retaining capacity — O(len), so a reused
+    /// per-select heap costs nothing when it was left empty.
+    pub fn clear(&mut self) {
+        for &(_, key) in &self.heap {
+            self.pos[key] = NONE;
+        }
+        self.heap.clear();
+    }
+
+    /// Drain every (priority, key) entry in arbitrary (heap-array)
+    /// order — O(len), for callers that need the whole set but not the
+    /// canonical pop order (the lazy oracle's bulk resolve: all rows
+    /// read the same message snapshot, so resolution order is moot).
+    pub fn drain_unordered(&mut self, mut f: impl FnMut(f32, usize)) {
+        for &(p, key) in &self.heap {
+            self.pos[key] = NONE;
+            f(p, key);
+        }
+        self.heap.clear();
     }
 
     pub fn contains(&self, key: usize) -> bool {
@@ -57,10 +105,13 @@ impl IndexedHeap {
         } else {
             let old = self.heap[p].0;
             self.heap[p].0 = priority;
-            if priority > old {
-                self.sift_up(p);
-            } else if priority < old {
-                self.sift_down(p);
+            // total_cmp, not </>: a NaN priority (poisoned bound) must
+            // still move to its canonical slot instead of comparing
+            // false both ways and freezing in place
+            match priority.total_cmp(&old) {
+                std::cmp::Ordering::Greater => self.sift_up(p),
+                std::cmp::Ordering::Less => self.sift_down(p),
+                std::cmp::Ordering::Equal => {}
             }
         }
     }
@@ -107,7 +158,7 @@ impl IndexedHeap {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].0 <= self.heap[parent].0 {
+            if !outranks(self.heap[i], self.heap[parent]) {
                 break;
             }
             self.swap_slots(i, parent);
@@ -120,10 +171,10 @@ impl IndexedHeap {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut largest = i;
-            if l < self.heap.len() && self.heap[l].0 > self.heap[largest].0 {
+            if l < self.heap.len() && outranks(self.heap[l], self.heap[largest]) {
                 largest = l;
             }
-            if r < self.heap.len() && self.heap[r].0 > self.heap[largest].0 {
+            if r < self.heap.len() && outranks(self.heap[r], self.heap[largest]) {
                 largest = r;
             }
             if largest == i {
@@ -144,7 +195,7 @@ impl IndexedHeap {
     /// Debug invariant check (used by property tests).
     pub fn check_invariants(&self) -> bool {
         for i in 1..self.heap.len() {
-            if self.heap[i].0 > self.heap[(i - 1) / 2].0 {
+            if outranks(self.heap[i], self.heap[(i - 1) / 2]) {
                 return false;
             }
         }
@@ -228,15 +279,19 @@ mod tests {
                     }
                     2 => {
                         let got = h.pop();
+                        // canonical order: priority under total_cmp,
+                        // ties to the smaller key — so the model pins
+                        // the exact (priority, key) pair, not just the
+                        // priority
                         let want = reference
                             .iter()
-                            .max_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(b.0)));
+                            .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(a.0)));
                         match (got, want) {
                             (None, None) => {}
-                            (Some((gp, _gk)), Some((_, &wp))) => {
+                            (Some((gp, gk)), Some((&wk, &wp))) => {
                                 assert_eq!(gp, wp);
-                                // remove whichever key the heap returned
-                                reference.remove(&got.unwrap().1);
+                                assert_eq!(gk, wk);
+                                reference.remove(&gk);
                             }
                             other => panic!("mismatch {other:?}"),
                         }
@@ -259,5 +314,175 @@ mod tests {
         h.set(1, 7.5);
         assert_eq!(h.priority(1), Some(7.5));
         assert_eq!(h.priority(0), None);
+    }
+
+    #[test]
+    fn clear_resets_membership_and_reuses_capacity() {
+        let mut h = IndexedHeap::with_capacity(6);
+        for k in 0..5 {
+            h.set(k, k as f32);
+        }
+        assert_eq!(h.capacity(), 6);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.capacity(), 6);
+        for k in 0..6 {
+            assert!(!h.contains(k), "key {k} survived clear");
+        }
+        h.set(3, 9.0);
+        assert_eq!(h.pop(), Some((9.0, 3)));
+        assert!(h.check_invariants());
+    }
+
+    #[test]
+    fn drain_unordered_yields_every_entry_once() {
+        let mut h = IndexedHeap::with_capacity(8);
+        for k in [5usize, 1, 7, 2] {
+            h.set(k, k as f32 * 0.5);
+        }
+        let mut seen = Vec::new();
+        h.drain_unordered(|p, k| seen.push((p, k)));
+        seen.sort_by(|a, b| a.1.cmp(&b.1));
+        assert_eq!(seen, vec![(0.5, 1), (1.0, 2), (2.5, 5), (3.5, 7)]);
+        assert!(h.is_empty());
+        for k in 0..8 {
+            assert!(!h.contains(k));
+        }
+        h.set(3, 1.0);
+        assert!(h.check_invariants());
+    }
+
+    #[test]
+    fn equal_priorities_pop_smaller_key_first() {
+        // Canonical tie-break, independent of insertion order: the lazy
+        // oracle's certified-boundary loops rely on pop order being a
+        // pure function of the (priority, key) set.
+        for order in [[3usize, 1, 5, 0], [0, 5, 1, 3]] {
+            let mut h = IndexedHeap::with_capacity(8);
+            for k in order {
+                h.set(k, 1.0);
+            }
+            h.set(6, 2.0);
+            let popped: Vec<usize> = std::iter::from_fn(|| h.pop().map(|(_, k)| k)).collect();
+            assert_eq!(popped, vec![6, 0, 1, 3, 5]);
+        }
+    }
+
+    #[test]
+    fn nan_priorities_surface_first_and_move_on_rekey() {
+        // A NaN priority (poisoned residual bound) must rank above every
+        // finite value so the lazy refresh resolves it instead of
+        // skipping it, and re-keying to/from NaN must restore heap order.
+        let mut h = IndexedHeap::with_capacity(8);
+        h.set(0, 1.0);
+        h.set(1, f32::NAN);
+        h.set(2, f32::INFINITY);
+        assert!(h.check_invariants());
+        let (p, k) = h.peek().unwrap();
+        assert!(p.is_nan());
+        assert_eq!(k, 1);
+        // NaN -> finite: sinks below the finite max
+        h.set(1, 0.5);
+        assert_eq!(h.peek(), Some((f32::INFINITY, 2)));
+        assert!(h.check_invariants());
+        // finite -> NaN: rises to the root
+        h.set(0, f32::NAN);
+        let (p, k) = h.peek().unwrap();
+        assert!(p.is_nan());
+        assert_eq!(k, 0);
+        assert!(h.check_invariants());
+    }
+
+    #[test]
+    fn property_lazy_oracle_traffic_matches_model() {
+        // The lazy residual oracle's operation mix: keys mostly *rise*
+        // (slack accumulation = increase-key on live entries), the top
+        // is repeatedly removed (resolution in certified bound order),
+        // arbitrary keys vanish (mid-wave commits), and NaN keys appear
+        // (poisoned commit deltas). Random such sequences must agree
+        // with a naive map model on the exact (priority, key) pop
+        // sequence, NaN included, with invariants intact throughout.
+        let mut rng = Rng::new(20_260_730);
+        for _case in 0..40 {
+            let cap = 1 + rng.below(48);
+            let mut h = IndexedHeap::with_capacity(cap);
+            let mut model: std::collections::HashMap<usize, f32> =
+                std::collections::HashMap::new();
+            let model_max = |m: &std::collections::HashMap<usize, f32>| {
+                m.iter()
+                    .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(a.0)))
+                    .map(|(&k, &p)| (p, k))
+            };
+            for _op in 0..300 {
+                match rng.below(8) {
+                    0 | 1 => {
+                        // fresh deferral at an arbitrary bound
+                        let k = rng.below(cap);
+                        let p = (rng.uniform() * 10.0) as f32;
+                        h.set(k, p);
+                        model.insert(k, p);
+                    }
+                    2 | 3 | 4 => {
+                        // slack growth: increase-key on a live entry
+                        // (falls back to insert when empty)
+                        let k = rng.below(cap);
+                        let bump = (rng.uniform() * 0.5) as f32;
+                        let p = match h.priority(k) {
+                            Some(old) => old + bump,
+                            None => bump,
+                        };
+                        h.set(k, p);
+                        model.insert(k, p);
+                    }
+                    5 => {
+                        // occasional decrease-key / NaN poisoning
+                        let k = rng.below(cap);
+                        let p = if rng.coin(0.25) {
+                            f32::NAN
+                        } else {
+                            (rng.uniform() * 0.1) as f32
+                        };
+                        h.set(k, p);
+                        model.insert(k, p);
+                    }
+                    6 => {
+                        // resolve_top: pop in certified max-bound order
+                        let got = h.pop();
+                        let want = model_max(&model);
+                        match (got, want) {
+                            (None, None) => {}
+                            (Some((gp, gk)), Some((wp, wk))) => {
+                                assert_eq!(gp.to_bits(), wp.to_bits(), "pop priority");
+                                assert_eq!(gk, wk, "pop key");
+                                model.remove(&gk);
+                            }
+                            other => panic!("pop mismatch {other:?}"),
+                        }
+                    }
+                    _ => {
+                        // mid-wave commit: arbitrary removal
+                        let k = rng.below(cap);
+                        let got = h.remove(k);
+                        let want = model.remove(&k);
+                        match (got, want) {
+                            (None, None) => {}
+                            (Some(g), Some(w)) => assert_eq!(g.to_bits(), w.to_bits()),
+                            other => panic!("remove mismatch {other:?}"),
+                        }
+                    }
+                }
+                assert!(h.check_invariants(), "invariant broken");
+                assert_eq!(h.len(), model.len());
+            }
+            // drain: the full pop sequence must match the model's
+            // canonical descending order
+            while let Some((gp, gk)) = h.pop() {
+                let (wp, wk) = model_max(&model).expect("heap longer than model");
+                assert_eq!(gp.to_bits(), wp.to_bits());
+                assert_eq!(gk, wk);
+                model.remove(&gk);
+            }
+            assert!(model.is_empty());
+        }
     }
 }

@@ -68,7 +68,10 @@ pub struct HarnessConfig {
     /// Dirty-list refresh policy: `exact` recomputes every dirtied
     /// candidate row; `bounded` skips rows whose residual upper bound
     /// (last exact residual + accumulated commit-delta slack) stays
-    /// below ε (see [`crate::coordinator::ResidualRefresh`]).
+    /// below ε; `lazy` defers every dirty row into a bound-keyed queue
+    /// and recomputes on scheduler demand only where the selection
+    /// boundary depends on it (see
+    /// [`crate::coordinator::ResidualRefresh`]).
     pub residual_refresh: ResidualRefresh,
     /// Engine selection.
     pub engine: EngineKind,
@@ -135,7 +138,8 @@ impl HarnessConfig {
                 self.residual_refresh = match value.as_str().context("residual_refresh")? {
                     "exact" => ResidualRefresh::Exact,
                     "bounded" => ResidualRefresh::Bounded,
-                    other => bail!("residual_refresh must be exact|bounded, got {other:?}"),
+                    "lazy" => ResidualRefresh::Lazy,
+                    other => bail!("residual_refresh must be exact|bounded|lazy, got {other:?}"),
                 }
             }
             "engine" => {
@@ -305,9 +309,11 @@ mod tests {
         assert_eq!(c.residual_refresh, ResidualRefresh::Exact);
         c.apply_args(&args(&["--residual-refresh", "bounded"])).unwrap();
         assert_eq!(c.residual_refresh, ResidualRefresh::Bounded);
+        c.apply_args(&args(&["--residual-refresh", "lazy"])).unwrap();
+        assert_eq!(c.residual_refresh, ResidualRefresh::Lazy);
         c.apply_args(&args(&["--residual-refresh=exact"])).unwrap();
         assert_eq!(c.residual_refresh, ResidualRefresh::Exact);
-        assert!(c.apply_args(&args(&["--residual-refresh", "lazy"])).is_err());
+        assert!(c.apply_args(&args(&["--residual-refresh", "eager"])).is_err());
     }
 
     #[test]

@@ -80,7 +80,85 @@
 //! ε-stale candidates where `Exact` commits freshly refreshed ones, so
 //! the two modes' trajectories agree at fixed-point tolerance rather
 //! than bitwise (`tests/residual_bound_parity.rs`). The default is
-//! `Exact`, which is byte-for-byte the pre-PR-3 behavior.
+//! `Exact`: the same eager recompute-every-dirty-edge contract the
+//! coordinator has always had. (Its absolute trajectories did shift
+//! once, in PR 4, when rbp/rs selection tie-breaking was made
+//! canonical — value ties now break to the smaller edge/vertex id —
+//! so cross-version digest comparisons are meaningful from PR 4 on;
+//! all mode-vs-mode identity statements here are within-build.)
+//!
+//! ## Lazy refresh (`ResidualRefresh::Lazy`)
+//!
+//! Bounded refresh still *eagerly* recomputes every over-ε dirty edge,
+//! even when the scheduler's selection boundary would never admit it.
+//! Under [`RunParams::residual_refresh`] `= Lazy` the step-3 refresh
+//! recomputes nothing: every dirty edge is *deferred* into a
+//! max-priority queue ([`crate::collections::IndexedHeap`]) keyed by
+//! its residual upper bound (the same `res + slack + cushion` machinery
+//! as Bounded), and selection goes through the
+//! [`crate::sched::Scheduler::select_lazy`] seam, where a
+//! [`crate::sched::ResidualOracle`] resolves deferred edges to exact
+//! residuals on demand — one engine row per resolution, through
+//! [`MessageEngine::candidate_row_into`]. This is Sutton & McCallum's
+//! estimate-first scheduling: exact-residual work is spent only where a
+//! selection decision depends on it, so a narrow-frontier wave costs
+//! O(selected) engine rows instead of O(dirty).
+//!
+//! **Soundness** is inherited from the Bounded bound: a deferred edge's
+//! queue key dominates its true residual, convergence is still declared
+//! on upper bounds, and a NaN bound ranks *above* every finite bound in
+//! the queue, so a poisoned edge is resolved first rather than skipped.
+//! When a lazy run's scheduler returns no waves, the coordinator
+//! re-checks the (select-time-tightened) bounds before reporting: a
+//! certified-converged state stops [`StopReason::Converged`] exactly
+//! like eager refresh, not `Stalled`.
+//!
+//! **Trajectory identity** holds scheduler by scheduler via a
+//! *certified boundary* argument — resolve in descending bound order
+//! until no unresolved bound could outrank the last admitted exact
+//! residual (then no deferred edge can sit inside the selection
+//! boundary, because its true residual is at most its bound):
+//!
+//! * **rbp** resolves until the top unresolved bound drops strictly
+//!   below `max(ε, k-th best exact residual)`; the canonical
+//!   (residual, edge-id) top-k over the mixed array then equals the
+//!   all-exact one, so `lazy` selects bit-identical frontiers while
+//!   deferring every dirty edge outside the top-k boundary. With a
+//!   full frontier (`p = 1`) nothing is outside the boundary and lazy
+//!   degenerates to bounded-equal rows — the control case.
+//! * **rnbp**'s boundary is the ε-cut itself (every surviving edge
+//!   draws a coin), so it resolves every bound ≥ ε — and recomputes its
+//!   EdgeRatio from post-resolution exact counts, keeping the dynamic-p
+//!   switches (and hence the RNG stream) identical to `Exact`.
+//! * **rs** certifies its *root ranking* lazily: a vertex is emitted
+//!   only once its exact vertex residual (resolved incoming edges)
+//!   outranks every other vertex's bound, and splash-tree edges are
+//!   resolved before they are returned — so commits use freshly exact
+//!   candidates and the trajectory (and every committed bit) matches
+//!   `Exact`, at O(roots + tree) resolutions instead of O(dirty) rows.
+//!   This is the narrow-frontier win: unlike Bounded (which commits
+//!   ε-stale rows and only agrees at fixed-point tolerance), lazy rs is
+//!   *identical* to exact **and** cheaper than bounded.
+//! * **lbp** (and any scheduler that never opted in) takes the default
+//!   `select_lazy`: resolve everything in one bulk call, which *is* the
+//!   eager exact refresh, just executed at selection time — identical
+//!   trajectories at identical total rows.
+//!
+//! Deferral/resolution traffic is reported as
+//! [`RunResult::refresh_deferred`] / [`RunResult::refresh_resolved`];
+//! resolved rows also count into [`RunResult::refresh_rows`] so the
+//! exact/bounded/lazy row columns stay directly comparable.
+//!
+//! The bit-level identity statements above are theorems for *untracked*
+//! belief maintenance (`belief_refresh_every = 0`, every engine read
+//! re-derives from the current messages — the regime the differential
+//! harnesses pin). Under incremental tracking, lazy resolution can
+//! shift *when* the drift-guard's full re-gather lands relative to an
+//! eager run (an iteration whose deferrals all sit outside the
+//! boundary issues no engine call where eager issued its step-3 call),
+//! so tracked lazy runs agree with eager at drift tolerance — the same
+//! K-regime contract `tests/incremental_parity.rs` documents — while
+//! soundness and convergence honesty hold regardless.
 //!
 //! ## Stop reasons
 //!
@@ -101,17 +179,18 @@ pub mod campaign;
 
 use anyhow::Result;
 
+use crate::collections::IndexedHeap;
 use crate::engine::MessageEngine;
 use crate::graph::Mrf;
 use crate::perfmodel::CostModel;
-use crate::sched::{SchedContext, Scheduler};
+use crate::sched::{LazySchedContext, ResidualOracle, SchedContext, Scheduler};
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
 /// How the step-3 dirty-list refresh recomputes residuals.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ResidualRefresh {
-    /// Recompute every dirtied candidate row exactly (the pre-PR-3
-    /// contract; default).
+    /// Recompute every dirtied candidate row exactly — the eager
+    /// reference contract (default).
     #[default]
     Exact,
     /// Skip dirty edges whose residual upper bound (`res + slack`, see
@@ -123,6 +202,15 @@ pub enum ResidualRefresh {
     /// certainly-converged dirty edge, so for them this mode is
     /// bit-identical to `Exact` at zero cost. See module docs.
     Bounded,
+    /// Defer *every* dirty-edge recompute into a bound-keyed priority
+    /// queue and resolve exact residuals on scheduler demand through
+    /// the [`crate::sched::ResidualOracle`] seam — an edge pays an
+    /// engine row only when its upper bound could place it inside the
+    /// scheduler's top-k / p-cut boundary. Trajectories are provably
+    /// identical to `Exact` for the certified built-ins (rbp, rnbp, rs
+    /// — and lbp via the resolve-all default); narrow-frontier rs waves
+    /// cost O(selected) rows instead of O(dirty). See module docs.
+    Lazy,
 }
 
 /// Per-commit slack factor: a dependent's residual moves at most
@@ -285,14 +373,29 @@ pub struct RunResult {
     pub message_updates: u64,
     /// Engine invocations (bulk kernel launches).
     pub engine_calls: u64,
-    /// Candidate rows recomputed by step-3 dirty-list refresh calls
-    /// (excludes the initial all-edges refresh and mid-wave recomputes).
+    /// Candidate rows recomputed by step-3 dirty-list refresh calls,
+    /// including rows the lazy oracle resolved at selection time — the
+    /// same work, deferred (excludes the initial all-edges refresh and
+    /// mid-wave recomputes).
     pub refresh_rows: u64,
     /// Dirty rows the bound-guided refresh skipped as certainly
     /// converged, counted once per dirtying (a skipped edge leaves the
     /// queue until a new commit re-dirties it). Always 0 under
-    /// [`ResidualRefresh::Exact`].
+    /// [`ResidualRefresh::Exact`] and [`ResidualRefresh::Lazy`] (lazy
+    /// defers instead of skipping; see `refresh_deferred`).
     pub refresh_skipped: u64,
+    /// Dirty edges whose step-3 recompute the lazy refresh deferred
+    /// into the on-demand oracle, counted once per deferral (a commit
+    /// re-dirtying an already-deferred edge re-keys it without
+    /// recounting). Always 0 outside [`ResidualRefresh::Lazy`].
+    pub refresh_deferred: u64,
+    /// Deferred edges later resolved exactly on scheduler demand; each
+    /// resolution also counts into `refresh_rows`, keeping the row
+    /// columns comparable across refresh modes. `refresh_deferred -
+    /// refresh_resolved` bounds the rows lazy never paid (it
+    /// over-counts only by deferred edges a wave recomputed mid-commit
+    /// before any resolution).
+    pub refresh_resolved: u64,
     /// Max residual *upper bound* at stop (== max exact residual under
     /// `Exact` refresh, where slack is always zero).
     pub final_residual: f32,
@@ -351,16 +454,30 @@ struct State {
     /// candidate cache is ε-stale (within its accumulated slack). Such
     /// an edge may be committed from cache — the slack then carries over
     /// instead of resetting — and must not force a mid-wave recompute.
-    /// Cleared by any exact recompute. Never set under `Exact` refresh.
+    /// Cleared by any exact recompute. Never set under `Exact` or
+    /// `Lazy` refresh (lazy keeps input-stale edges `dirty` and
+    /// deferred instead, so a wave that reaches one before resolution
+    /// still forces the sound mid-wave recompute).
     stale_ok: Vec<bool>,
+    /// Lazy refresh: deferred dirty edges keyed by residual upper bound
+    /// (canonical max order, NaN above every finite bound). Membership
+    /// is the "still unresolved" predicate the oracle exposes. Empty
+    /// (zero-capacity) outside `Lazy` mode.
+    heap: IndexedHeap,
     arity: usize,
-    bounded: bool,
+    /// Bounded or lazy: accumulate commit-delta slack into dependents'
+    /// residual upper bounds.
+    track_slack: bool,
+    /// Lazy: step 3 defers recomputes into `heap` instead of issuing
+    /// them.
+    lazy: bool,
 }
 
 impl State {
-    fn new(mrf: &Mrf, bounded: bool) -> State {
+    fn new(mrf: &Mrf, mode: ResidualRefresh) -> State {
         let m = mrf.num_edges;
         let a = mrf.max_arity;
+        let lazy = mode == ResidualRefresh::Lazy;
         State {
             logm: mrf.uniform_messages().as_slice().to_vec(),
             cand: vec![0.0; m * a],
@@ -370,8 +487,10 @@ impl State {
             dirty: vec![false; m],
             dirty_list: Vec::with_capacity(m),
             stale_ok: vec![false; m],
+            heap: IndexedHeap::with_capacity(if lazy { m } else { 0 }),
             arity: a,
-            bounded,
+            track_slack: mode != ResidualRefresh::Exact,
+            lazy,
         }
     }
 
@@ -397,6 +516,28 @@ impl State {
     fn add_slack(&mut self, e: usize, delta: f32) {
         self.slack[e] += SLACK_PER_DELTA * delta;
         self.ub[e] = residual_upper_bound(self.res[e], self.slack[e]);
+        if self.lazy && self.heap.contains(e) {
+            // already-deferred edge: re-key to the grown bound so the
+            // oracle's certified resolution order stays sound
+            self.heap.set(e, self.ub[e]);
+        }
+    }
+
+    /// Lazy refresh: exactly recompute edge `e`'s candidate row through
+    /// the engine's row-granular path, collapsing its bound onto the
+    /// fresh residual. Caller maintains the deferred-edge heap.
+    fn resolve_row(
+        &mut self,
+        mrf: &Mrf,
+        engine: &mut dyn MessageEngine,
+        e: usize,
+    ) -> Result<f32> {
+        let a = self.arity;
+        let r = engine.candidate_row_into(mrf, &self.logm, e, &mut self.cand[e * a..(e + 1) * a])?;
+        self.set_exact(e, r);
+        self.stale_ok[e] = false;
+        self.dirty[e] = false;
+        Ok(r)
     }
 
     /// Commit candidate rows for a frontier; marks dependents dirty.
@@ -450,12 +591,18 @@ impl State {
                 self.set_exact(e, 0.0);
                 self.stale_ok[e] = false;
                 self.dirty[e] = false;
+                if self.lazy {
+                    // a deferred edge swept into a recomputed wave is
+                    // now exact without ever being resolved: drop it
+                    // from the deferred queue
+                    self.heap.remove(e);
+                }
             }
         }
         for &(e, delta) in &changed {
             for d in mrf.dependents(e) {
                 self.mark_dirty(d);
-                if self.bounded {
+                if self.track_slack {
                     self.add_slack(d, delta);
                 }
             }
@@ -530,6 +677,128 @@ pub struct NoopObserver;
 
 impl RunObserver for NoopObserver {}
 
+/// The coordinator's [`ResidualOracle`]: serves residual upper bounds
+/// from the maintained state and resolves deferred edges through the
+/// engine's row-granular entry point, updating the candidate cache and
+/// residual/bound vectors in place. Engine work is timed (for phase
+/// attribution), billed to the simulated device clock like the step-3
+/// refresh it replaces, and counted into the run's refresh-row totals;
+/// an engine error poisons the affected bounds with NaN (so the run can
+/// never report convergence off a failed recompute) and is re-raised by
+/// the coordinator as soon as selection returns.
+struct LazyOracle<'a> {
+    mrf: &'a Mrf,
+    engine: &'a mut dyn MessageEngine,
+    st: &'a mut State,
+    batch: &'a mut crate::engine::CandidateBatch,
+    model: Option<CostModel>,
+    /// Rows exactly recomputed (row-granular + bulk resolve_all).
+    rows: u64,
+    /// Engine invocations issued.
+    calls: u64,
+    /// Wallclock spent inside engine calls (refresh-phase attribution).
+    engine_secs: f64,
+    /// Modeled device time billed for resolutions.
+    sim_secs: f64,
+    /// First engine error, re-raised after selection returns.
+    error: Option<anyhow::Error>,
+}
+
+impl LazyOracle<'_> {
+    fn bill(&mut self, rows: usize) {
+        self.rows += rows as u64;
+        self.calls += 1;
+        if let Some(m) = &self.model {
+            self.sim_secs += m.update_cost(rows, self.mrf.max_arity, self.mrf.max_in_degree);
+        }
+    }
+}
+
+impl ResidualOracle for LazyOracle<'_> {
+    fn residuals(&self) -> &[f32] {
+        &self.st.ub
+    }
+
+    fn is_exact(&self, e: usize) -> bool {
+        !self.st.heap.contains(e)
+    }
+
+    fn deferred(&self) -> usize {
+        self.st.heap.len()
+    }
+
+    fn peek(&self) -> Option<(f32, usize)> {
+        self.st.heap.peek()
+    }
+
+    fn resolve_top(&mut self) -> Option<(usize, f32)> {
+        let (_, e) = self.st.heap.peek()?;
+        Some((e, self.resolve(e)))
+    }
+
+    fn resolve(&mut self, e: usize) -> f32 {
+        if !self.st.heap.contains(e) {
+            return self.st.ub[e];
+        }
+        self.st.heap.remove(e);
+        let t = Stopwatch::start();
+        let r = self.st.resolve_row(self.mrf, self.engine, e);
+        self.engine_secs += t.seconds();
+        self.bill(1);
+        match r {
+            Ok(r) => r,
+            Err(err) => {
+                // poison the bound: NaN never converges and never
+                // passes a selection filter, even if a scheduler
+                // ignores the error we re-raise after select
+                self.st.set_exact(e, f32::NAN);
+                if self.error.is_none() {
+                    self.error = Some(err);
+                }
+                f32::NAN
+            }
+        }
+    }
+
+    fn resolve_all(&mut self) {
+        if self.st.heap.is_empty() {
+            return;
+        }
+        // unordered O(len) drain (row bits are order-free: all rows
+        // read the same message snapshot) and one bulk recompute —
+        // this IS the eager exact refresh of the deferred set, just
+        // executed at selection time
+        let mut frontier = Vec::with_capacity(self.st.heap.len());
+        self.st.heap.drain_unordered(|_, e| frontier.push(e as i32));
+        let t = Stopwatch::start();
+        let res = self
+            .engine
+            .candidates_into(self.mrf, &self.st.logm, &frontier, self.batch);
+        self.engine_secs += t.seconds();
+        self.bill(frontier.len());
+        match res {
+            Ok(()) => {
+                let a = self.st.arity;
+                for (i, &ei) in frontier.iter().enumerate() {
+                    let e = ei as usize;
+                    self.st.cand[e * a..(e + 1) * a].copy_from_slice(self.batch.row(i, a));
+                    self.st.set_exact(e, self.batch.residuals[i]);
+                    self.st.stale_ok[e] = false;
+                    self.st.dirty[e] = false;
+                }
+            }
+            Err(err) => {
+                for &ei in &frontier {
+                    self.st.set_exact(ei as usize, f32::NAN);
+                }
+                if self.error.is_none() {
+                    self.error = Some(err);
+                }
+            }
+        }
+    }
+}
+
 /// Run Algorithm 1 to convergence (or cap/timeout).
 pub fn run(
     mrf: &Mrf,
@@ -551,7 +820,8 @@ pub fn run_observed(
     let live = mrf.live_edges;
     let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
     let bounded = params.residual_refresh == ResidualRefresh::Bounded;
-    let mut st = State::new(mrf, bounded);
+    let lazy = params.residual_refresh == ResidualRefresh::Lazy;
+    let mut st = State::new(mrf, params.residual_refresh);
     let mut phases = PhaseTimer::new();
     let mut sim_phases = PhaseTimer::new();
     let mut sim_wall = 0.0f64;
@@ -562,6 +832,8 @@ pub fn run_observed(
     let mut engine_calls = 0u64;
     let mut refresh_rows = 0u64;
     let mut refresh_skipped = 0u64;
+    let mut refresh_deferred = 0u64;
+    let mut refresh_resolved = 0u64;
 
     // One candidate batch reused for every engine call of the run: the
     // engines resize it in place, so the hot loop does not allocate.
@@ -610,16 +882,60 @@ pub fn run_observed(
         }
 
         // 1. GenerateFrontier (schedulers see residual upper bounds —
-        //    identical to exact residuals under `Exact` refresh)
-        let ctx = SchedContext {
-            mrf,
-            residuals: &st.ub,
-            eps: params.eps,
-            iteration: iterations,
-            unconverged,
-            prev_unconverged,
+        //    identical to exact residuals under `Exact` refresh). Lazy
+        //    refresh routes through the oracle seam instead: residuals
+        //    resolve from bounds to exact values on scheduler demand,
+        //    with the engine time attributed to the refresh phase (it
+        //    is step-3 work moved to selection time) and the remainder
+        //    to selection.
+        let waves = if lazy {
+            let lctx = LazySchedContext {
+                mrf,
+                eps: params.eps,
+                iteration: iterations,
+                unconverged,
+                prev_unconverged,
+            };
+            let mut oracle = LazyOracle {
+                mrf,
+                engine: &mut *engine,
+                st: &mut st,
+                batch: &mut batch,
+                model,
+                rows: 0,
+                calls: 0,
+                engine_secs: 0.0,
+                sim_secs: 0.0,
+                error: None,
+            };
+            let t = Stopwatch::start();
+            let waves = scheduler.select_lazy(&lctx, &mut oracle);
+            let total = t.seconds();
+            let LazyOracle { rows, calls, engine_secs, sim_secs, error, .. } = oracle;
+            phases.add("refresh", engine_secs);
+            phases.add("select", (total - engine_secs).max(0.0));
+            engine_calls += calls;
+            refresh_rows += rows;
+            refresh_resolved += rows;
+            if model.is_some() {
+                sim_phases.add("update", sim_secs);
+                sim_wall += sim_secs;
+            }
+            if let Some(err) = error {
+                return Err(err);
+            }
+            waves
+        } else {
+            let ctx = SchedContext {
+                mrf,
+                residuals: &st.ub,
+                eps: params.eps,
+                iteration: iterations,
+                unconverged,
+                prev_unconverged,
+            };
+            phases.time("select", || scheduler.select(&ctx))
         };
-        let waves = phases.time("select", || scheduler.select(&ctx));
         if let Some(m) = &model {
             let total: usize = waves.iter().map(|w| w.len()).sum();
             let c = m.select_cost(kind, live, mrf.live_vertices, total);
@@ -627,6 +943,19 @@ pub fn run_observed(
             sim_wall += c;
         }
         if waves.is_empty() {
+            if lazy {
+                // Select-time resolution may have tightened the bounds
+                // this iteration entered with: re-check before calling
+                // the run wedged. A scheduler that resolved everything
+                // and certified convergence stops Converged here — at
+                // the same iteration count eager exact refresh would
+                // have stopped at the loop head.
+                unconverged = st.unconverged(live, params.eps);
+                if unconverged == 0 {
+                    stop = StopReason::Converged;
+                    break;
+                }
+            }
             // The scheduler sees nothing actionable while residual upper
             // bounds are still hot (unconverged > 0 was checked above):
             // the run is wedged. Reporting this as Converged would let
@@ -679,7 +1008,30 @@ pub fn run_observed(
         //    counted) exactly once per dirtying.
         if !st.dirty_list.is_empty() {
             let mut dirty_list = std::mem::take(&mut st.dirty_list);
-            if bounded {
+            if lazy {
+                // Defer instead of recompute: every still-dirty edge
+                // enters the bound-keyed queue for on-demand resolution
+                // at the next select. `dirty` stays set — the candidate
+                // really is input-stale until resolution (or a mid-wave
+                // recompute) refreshes it — so a re-dirtying commit
+                // only grows its slack (add_slack re-keys the heap)
+                // without re-queuing it here; deferral is counted once
+                // per heap entry, mirroring refresh_skipped's
+                // once-per-dirtying accounting.
+                for &ei in dirty_list.iter() {
+                    let e = ei as usize;
+                    if !st.dirty[e] {
+                        // committed (and exactly recomputed) mid-wave
+                        // after being queued
+                        continue;
+                    }
+                    if !st.heap.contains(e) {
+                        refresh_deferred += 1;
+                    }
+                    st.heap.set(e, st.ub[e]);
+                }
+                dirty_list.clear();
+            } else if bounded {
                 let (dirty, ub, stale_ok) = (&mut st.dirty, &st.ub, &mut st.stale_ok);
                 dirty_list.retain(|&ei| {
                     let e = ei as usize;
@@ -771,6 +1123,8 @@ pub fn run_observed(
         engine_calls,
         refresh_rows,
         refresh_skipped,
+        refresh_deferred,
+        refresh_resolved,
         final_residual: st.max_residual(live),
         frontier_digest: digest.value(),
         phases,
@@ -1058,7 +1412,11 @@ mod tests {
         // report the poison.
         let mut rng = Rng::new(17);
         let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
-        for mode in [ResidualRefresh::Exact, ResidualRefresh::Bounded] {
+        for mode in [
+            ResidualRefresh::Exact,
+            ResidualRefresh::Bounded,
+            ResidualRefresh::Lazy,
+        ] {
             let params = RunParams {
                 max_iterations: 5,
                 cost_model: None,
@@ -1107,8 +1465,71 @@ mod tests {
     // (The bounded-vs-exact differentials — skip counts, refresh-row
     // savings, no smuggled mid-wave recomputes, rbp/rnbp bitwise
     // identity, fixed-point agreement — live in the engine-matrixed
-    // integration harness `tests/residual_bound_parity.rs`; no unit
-    // copies here, so the slack/cushion contract has one home.)
+    // integration harness `tests/residual_bound_parity.rs`; the
+    // lazy-vs-exact ones in `tests/lazy_refresh_parity.rs` and the
+    // randomized cross-mode fuzzer in `tests/fuzz_schedules.rs`. No
+    // unit copies here, so each contract has one home.)
+
+    #[test]
+    fn gives_up_under_lazy_refresh_is_still_stalled() {
+        // The lazy empty-waves re-check must not soften the stall
+        // contract: a scheduler that ignores the oracle and returns no
+        // waves while bounds are genuinely hot is wedged, not
+        // converged.
+        let mut rng = Rng::new(14);
+        let g = ising::generate("i", 6, 2.5, &mut rng).unwrap();
+        let params = RunParams {
+            residual_refresh: ResidualRefresh::Lazy,
+            ..Default::default()
+        };
+        let r = run_with(&g, &mut GivesUp, &params);
+        assert_eq!(r.stop, StopReason::Stalled);
+        assert!(r.final_residual >= crate::DEFAULT_EPS);
+    }
+
+    #[test]
+    fn lazy_default_path_defers_then_matches_exact_bit_for_bit() {
+        // lbp takes the default select_lazy (resolve everything in one
+        // bulk call) — which is the eager exact refresh executed at
+        // selection time. Deferral traffic must be visible in the new
+        // counters, and the trajectory, total refresh rows, and
+        // marginals must reproduce Exact exactly.
+        let mut rng = Rng::new(23);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let base = RunParams {
+            want_marginals: true,
+            timeout: 30.0,
+            ..Default::default()
+        };
+        let exact = run_with(&g, &mut Lbp::new(), &base);
+        let lazy = run_with(
+            &g,
+            &mut Lbp::new(),
+            &RunParams { residual_refresh: ResidualRefresh::Lazy, ..base },
+        );
+        assert!(exact.converged() && lazy.converged());
+        assert!(lazy.refresh_deferred > 0, "nothing was ever deferred");
+        assert_eq!(lazy.refresh_resolved, lazy.refresh_rows);
+        assert_eq!(lazy.refresh_skipped, 0, "lazy defers, it never skips");
+        assert_eq!(exact.refresh_deferred, 0);
+        assert_eq!(exact.refresh_resolved, 0);
+        assert_eq!(exact.frontier_digest, lazy.frontier_digest);
+        assert_eq!(exact.iterations, lazy.iterations);
+        assert_eq!(exact.message_updates, lazy.message_updates);
+        // <= , not ==: when the final deferral's bounds already certify
+        // convergence at the loop head, lazy stops without ever paying
+        // for the last batch exact eagerly refreshed
+        assert!(
+            lazy.refresh_rows <= exact.refresh_rows,
+            "lazy {} rows vs exact {}",
+            lazy.refresh_rows,
+            exact.refresh_rows
+        );
+        let (me, ml) = (exact.marginals.unwrap(), lazy.marginals.unwrap());
+        for (x, y) in me.iter().zip(&ml) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
 
     #[test]
     fn nan_slack_never_passes_the_skip_check() {

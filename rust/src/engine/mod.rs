@@ -134,6 +134,33 @@ pub trait MessageEngine {
         Ok(out)
     }
 
+    /// Row-granular recompute: the BP update for the single edge `e`,
+    /// written into `out` (length `max_arity`, padded lanes zeroed);
+    /// returns the max-norm residual against the current `logm` row.
+    ///
+    /// This is the entry point of the coordinator's *lazy* residual
+    /// refresh, which resolves deferred dirty edges one at a time in
+    /// certified priority order instead of re-evaluating the whole dirty
+    /// list in bulk. Implementations must produce bits identical to a
+    /// [`candidates_into`](Self::candidates_into) call containing `e` —
+    /// the lazy/exact differential harness asserts trajectory identity
+    /// on top of that contract. The default routes through a one-row
+    /// bulk call (correct for any engine, e.g. PJRT's bucketed
+    /// executables); the CPU engines override it to skip batch setup.
+    fn candidate_row_into(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        e: usize,
+        out: &mut [f32],
+    ) -> Result<f32> {
+        debug_assert_eq!(out.len(), mrf.max_arity);
+        let mut batch = CandidateBatch::default();
+        self.candidates_into(mrf, logm, &[e as i32], &mut batch)?;
+        out.copy_from_slice(&batch.new_m[..mrf.max_arity]);
+        Ok(batch.residuals[0])
+    }
+
     /// Normalized vertex marginals `[V * A]` (probabilities).
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>>;
 

@@ -101,6 +101,33 @@ impl MessageEngine for NativeEngine {
         Ok(())
     }
 
+    fn candidate_row_into(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        e: usize,
+        out: &mut [f32],
+    ) -> Result<f32> {
+        // Must match `candidates_into` bit for bit, including the
+        // tracked-cache read path — the lazy refresh resolves rows the
+        // exact refresh would have computed in bulk.
+        if self.cache.is_tracking(mrf) {
+            self.cache.refresh_if_due(mrf, logm, 1);
+            let u = mrf.src[e] as usize;
+            Ok(candidate_row_from_belief(
+                mrf,
+                logm,
+                self.cache.row(u),
+                self.opts,
+                e,
+                &mut self.cavity,
+                out,
+            ))
+        } else {
+            Ok(self.candidate_row(mrf, logm, e, out))
+        }
+    }
+
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {
         // one O(E·A) gather into engine-owned scratch (no per-vertex
         // allocation), then exp-normalize per vertex

@@ -64,6 +64,10 @@ pub struct ParallelEngine {
     opts: UpdateOptions,
     threads: usize,
     cache: BeliefCache,
+    /// Serial scratch for the row-granular lazy-refresh path
+    /// (`candidate_row_into`): single rows never fan out to threads.
+    row_belief: Vec<f32>,
+    row_cavity: Vec<f32>,
 }
 
 impl Default for ParallelEngine {
@@ -84,6 +88,8 @@ impl ParallelEngine {
             opts: UpdateOptions::default(),
             threads: threads.max(1),
             cache: BeliefCache::new(),
+            row_belief: Vec::new(),
+            row_cavity: Vec::new(),
         }
     }
 
@@ -170,6 +176,42 @@ impl MessageEngine for ParallelEngine {
         Ok(())
     }
 
+    fn candidate_row_into(
+        &mut self,
+        mrf: &Mrf,
+        logm: &[f32],
+        e: usize,
+        out: &mut [f32],
+    ) -> Result<f32> {
+        // Mirrors the n=1 behavior of `candidates_into` bit for bit:
+        // tracked mode reads the maintained cache row (after the drift
+        // guard), untracked mode takes the per-row gather a 1-row
+        // frontier (n < live_vertices) would take — no thread fan-out.
+        let u = mrf.src[e] as usize;
+        if self.cache.is_tracking(mrf) {
+            self.cache.refresh_if_due(mrf, logm, self.threads);
+            return Ok(candidate_row_from_belief(
+                mrf,
+                logm,
+                self.cache.row(u),
+                self.opts,
+                e,
+                &mut self.row_cavity,
+                out,
+            ));
+        }
+        gather_vertex(mrf, logm, u, &mut self.row_belief);
+        Ok(candidate_row_from_belief(
+            mrf,
+            logm,
+            &self.row_belief,
+            self.opts,
+            e,
+            &mut self.row_cavity,
+            out,
+        ))
+    }
+
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {
         // always a from-scratch (parallel, bit-identical-to-serial)
         // gather: reported marginals carry no incremental drift
@@ -245,5 +287,48 @@ mod tests {
         let a = native.marginals(&g, m.as_slice()).unwrap();
         let b = par.marginals(&g, m.as_slice()).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn candidate_row_into_matches_bulk_bitwise() {
+        // The lazy-refresh contract: a row-granular recompute must
+        // reproduce the bulk path bit for bit, on both engines, in
+        // both the untracked and the commit-tracked regime.
+        let mut rng = Rng::new(24);
+        let g = ising::generate("i", 6, 2.0, &mut rng).unwrap();
+        let m = g.uniform_messages();
+        let a = g.max_arity;
+        let frontier: Vec<i32> = (0..g.live_edges as i32).collect();
+        let mut engines: Vec<Box<dyn MessageEngine>> = vec![
+            Box::new(super::super::native::NativeEngine::new()),
+            Box::new(ParallelEngine::with_threads(3)),
+        ];
+        for eng in engines.iter_mut() {
+            let bulk = eng.candidates(&g, m.as_slice(), &frontier).unwrap();
+            let mut row = vec![0.0f32; a];
+            for tracked in [false, true] {
+                if tracked {
+                    eng.begin_tracking(&g, m.as_slice(), 64);
+                }
+                for e in 0..g.live_edges {
+                    let r = eng.candidate_row_into(&g, m.as_slice(), e, &mut row).unwrap();
+                    assert_eq!(
+                        r.to_bits(),
+                        bulk.residuals[e].to_bits(),
+                        "{} e={e} tracked={tracked}",
+                        eng.name()
+                    );
+                    assert_eq!(
+                        &row[..],
+                        bulk.row(e, a),
+                        "{} e={e} tracked={tracked}",
+                        eng.name()
+                    );
+                }
+                if tracked {
+                    eng.end_tracking();
+                }
+            }
+        }
     }
 }

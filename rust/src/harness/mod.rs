@@ -194,5 +194,7 @@ mod tests {
         assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Exact);
         cfg.residual_refresh = ResidualRefresh::Bounded;
         assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Bounded);
+        cfg.residual_refresh = ResidualRefresh::Lazy;
+        assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Lazy);
     }
 }

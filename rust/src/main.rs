@@ -53,11 +53,16 @@ COMMON FLAGS (also settable via --config file.toml):
   --belief-refresh-every K   incremental belief maintenance drift guard:
                         full re-gather every K committed rows
                         (default 64; 0 = re-gather every engine call)
-  --residual-refresh exact|bounded   dirty-list refresh policy
+  --residual-refresh exact|bounded|lazy   dirty-list refresh policy
                         (default exact; bounded skips recomputing edges
                         whose residual upper bound stays below eps —
                         sound, same fixed point; saves engine work for
-                        rs/lbp, no-op for the eps-filtered rbp/rnbp)
+                        rs/lbp, no-op for the eps-filtered rbp/rnbp;
+                        lazy defers every dirty row and recomputes on
+                        scheduler demand only inside the selection
+                        boundary — identical trajectories to exact for
+                        the built-ins, O(selected) rows on narrow
+                        rs/rbp frontiers)
   --out-dir DIR         JSON report directory (default results/)
 
 RUN FLAGS:
@@ -212,8 +217,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
         result.message_updates, result.engine_calls, result.final_residual
     );
     println!(
-        "  dirty refresh: {} rows recomputed, {} skipped by residual bound",
-        result.refresh_rows, result.refresh_skipped
+        "  dirty refresh: {} rows recomputed, {} skipped by residual bound, \
+         {} deferred ({} resolved on demand)",
+        result.refresh_rows,
+        result.refresh_skipped,
+        result.refresh_deferred,
+        result.refresh_resolved
     );
     println!("  wallclock phases:");
     for (phase, secs, frac) in result.phases.breakdown() {

@@ -55,6 +55,73 @@ impl SchedContext<'_> {
     }
 }
 
+/// Coordinator state handed to [`Scheduler::select_lazy`] — everything
+/// in [`SchedContext`] *except* the residual array, which lazy mode
+/// serves through the [`ResidualOracle`] instead (entries resolve from
+/// upper bounds to exact values as the scheduler asks for them).
+///
+/// `unconverged` / `prev_unconverged` count residual *upper bounds*
+/// `>= eps`, so they over-approximate the exact-mode counts whenever
+/// deferred edges exist; schedulers whose decisions depend on the exact
+/// counts (rnbp's EdgeRatio) recompute them post-resolution.
+pub struct LazySchedContext<'a> {
+    pub mrf: &'a Mrf,
+    /// Convergence threshold.
+    pub eps: f32,
+    /// Iteration number (0-based).
+    pub iteration: usize,
+    /// Count of live edges whose residual *upper bound* is >= eps.
+    pub unconverged: usize,
+    /// Same count one iteration earlier (== unconverged on iteration 0).
+    pub prev_unconverged: usize,
+}
+
+/// On-demand exact-residual resolution for lazy refresh (Sutton &
+/// McCallum's estimate-first scheduling): the coordinator defers the
+/// step-3 recompute of dirtied edges and hands schedulers this oracle,
+/// which keeps the deferred set in a max-priority structure keyed by
+/// residual upper bound (`res + slack + cushion`). A scheduler pulls
+/// exact residuals only where its selection boundary depends on them;
+/// every resolution is one engine row and updates the maintained state
+/// in place (candidate cache, exact residual, bound).
+///
+/// Soundness contract: `residuals()[e]` is an upper bound on edge `e`'s
+/// true residual, exact once `is_exact(e)`. Bounds only *tighten* under
+/// resolution (up to the documented f32 jitter cushion), and a NaN
+/// bound (poisoned run) ranks above every finite bound in
+/// [`peek`](Self::peek) order so it can never hide from resolution.
+pub trait ResidualOracle {
+    /// Residual view `[M]`: exact residuals where resolved, upper
+    /// bounds where deferred (entries >= live_edges are 0).
+    fn residuals(&self) -> &[f32];
+
+    /// True when `residuals()[e]` is an exact residual, not a bound.
+    fn is_exact(&self, e: usize) -> bool;
+
+    /// Number of deferred (unresolved) edges.
+    fn deferred(&self) -> usize;
+
+    /// Highest deferred upper bound as `(bound, edge)`; `None` when
+    /// everything is exact. NaN bounds rank above all finite ones.
+    fn peek(&self) -> Option<(f32, usize)>;
+
+    /// Exactly recompute the deferred edge with the highest bound
+    /// (one engine row); returns `(edge, exact residual)`.
+    fn resolve_top(&mut self) -> Option<(usize, f32)>;
+
+    /// Exactly recompute edge `e` if deferred (one engine row); returns
+    /// its now-exact residual (a no-op returning the stored residual
+    /// when `e` is already exact).
+    fn resolve(&mut self, e: usize) -> f32;
+
+    /// Exactly recompute every deferred edge in one bulk engine call —
+    /// afterwards the state is bit-identical to an eager exact refresh
+    /// of the same dirty set (the default [`Scheduler::select_lazy`]
+    /// path, and the fallback that makes lazy mode safe for schedulers
+    /// that never learned about the oracle).
+    fn resolve_all(&mut self);
+}
+
 /// A message-scheduling policy.
 pub trait Scheduler {
     /// Label with parameters, e.g. `rnbp(lowp=0.4,highp=0.9)`.
@@ -63,6 +130,50 @@ pub trait Scheduler {
     /// Select the next frontier. Empty result = nothing worth updating
     /// (the coordinator then declares convergence or stalls out).
     fn select(&mut self, ctx: &SchedContext) -> Vec<Vec<i32>>;
+
+    /// Select the next frontier under lazy residual refresh
+    /// (`--residual-refresh lazy`): residuals are served by `oracle` as
+    /// upper bounds that the scheduler resolves on demand, paying one
+    /// engine row per resolution only where its top-k / p-cut boundary
+    /// actually depends on the exact value.
+    ///
+    /// The default implementation resolves everything and delegates to
+    /// [`select`](Self::select) — semantically identical to eager exact
+    /// refresh (it recomputes the same dirty set from the same
+    /// messages), so any scheduler is lazy-safe without opting in. It
+    /// recomputes `unconverged` from the post-resolution exact
+    /// residuals (the bound-based `ctx.unconverged` over-counts), and
+    /// returns no waves when nothing is genuinely unconverged — the
+    /// coordinator then re-checks the tightened bounds and stops
+    /// `Converged` instead of misreading certified convergence as a
+    /// stall. Overriders must uphold the same contract: never return
+    /// waves that exist only because of unresolved over-estimates.
+    fn select_lazy(
+        &mut self,
+        ctx: &LazySchedContext,
+        oracle: &mut dyn ResidualOracle,
+    ) -> Vec<Vec<i32>> {
+        oracle.resolve_all();
+        let residuals = oracle.residuals();
+        let live = ctx.mrf.live_edges;
+        let unconverged = residuals[..live]
+            .iter()
+            .filter(|&&r| r >= ctx.eps || r.is_nan())
+            .count();
+        if unconverged == 0 {
+            return vec![];
+        }
+        self.select(&SchedContext {
+            mrf: ctx.mrf,
+            residuals,
+            eps: ctx.eps,
+            iteration: ctx.iteration,
+            unconverged,
+            // bound-based (see LazySchedContext docs): exact-count
+            // EdgeRatio consumers override select_lazy (rnbp does)
+            prev_unconverged: ctx.prev_unconverged,
+        })
+    }
 
     /// Frontier-selection mechanism, for the simulated many-core timing
     /// model (see [`crate::perfmodel`]).

@@ -9,7 +9,17 @@
 //! residuals every iteration, which is exactly the overhead the paper
 //! profiles at >90% of runtime.
 
-use super::{SchedContext, Scheduler};
+use super::{LazySchedContext, ResidualOracle, SchedContext, Scheduler};
+
+/// Canonical frontier order: residual descending under `total_cmp`
+/// (NaN-safe), ties to the smaller edge id. A *total* order makes the
+/// selected top-k — set and sequence — a pure function of the
+/// (residual, edge) pairs, which is what lets the lazy certified-
+/// boundary path reproduce the eager selection bit for bit.
+#[inline]
+fn cmp_desc(a: &(f32, i32), b: &(f32, i32)) -> std::cmp::Ordering {
+    b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1))
+}
 
 /// See module docs.
 #[derive(Debug)]
@@ -23,6 +33,19 @@ impl Rbp {
     pub fn new(p: f64) -> Self {
         assert!(p > 0.0 && p <= 1.0, "p must be in (0, 1]");
         Rbp { p, scratch: Vec::new() }
+    }
+
+    /// Canonical top-k over whatever is in `scratch`: partition with
+    /// `select_nth`, then order the selected prefix — shared by the
+    /// eager and lazy paths so both emit identical frontiers.
+    fn take_topk(&mut self, k_target: usize) -> Vec<Vec<i32>> {
+        if self.scratch.is_empty() {
+            return vec![];
+        }
+        let k = k_target.min(self.scratch.len());
+        self.scratch.select_nth_unstable_by(k - 1, cmp_desc);
+        self.scratch[..k].sort_unstable_by(cmp_desc);
+        vec![self.scratch[..k].iter().map(|&(_, e)| e).collect()]
     }
 }
 
@@ -50,16 +73,79 @@ impl Scheduler for Rbp {
                 self.scratch.push((r, e as i32));
             }
         }
-        if self.scratch.is_empty() {
-            return vec![];
+        self.take_topk(k)
+    }
+
+    fn select_lazy(
+        &mut self,
+        ctx: &LazySchedContext,
+        oracle: &mut dyn ResidualOracle,
+    ) -> Vec<Vec<i32>> {
+        let m = ctx.mrf.live_edges;
+        let k_target = ((self.p * m as f64).ceil() as usize).clamp(1, m);
+
+        // Certified boundary: resolve deferred edges in descending
+        // bound order until no unresolved bound could crack the top-k —
+        // the loop stops only once the top bound is strictly below
+        // max(eps, k-th best exact residual), so every edge whose true
+        // residual could sit inside (or tie) the boundary is exact.
+        // `topk` holds the k best exact eps-passing residuals as a
+        // min-heap of bit keys (residuals are non-negative, where
+        // to_bits preserves total_cmp order).
+        let mut topk: std::collections::BinaryHeap<std::cmp::Reverse<u32>> =
+            std::collections::BinaryHeap::with_capacity(k_target + 1);
+        let push_capped =
+            |h: &mut std::collections::BinaryHeap<std::cmp::Reverse<u32>>, r: f32| {
+                h.push(std::cmp::Reverse(r.to_bits()));
+                if h.len() > k_target {
+                    h.pop();
+                }
+            };
+        {
+            let residuals = oracle.residuals();
+            for (e, &r) in residuals[..m].iter().enumerate() {
+                if r >= ctx.eps && oracle.is_exact(e) {
+                    push_capped(&mut topk, r);
+                }
+            }
         }
-        let k = k.min(self.scratch.len());
-        // partial select: top-k by residual (descending); total order so
-        // a NaN residual (divergent run) cannot panic the selection
-        let idx = k - 1;
-        self.scratch.select_nth_unstable_by(idx, |a, b| b.0.total_cmp(&a.0));
-        let frontier: Vec<i32> = self.scratch[..k].iter().map(|&(_, e)| e).collect();
-        vec![frontier]
+        loop {
+            let Some((bound, _)) = oracle.peek() else { break };
+            let must = if bound.is_nan() {
+                true // poisoned bound: resolve, never reason from it
+            } else if bound < ctx.eps {
+                false // certified out: the true residual is filtered too
+            } else if topk.len() < k_target {
+                true // boundary unsaturated: any eps-passing bound counts
+            } else {
+                // >= , not >: an equal true residual could still
+                // displace the boundary on the edge-id tiebreak
+                bound.to_bits() >= topk.peek().unwrap().0
+            };
+            if !must {
+                break;
+            }
+            let Some((_, r)) = oracle.resolve_top() else { break };
+            if !r.is_nan() && r >= ctx.eps {
+                push_capped(&mut topk, r);
+            }
+        }
+
+        // Canonical top-k over the exact entries only. Deferred entries
+        // provably cannot be selected — if the boundary never
+        // saturated, every >= eps bound was just resolved, so none
+        // remain; if it did, each deferred bound (hence its true
+        // residual) sits strictly below the k-th best exact value — so
+        // restricting to exact entries equals the all-exact selection
+        // without resting on the boundary argument for scratch content.
+        let residuals = oracle.residuals();
+        self.scratch.clear();
+        for (e, &r) in residuals[..m].iter().enumerate() {
+            if r >= ctx.eps && oracle.is_exact(e) {
+                self.scratch.push((r, e as i32));
+            }
+        }
+        self.take_topk(k_target)
     }
 }
 

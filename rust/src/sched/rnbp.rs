@@ -13,7 +13,7 @@
 //! paper locks `high_p = 1.0` for the synthetic datasets and uses
 //! `low_p = 0.4, high_p = 0.9` for protein folding.
 
-use super::{SchedContext, Scheduler};
+use super::{LazySchedContext, ResidualOracle, SchedContext, Scheduler};
 use crate::util::Rng;
 
 /// See module docs.
@@ -26,6 +26,12 @@ pub struct Rnbp {
     rng: Rng,
     /// Which setting the last `select` used (for metrics/tests).
     pub last_used_low: bool,
+    /// Lazy refresh: last select's post-resolution unconverged count.
+    /// The coordinator's bound-based counts over-estimate whenever
+    /// deferred edges exist, so lazy mode recomputes the EdgeRatio from
+    /// exact counts — this field carries the previous one. Reset when a
+    /// run restarts (iteration 0).
+    lazy_prev: Option<usize>,
 }
 
 impl Rnbp {
@@ -38,6 +44,7 @@ impl Rnbp {
             ratio_threshold: 0.9,
             rng: Rng::new(seed ^ 0x5bd1_e995),
             last_used_low: false,
+            lazy_prev: None,
         }
     }
 
@@ -45,6 +52,53 @@ impl Rnbp {
     /// update, low_p as given.
     pub fn synthetic(low_p: f64, seed: u64) -> Self {
         Self::new(low_p, 1.0, seed)
+    }
+
+    /// ε-filter + randomized filter over exact residuals, with the
+    /// progress fallback. Shared by the eager and lazy paths — the coin
+    /// stream consumes one draw per ε-surviving edge in index order, so
+    /// identical residual values imply identical frontiers.
+    fn build_frontier(
+        &mut self,
+        residuals: &[f32],
+        m: usize,
+        eps: f32,
+        p: f64,
+        unconverged: usize,
+    ) -> Vec<i32> {
+        // p >= 1.0 keeps the whole ε-filtered set, whose size is known
+        // exactly; only the RNG path needs the estimated headroom.
+        let cap = if p >= 1.0 {
+            unconverged
+        } else {
+            (unconverged as f64 * p) as usize + 8
+        };
+        let mut frontier = Vec::with_capacity(cap);
+        if p >= 1.0 {
+            // full update of the ε-filtered frontier — no RNG draws
+            for (e, &r) in residuals[..m].iter().enumerate() {
+                if r >= eps {
+                    frontier.push(e as i32);
+                }
+            }
+        } else {
+            for (e, &r) in residuals[..m].iter().enumerate() {
+                if r >= eps && self.rng.coin(p) {
+                    frontier.push(e as i32);
+                }
+            }
+        }
+        if frontier.is_empty() {
+            // Random filter can drop everything when few edges remain;
+            // retry-free fallback: take the unconverged set directly
+            // (guarantees progress, negligible cost at this size).
+            for (e, &r) in residuals[..m].iter().enumerate() {
+                if r >= eps {
+                    frontier.push(e as i32);
+                }
+            }
+        }
+        frontier
     }
 }
 
@@ -69,38 +123,62 @@ impl Scheduler for Rnbp {
         let p = if use_low { self.low_p } else { self.high_p };
 
         let m = ctx.mrf.live_edges;
-        // p >= 1.0 keeps the whole ε-filtered set, whose size is known
-        // exactly; only the RNG path needs the estimated headroom.
-        let cap = if p >= 1.0 {
-            ctx.unconverged
+        let frontier = self.build_frontier(ctx.residuals, m, ctx.eps, p, ctx.unconverged);
+        vec![frontier]
+    }
+
+    fn select_lazy(
+        &mut self,
+        ctx: &LazySchedContext,
+        oracle: &mut dyn ResidualOracle,
+    ) -> Vec<Vec<i32>> {
+        // The p-cut boundary here is the ε-filter itself: every
+        // surviving edge draws a coin (in edge-id order), so the whole
+        // over-ε bound set must resolve before any draw — a deferred
+        // bound left unresolved could flip an edge's filter verdict and
+        // desynchronize the RNG stream from the eager run. NaN bounds
+        // resolve too: they could be hiding a passing edge.
+        loop {
+            let Some((b, _)) = oracle.peek() else { break };
+            if !b.is_nan() && b < ctx.eps {
+                break;
+            }
+            oracle.resolve_top();
+        }
+
+        let m = ctx.mrf.live_edges;
+        let residuals = oracle.residuals();
+        // EdgeRatio needs the *exact* counts (the coordinator's
+        // bound-based ones over-count deferred edges). Post-resolution
+        // the residual state equals an eager refresh at the end of the
+        // previous iteration, so this count is exactly the
+        // ctx.unconverged an Exact-mode run would be seeing now — and
+        // last select's count is its prev_unconverged.
+        let cur = residuals[..m]
+            .iter()
+            .filter(|&&r| r >= ctx.eps || r.is_nan())
+            .count();
+        let prev = if ctx.iteration == 0 {
+            cur
         } else {
-            (ctx.unconverged as f64 * p) as usize + 8
+            self.lazy_prev.unwrap_or(cur)
         };
-        let mut frontier = Vec::with_capacity(cap);
-        if p >= 1.0 {
-            // full update of the ε-filtered frontier — no RNG draws
-            for (e, &r) in ctx.residuals[..m].iter().enumerate() {
-                if r >= ctx.eps {
-                    frontier.push(e as i32);
-                }
-            }
-        } else {
-            for (e, &r) in ctx.residuals[..m].iter().enumerate() {
-                if r >= ctx.eps && self.rng.coin(p) {
-                    frontier.push(e as i32);
-                }
-            }
+        self.lazy_prev = Some(cur);
+        if cur == 0 {
+            // certified converged: the eager run stopped before ever
+            // reaching this select; returning no waves lets the
+            // coordinator re-check the tightened bounds and stop
+            // Converged at the same iteration count
+            return vec![];
         }
-        if frontier.is_empty() {
-            // Random filter can drop everything when few edges remain;
-            // retry-free fallback: take the unconverged set directly
-            // (guarantees progress, negligible cost at this size).
-            for (e, &r) in ctx.residuals[..m].iter().enumerate() {
-                if r >= ctx.eps {
-                    frontier.push(e as i32);
-                }
-            }
-        }
+        let ratio = if prev == 0 { 1.0 } else { cur as f64 / prev as f64 };
+        let use_low = ctx.iteration > 0 && ratio > self.ratio_threshold;
+        self.last_used_low = use_low;
+        let p = if use_low { self.low_p } else { self.high_p };
+        // (a fully-NaN unconverged set yields an empty frontier wave
+        // here, exactly like the eager path: such a run must spin to
+        // its iteration cap, not report a stall — see module tests)
+        let frontier = self.build_frontier(residuals, m, ctx.eps, p, cur);
         vec![frontier]
     }
 }

@@ -11,7 +11,9 @@
 //! Roots are selected until the total message count reaches `p * M`
 //! (the paper sizes frontiers as `p * 2|E|` messages per round).
 
-use super::{SchedContext, Scheduler};
+use super::{LazySchedContext, ResidualOracle, SchedContext, Scheduler};
+use crate::collections::IndexedHeap;
+use crate::graph::Mrf;
 
 /// See module docs. The paper locks `h = 2` for its experiments.
 #[derive(Debug)]
@@ -30,6 +32,11 @@ pub struct ResidualSplash {
     /// and selects.
     bfs_cur: Vec<usize>,
     bfs_next: Vec<usize>,
+    /// Lazy path: candidate roots keyed by vertex ranking potential
+    /// (reused across selects), and the certified emission order so far
+    /// (mirrors the eager sorted list).
+    root_heap: IndexedHeap,
+    lazy_emitted: Vec<i32>,
     epoch: u64,
 }
 
@@ -45,7 +52,155 @@ impl ResidualSplash {
             tree_edges: Vec::new(),
             bfs_cur: Vec::new(),
             bfs_next: Vec::new(),
+            root_heap: IndexedHeap::with_capacity(0),
+            lazy_emitted: Vec::new(),
             epoch: 0,
+        }
+    }
+
+    /// Reset the per-select claim/tree scratch for a fresh epoch.
+    fn begin_epoch(&mut self, mrf: &Mrf) {
+        self.epoch += 1;
+        if self.level.len() != mrf.live_vertices {
+            self.level = vec![0; mrf.live_vertices];
+        }
+        if self.tree_edges.len() != self.h {
+            self.tree_edges = vec![Vec::new(); self.h];
+        }
+        for lv in self.tree_edges.iter_mut() {
+            lv.clear();
+        }
+    }
+
+    /// Grow one splash: claim `root`, BFS to depth `h` absorbing
+    /// unclaimed vertices into the level-merged tree. Returns messages
+    /// added (inward + outward per tree edge).
+    fn grow_splash(&mut self, mrf: &Mrf, root: usize) -> usize {
+        let mut added = 0usize;
+        self.level[root] = self.epoch;
+        self.bfs_cur.clear();
+        self.bfs_cur.push(root);
+        for d in 1..=self.h {
+            self.bfs_next.clear();
+            for &v in &self.bfs_cur {
+                for e in mrf.incoming(v) {
+                    let u = mrf.src[e] as usize;
+                    if self.level[u] == self.epoch {
+                        continue;
+                    }
+                    self.level[u] = self.epoch;
+                    // incoming(v) yields e with dst=v, src=u, i.e. e
+                    // IS the inward u -> v message of this level.
+                    self.tree_edges[d - 1].push(e as i32);
+                    self.bfs_next.push(u);
+                    added += 2; // inward + outward update
+                }
+            }
+            std::mem::swap(&mut self.bfs_cur, &mut self.bfs_next);
+        }
+        added
+    }
+
+    /// Assemble the wave sequence from the grown trees: inward passes
+    /// from the deepest level toward the roots, then outward passes
+    /// (reverse edges) from roots to leaves.
+    fn assemble_waves(&self, mrf: &Mrf) -> Vec<Vec<i32>> {
+        let mut waves: Vec<Vec<i32>> = Vec::with_capacity(2 * self.h);
+        for d in (0..self.h).rev() {
+            if !self.tree_edges[d].is_empty() {
+                waves.push(self.tree_edges[d].clone());
+            }
+        }
+        for d in 0..self.h {
+            if !self.tree_edges[d].is_empty() {
+                let out: Vec<i32> = self.tree_edges[d]
+                    .iter()
+                    .map(|&e| mrf.rev[e as usize])
+                    .collect();
+                waves.push(out);
+            }
+        }
+        waves
+    }
+}
+
+/// Ranking potential of vertex `v` under the oracle's mixed view: the
+/// max incoming entry, plus which unresolved edge to chase when that
+/// max rests on a bound rather than an exact residual.
+///
+/// Exact entries accumulate with `f32::max` like the eager scan, so an
+/// *exact* NaN is ignored — but an *unresolved* NaN bound forces
+/// resolution (reported as an infinite potential: it could be hiding
+/// any finite value). A vertex whose pending bounds all sit at or
+/// below its exact max is already certain: the max is achieved by an
+/// exact edge regardless of what the pending ones resolve to.
+fn vertex_potential(mrf: &Mrf, oracle: &dyn ResidualOracle, v: usize) -> (f32, Option<usize>) {
+    let residuals = oracle.residuals();
+    let mut exact_max = 0.0f32;
+    let mut pend_edge: Option<usize> = None;
+    let mut pend_bound = 0.0f32;
+    for e in mrf.incoming(v) {
+        let r = residuals[e];
+        if oracle.is_exact(e) {
+            exact_max = exact_max.max(r); // NaN ignored, like eager
+        } else if r.is_nan() {
+            // a poisoned bound dominates every candidate
+            pend_edge = Some(e);
+            pend_bound = f32::INFINITY;
+        } else if pend_bound < f32::INFINITY && r > pend_bound {
+            pend_edge = Some(e);
+            pend_bound = r;
+        }
+    }
+    if pend_bound > exact_max {
+        (pend_bound, pend_edge)
+    } else {
+        (exact_max, None)
+    }
+}
+
+/// Lazy root emission: return the next root in the canonical
+/// (vertex residual desc, vertex id asc) order — the order the eager
+/// path gets from its full sort — resolving deferred incoming edges
+/// *only* when the ranking actually rests on an unresolved bound. A
+/// vertex is emitted once its exact residual provably outranks every
+/// remaining vertex's upper bound; `None` once every remaining vertex
+/// is certified below `eps`.
+///
+/// `heap` holds the not-yet-emitted candidates keyed by their current
+/// potential (kept accurate: the only thing that changes a potential
+/// mid-emission is resolving one of the vertex's own incoming edges,
+/// which re-keys it here), and its canonical (priority, smaller-key)
+/// order is exactly the eager sort's tie-break — so each emission is
+/// O(deg · resolutions + log) instead of a rescan of every candidate.
+fn next_certified_root(
+    mrf: &Mrf,
+    eps: f32,
+    oracle: &mut dyn ResidualOracle,
+    heap: &mut IndexedHeap,
+) -> Option<usize> {
+    loop {
+        let (potential, v) = heap.peek()?;
+        if potential < eps {
+            // the canonical max over-estimates every remaining vertex:
+            // all of them are certified converged
+            return None;
+        }
+        let (_, chase) = vertex_potential(mrf, &*oracle, v);
+        match chase {
+            Some(e) => {
+                // ranking rests on a bound: make it exact and re-rank
+                // (resolving e only moves dst[e] == v's potential)
+                oracle.resolve(e);
+                let (p2, _) = vertex_potential(mrf, &*oracle, v);
+                heap.set(v, p2);
+            }
+            None => {
+                // certain, and it outranks every other key (each an
+                // upper bound on that vertex's true residual): emit
+                heap.remove(v);
+                return Some(v);
+            }
         }
     }
 }
@@ -80,56 +235,30 @@ impl Scheduler for ResidualSplash {
         if self.vertex_res.is_empty() {
             return vec![];
         }
-        // 2. sort-and-select roots by vertex residual (descending). A full
-        //    sort mirrors the paper's radix sort; the scan over all
-        //    vertices above is the dominant term either way. Total order
-        //    so a NaN residual (divergent run) cannot panic the sort.
-        self.vertex_res.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
+        // 2. sort-and-select roots by vertex residual (descending,
+        //    canonical: residual under total_cmp — NaN-safe — with ties
+        //    to the smaller vertex id, so the root sequence is a pure
+        //    function of the values and the lazy certified emission can
+        //    reproduce it). A full sort mirrors the paper's radix sort;
+        //    the scan over all vertices above is the dominant term
+        //    either way.
+        self.vertex_res
+            .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
 
         // 3. grow merged splashes level-by-level until the message budget
         //    is spent. `level` stamps claimed vertices with the current
         //    epoch; a vertex claimed by an earlier root stays with its
         //    first splash. All per-select buffers are reused (cleared,
         //    never reallocated once grown).
-        self.epoch += 1;
-        if self.level.len() != mrf.live_vertices {
-            self.level = vec![0; mrf.live_vertices];
-        }
-        if self.tree_edges.len() != self.h {
-            self.tree_edges = vec![Vec::new(); self.h];
-        }
-        for lv in self.tree_edges.iter_mut() {
-            lv.clear();
-        }
+        self.begin_epoch(mrf);
         let mut msg_count = 0usize;
-
-        for &(_, root) in self.vertex_res.iter() {
+        let roots = std::mem::take(&mut self.vertex_res);
+        for &(_, root) in roots.iter() {
             let root = root as usize;
             if self.level[root] == self.epoch {
                 continue; // already absorbed into another splash
             }
-            self.level[root] = self.epoch;
-            // BFS, level by level
-            self.bfs_cur.clear();
-            self.bfs_cur.push(root);
-            for d in 1..=self.h {
-                self.bfs_next.clear();
-                for &v in &self.bfs_cur {
-                    for e in mrf.incoming(v) {
-                        let u = mrf.src[e] as usize;
-                        if self.level[u] == self.epoch {
-                            continue;
-                        }
-                        self.level[u] = self.epoch;
-                        // incoming(v) yields e with dst=v, src=u, i.e. e
-                        // IS the inward u -> v message of this level.
-                        self.tree_edges[d - 1].push(e as i32);
-                        self.bfs_next.push(u);
-                        msg_count += 2; // inward + outward update
-                    }
-                }
-                std::mem::swap(&mut self.bfs_cur, &mut self.bfs_next);
-            }
+            msg_count += self.grow_splash(mrf, root);
             if msg_count >= budget {
                 break;
             }
@@ -137,27 +266,13 @@ impl Scheduler for ResidualSplash {
 
         // 4. waves: inward passes from deepest level toward the roots,
         //    then outward passes (reverse edges) from roots to leaves.
-        let mut waves: Vec<Vec<i32>> = Vec::with_capacity(2 * self.h);
-        for d in (0..self.h).rev() {
-            if !self.tree_edges[d].is_empty() {
-                waves.push(self.tree_edges[d].clone());
-            }
-        }
-        for d in 0..self.h {
-            if !self.tree_edges[d].is_empty() {
-                let out: Vec<i32> = self.tree_edges[d]
-                    .iter()
-                    .map(|&e| mrf.rev[e as usize])
-                    .collect();
-                waves.push(out);
-            }
-        }
+        let mut waves = self.assemble_waves(mrf);
         if waves.is_empty() {
             // isolated high-residual vertices (no unconverged incoming
             // neighbours can still have unconverged incoming edges):
             // update their incoming messages directly.
             let mut wave = Vec::new();
-            for &(_, v) in self.vertex_res.iter().take(16) {
+            for &(_, v) in roots.iter().take(16) {
                 for e in mrf.incoming(v as usize) {
                     if ctx.residuals[e] >= ctx.eps {
                         wave.push(e as i32);
@@ -168,6 +283,86 @@ impl Scheduler for ResidualSplash {
                 waves.push(wave);
             }
         }
+        self.vertex_res = roots;
+        waves
+    }
+
+    fn select_lazy(
+        &mut self,
+        ctx: &LazySchedContext,
+        oracle: &mut dyn ResidualOracle,
+    ) -> Vec<Vec<i32>> {
+        let mrf = ctx.mrf;
+        let budget = ((self.p * mrf.live_edges as f64).ceil() as usize).max(1);
+
+        // 1. candidate roots by ranking potential (residual *upper
+        //    bounds*) — a superset of the eager eps-filtered list
+        //    (bounds only over-estimate; an unresolved NaN bound keeps
+        //    its vertex in play as an infinite potential until
+        //    resolved). One O(E) pass, like the eager vertex scan.
+        let mut emitted = std::mem::take(&mut self.lazy_emitted);
+        emitted.clear();
+        if self.root_heap.capacity() != mrf.live_vertices {
+            self.root_heap = IndexedHeap::with_capacity(mrf.live_vertices);
+        } else {
+            self.root_heap.clear();
+        }
+        for v in 0..mrf.live_vertices {
+            let (p, _) = vertex_potential(mrf, &*oracle, v);
+            if p >= ctx.eps {
+                self.root_heap.set(v, p);
+            }
+        }
+        if self.root_heap.is_empty() {
+            self.lazy_emitted = emitted;
+            return vec![];
+        }
+
+        // 2+3. certified root emission, splash growth under the budget:
+        //    each root is proven to outrank every remaining vertex's
+        //    bound before its splash grows, so the processed-root
+        //    sequence is identical to the eager sorted scan — at
+        //    O(emitted-ranking) resolutions instead of O(dirty) rows.
+        self.begin_epoch(mrf);
+        let mut msg_count = 0usize;
+        while let Some(root) = next_certified_root(mrf, ctx.eps, oracle, &mut self.root_heap) {
+            emitted.push(root as i32);
+            if self.level[root] == self.epoch {
+                continue; // already absorbed into another splash
+            }
+            msg_count += self.grow_splash(mrf, root);
+            if msg_count >= budget {
+                break;
+            }
+        }
+
+        // 4. waves — resolving every selected edge first, so commits
+        //    use freshly exact candidates exactly like eager refresh
+        //    (this is where the deferred splash-tree rows get paid, and
+        //    only these).
+        let mut waves = self.assemble_waves(mrf);
+        for w in &waves {
+            for &e in w {
+                oracle.resolve(e as usize);
+            }
+        }
+        if waves.is_empty() {
+            // the budget loop exhausted emission (no tree edges grow
+            // only when every root is isolated), so `emitted` is the
+            // full eager root list; mirror its fallback on exact values
+            let mut wave = Vec::new();
+            for &v in emitted.iter().take(16) {
+                for e in mrf.incoming(v as usize) {
+                    if oracle.resolve(e) >= ctx.eps {
+                        wave.push(e as i32);
+                    }
+                }
+            }
+            if !wave.is_empty() {
+                waves.push(wave);
+            }
+        }
+        self.lazy_emitted = emitted;
         waves
     }
 }

@@ -131,9 +131,12 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         message_updates,
         engine_calls: message_updates,
         // serial RBP has no bulk dirty-list refresh: dependents are
-        // recomputed eagerly per pop, so neither counter applies
+        // recomputed eagerly per pop, so none of these counters apply
+        // (and the residual_refresh knob never changes a serial run)
         refresh_rows: 0,
         refresh_skipped: 0,
+        refresh_deferred: 0,
+        refresh_resolved: 0,
         final_residual,
         frontier_digest: digest.value(),
         phases,

@@ -1,0 +1,102 @@
+//! Shared support for the differential integration harnesses
+//! (`residual_bound_parity`, `lazy_refresh_parity`, `fuzz_schedules`):
+//! the engine matrix switch, bitwise comparison, and the
+//! full-recompute residual-bound auditor — one implementation, so a
+//! change to the audit contract (e.g. the jitter cushion) cannot
+//! silently leave a sibling harness asserting the old one.
+#![allow(dead_code)] // each including test binary uses a subset
+
+use bp_sched::coordinator::{ResidualAudit, RunObserver, SLACK_CUSHION};
+use bp_sched::engine::{native::NativeEngine, CandidateBatch, MessageEngine};
+
+/// Engine matrix honoring `BP_TEST_ENGINE` (`native` / `parallel`),
+/// which CI loops over; unset, both engines run.
+pub fn engines_under_test() -> Vec<&'static str> {
+    match std::env::var("BP_TEST_ENGINE").as_deref() {
+        Ok("native") => vec!["native"],
+        Ok("parallel") => vec!["parallel"],
+        _ => vec!["native", "parallel"],
+    }
+}
+
+pub fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}[{i}]: {x:?} vs {y:?}");
+    }
+}
+
+/// Recomputes every live residual from the audited messages with an
+/// untracked reference engine and checks the maintained bounds:
+///
+/// * **soundness** — each edge's upper bound `res + slack (+ cushion)`
+///   dominates the true residual, at every refresh point (this is what
+///   makes bounded skips and lazy deferrals safe);
+/// * **convergence honesty** — whenever the maintained bounds say
+///   "converged" (exactly when the coordinator would stop Converged),
+///   a full recompute agrees up to the jitter cushion.
+///
+/// The reference engine is caller-provided so harnesses that randomize
+/// engine options (damping) audit against matching arithmetic; runs
+/// must use `belief_refresh_every = 0` so the run's engine and this
+/// reference perform identical operations.
+pub struct BoundAuditor {
+    what: String,
+    eng: NativeEngine,
+    batch: CandidateBatch,
+    frontier: Vec<i32>,
+    pub audits: usize,
+}
+
+impl BoundAuditor {
+    pub fn new(what: String, reference: NativeEngine) -> BoundAuditor {
+        BoundAuditor {
+            what,
+            eng: reference,
+            batch: CandidateBatch::default(),
+            frontier: Vec::new(),
+            audits: 0,
+        }
+    }
+}
+
+impl RunObserver for BoundAuditor {
+    fn on_state(&mut self, a: &ResidualAudit) {
+        self.audits += 1;
+        if self.frontier.len() != a.live {
+            self.frontier = (0..a.live as i32).collect();
+        }
+        self.eng
+            .candidates_into(a.mrf, a.logm, &self.frontier, &mut self.batch)
+            .unwrap();
+        let mut all_bounds_converged = true;
+        for e in 0..a.live {
+            let truth = self.batch.residuals[e];
+            let bound = a.bound(e);
+            assert!(
+                bound + SLACK_CUSHION >= truth,
+                "{}: audit {}, edge {e}: bound {bound} < true residual {truth} \
+                 (res {}, slack {})",
+                self.what,
+                self.audits,
+                a.res[e],
+                a.slack[e]
+            );
+            if bound >= a.eps {
+                all_bounds_converged = false;
+            }
+        }
+        if all_bounds_converged {
+            for e in 0..a.live {
+                let truth = self.batch.residuals[e];
+                assert!(
+                    truth < a.eps + SLACK_CUSHION,
+                    "{}: declared converged but edge {e} has true residual {truth} \
+                     >= eps {}",
+                    self.what,
+                    a.eps
+                );
+            }
+        }
+    }
+}

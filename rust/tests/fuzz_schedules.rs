@@ -1,0 +1,323 @@
+//! Seeded randomized differential fuzzer over the scheduler × refresh
+//! mode × engine matrix.
+//!
+//! Each root seed deterministically generates a batch of small random
+//! MRFs (ising / potts / chain mix with randomized size, coupling, ε,
+//! damping, scheduler parameters, and engine thread counts) and
+//! cross-checks, for every GPU scheduler:
+//!
+//! * **lazy ≡ exact** — frontier digests, iteration counts, message
+//!   updates, and bitwise marginals agree (the certified-boundary
+//!   contract; lbp via the resolve-all default). The one tolerated
+//!   asymmetry is the cap boundary: a run that exact declares
+//!   `Converged` exactly at the iteration cap surfaces as
+//!   `IterationCap` under lazy, with identical trajectories.
+//! * **bounded ≡ exact for the strictly ε-filtered schedulers** (rbp,
+//!   rnbp — the PR 3 theorem), and fixed-point tolerance for rs/lbp on
+//!   converged runs.
+//! * **native ≡ parallel** per mode (bit-identical engines), when the
+//!   engine matrix is not pinned by `BP_TEST_ENGINE`.
+//! * **Bound soundness** via the `RunObserver` seam on a sample of
+//!   lazy runs: maintained upper bounds dominate a from-scratch
+//!   recompute at every refresh point.
+//! * **Stop honesty** — no run reports `Converged` while any true
+//!   residual is hot (or NaN), and no built-in scheduler stalls.
+//!
+//! Budgets are iteration-based (huge wallclock timeout, no cost model),
+//! so every run is bit-deterministic for a given root seed.
+//! `BP_FUZZ_SEED` pins one root seed (the CI matrix runs 11 / 22 / 33
+//! in separate legs); unset, all three run.
+
+mod common;
+
+use bp_sched::coordinator::{run, run_observed, ResidualRefresh, RunParams, RunResult, StopReason};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::{
+    native::NativeEngine, parallel::ParallelEngine, MessageEngine, Semiring, UpdateOptions,
+};
+use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::Rng;
+use bp_sched::Mrf;
+use common::{assert_bits_equal, engines_under_test, BoundAuditor};
+
+const DEFAULT_ROOT_SEEDS: [u64; 3] = [11, 22, 33];
+const CASES_PER_SEED: usize = 17;
+const MODES: [ResidualRefresh; 3] = [
+    ResidualRefresh::Exact,
+    ResidualRefresh::Bounded,
+    ResidualRefresh::Lazy,
+];
+
+fn root_seeds() -> Vec<u64> {
+    match std::env::var("BP_FUZZ_SEED") {
+        Ok(s) => vec![s.parse().expect("BP_FUZZ_SEED must be a u64")],
+        Err(_) => DEFAULT_ROOT_SEEDS.to_vec(),
+    }
+}
+
+/// One randomized scenario: graph + run knobs + scheduler parameters.
+struct FuzzCase {
+    label: String,
+    graph: Mrf,
+    eps: f32,
+    damping: f32,
+    engine_threads: usize,
+    rbp_p: f64,
+    rs_p: f64,
+    rs_h: usize,
+    rnbp_low: f64,
+    rnbp_high: f64,
+    rnbp_seed: u64,
+}
+
+fn gen_case(rng: &mut Rng, id: usize) -> FuzzCase {
+    let (spec, glabel) = match rng.below(3) {
+        0 => {
+            let n = 4 + rng.below(3); // 4..6
+            let c = rng.range(0.5, 2.5);
+            (DatasetSpec::Ising { n, c }, format!("ising{n}x{c:.2}"))
+        }
+        1 => {
+            let n = 4 + rng.below(2); // 4..5
+            let q = 2 + rng.below(3); // 2..4
+            let c = rng.range(0.5, 1.5);
+            (DatasetSpec::Potts { n, q, c }, format!("potts{n}q{q}x{c:.2}"))
+        }
+        _ => {
+            let n = 10 + rng.below(31); // 10..40
+            let c = rng.range(1.0, 8.0);
+            (DatasetSpec::Chain { n, c }, format!("chain{n}x{c:.2}"))
+        }
+    };
+    let graph = spec.generate(rng).unwrap();
+    let eps = [1e-3f32, 5e-4, 1e-4][rng.below(3)];
+    let damping = [0.0f32, 0.0, 0.3][rng.below(3)];
+    let engine_threads = [1usize, 2, 4][rng.below(3)];
+    FuzzCase {
+        label: format!("case{id}:{glabel}/eps{eps}/damp{damping}/t{engine_threads}"),
+        graph,
+        eps,
+        damping,
+        engine_threads,
+        rbp_p: [1.0 / 16.0, 0.25, 1.0][rng.below(3)],
+        rs_p: [1.0 / 16.0, 0.25][rng.below(2)],
+        rs_h: 1 + rng.below(2),
+        rnbp_low: [0.3, 0.7][rng.below(2)],
+        rnbp_high: [0.9, 1.0][rng.below(2)],
+        rnbp_seed: rng.next_u64(),
+    }
+}
+
+fn mk_sched(case: &FuzzCase, name: &str) -> Box<dyn Scheduler> {
+    match name {
+        "lbp" => Box::new(Lbp::new()),
+        "rbp" => Box::new(Rbp::new(case.rbp_p)),
+        "rs" => Box::new(ResidualSplash::new(case.rs_p, case.rs_h)),
+        "rnbp" => Box::new(Rnbp::new(case.rnbp_low, case.rnbp_high, case.rnbp_seed)),
+        other => panic!("unknown scheduler {other}"),
+    }
+}
+
+fn mk_engine(case: &FuzzCase, name: &str) -> Box<dyn MessageEngine> {
+    let opts = UpdateOptions {
+        semiring: Semiring::SumProduct,
+        damping: case.damping,
+    };
+    match name {
+        "native" => Box::new(NativeEngine::with_options(opts)),
+        "parallel" => Box::new(ParallelEngine::with_options_threads(opts, case.engine_threads)),
+        other => panic!("unknown engine {other}"),
+    }
+}
+
+fn params(case: &FuzzCase, mode: ResidualRefresh) -> RunParams {
+    RunParams {
+        eps: case.eps,
+        // deterministic stop: iteration budget only — wallclock and
+        // simulated clocks must never race the differential
+        max_iterations: 400,
+        timeout: 1e9,
+        cost_model: None,
+        want_marginals: true,
+        belief_refresh_every: 0,
+        residual_refresh: mode,
+        ..Default::default()
+    }
+}
+
+fn run_one(case: &FuzzCase, sched: &str, engine: &str, mode: ResidualRefresh) -> RunResult {
+    let mut eng = mk_engine(case, engine);
+    let mut s = mk_sched(case, sched);
+    run(&case.graph, eng.as_mut(), s.as_mut(), &params(case, mode)).unwrap()
+}
+
+/// Stop honesty: `Converged` must mean every residual upper bound (and
+/// so every true residual) is below eps — NaN counts as hot — and no
+/// built-in scheduler may stall on these poison-free runs.
+fn assert_honest_eps(r: &RunResult, eps: f32, what: &str) {
+    assert_ne!(
+        r.stop,
+        StopReason::Stalled,
+        "{what}: built-in scheduler stalled"
+    );
+    if r.stop == StopReason::Converged {
+        assert!(
+            !r.final_residual.is_nan() && r.final_residual < eps,
+            "{what}: Converged with hot/NaN final residual {} (eps {eps})",
+            r.final_residual
+        );
+    }
+}
+
+/// lazy vs exact: identical trajectories, tolerating only the
+/// cap-boundary stop asymmetry (identical messages either way).
+fn assert_lazy_matches_exact(exact: &RunResult, lazy: &RunResult, what: &str) {
+    match (exact.stop, lazy.stop) {
+        (a, b) if a == b => {}
+        (StopReason::Converged, StopReason::IterationCap) => {
+            // exact certified convergence at the very loop head the cap
+            // fires on; lazy still carried unresolved bounds there
+        }
+        other => panic!("{what}: stop mismatch {other:?}"),
+    }
+    assert_eq!(exact.iterations, lazy.iterations, "{what}: iterations");
+    assert_eq!(
+        exact.message_updates, lazy.message_updates,
+        "{what}: message updates"
+    );
+    assert_eq!(
+        exact.frontier_digest, lazy.frontier_digest,
+        "{what}: frontier digests diverged"
+    );
+    assert_bits_equal(
+        exact.marginals.as_ref().unwrap(),
+        lazy.marginals.as_ref().unwrap(),
+        &format!("{what}: marginals"),
+    );
+    assert_eq!(lazy.refresh_skipped, 0, "{what}: lazy must defer, not skip");
+    assert!(
+        lazy.refresh_resolved <= lazy.refresh_deferred,
+        "{what}: resolved {} > deferred {}",
+        lazy.refresh_resolved,
+        lazy.refresh_deferred
+    );
+}
+
+fn check_case(case: &FuzzCase) {
+    let engines = engines_under_test();
+    for sched in ["lbp", "rbp", "rs", "rnbp"] {
+        // per engine: the three refresh modes
+        let mut per_engine: Vec<[RunResult; 3]> = Vec::new();
+        for &engine in &engines {
+            let what = format!("{}/{sched}/{engine}", case.label);
+            let exact = run_one(case, sched, engine, ResidualRefresh::Exact);
+            let bounded = run_one(case, sched, engine, ResidualRefresh::Bounded);
+            let lazy = run_one(case, sched, engine, ResidualRefresh::Lazy);
+            for r in [&exact, &bounded, &lazy] {
+                assert_honest_eps(r, case.eps, &what);
+            }
+
+            assert_lazy_matches_exact(&exact, &lazy, &what);
+
+            if sched == "rbp" || sched == "rnbp" {
+                // strictly ε-filtered: bounded is the PR 3 bit-identity
+                assert_eq!(exact.stop, bounded.stop, "{what}: bounded stop");
+                assert_eq!(
+                    exact.frontier_digest, bounded.frontier_digest,
+                    "{what}: bounded digest"
+                );
+                assert_eq!(bounded.refresh_skipped, 0, "{what}: deltas are >= eps");
+                assert_bits_equal(
+                    exact.marginals.as_ref().unwrap(),
+                    bounded.marginals.as_ref().unwrap(),
+                    &format!("{what}: bounded marginals"),
+                );
+            } else if exact.converged() && bounded.converged() {
+                // sub-ε committers: fixed-point tolerance on converged runs
+                for (i, (x, y)) in exact
+                    .marginals
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .zip(bounded.marginals.as_ref().unwrap())
+                    .enumerate()
+                {
+                    assert!(
+                        (x - y).abs() < 1e-3,
+                        "{what}: bounded marginal[{i}] {x} vs {y}"
+                    );
+                }
+            }
+            per_engine.push([exact, bounded, lazy]);
+        }
+        // cross-engine: native and parallel are bit-identical per mode
+        if per_engine.len() == 2 {
+            for (mi, mode) in MODES.iter().enumerate() {
+                let (a, b) = (&per_engine[0][mi], &per_engine[1][mi]);
+                let what = format!("{}/{sched}/{mode:?} native-vs-parallel", case.label);
+                assert_eq!(a.stop, b.stop, "{what}");
+                assert_eq!(a.frontier_digest, b.frontier_digest, "{what}");
+                assert_bits_equal(
+                    a.marginals.as_ref().unwrap(),
+                    b.marginals.as_ref().unwrap(),
+                    &what,
+                );
+            }
+        }
+    }
+
+    // serial baseline: honesty only (no dirty-list refresh to fuzz; its
+    // refresh-mode invariance is pinned in lazy_refresh_parity)
+    let srbp = srbp::run_serial(&case.graph, &params(case, ResidualRefresh::Exact)).unwrap();
+    assert_honest_eps(&srbp, case.eps, &format!("{}/srbp", case.label));
+}
+
+#[test]
+fn randomized_schedule_differentials() {
+    for root in root_seeds() {
+        let mut rng = Rng::new(root ^ 0xf022_a3a1_9e1c_55d7);
+        for id in 0..CASES_PER_SEED {
+            let case = gen_case(&mut rng, id);
+            check_case(&case);
+        }
+    }
+}
+
+#[test]
+fn sampled_lazy_runs_keep_bounds_sound() {
+    // The full-recompute audit is O(M·A·deg) per refresh point, so it
+    // runs on a deterministic sample of cases rather than all of them.
+    for root in root_seeds() {
+        let mut rng = Rng::new(root ^ 0xf022_a3a1_9e1c_55d7);
+        for id in 0..CASES_PER_SEED {
+            let case = gen_case(&mut rng, id);
+            if id % 6 != 0 {
+                continue;
+            }
+            for sched in ["rbp", "rs"] {
+                let what = format!("{}/{sched}/lazy-audit", case.label);
+                let mut eng = mk_engine(&case, "native");
+                let mut s = mk_sched(&case, sched);
+                // reference engine must match the case's damping so the
+                // audit compares identical arithmetic
+                let mut auditor = BoundAuditor::new(
+                    what.clone(),
+                    NativeEngine::with_options(UpdateOptions {
+                        semiring: Semiring::SumProduct,
+                        damping: case.damping,
+                    }),
+                );
+                let r = run_observed(
+                    &case.graph,
+                    eng.as_mut(),
+                    s.as_mut(),
+                    &params(&case, ResidualRefresh::Lazy),
+                    &mut auditor,
+                )
+                .unwrap();
+                assert!(auditor.audits > 0, "{what}: auditor never ran");
+                assert_honest_eps(&r, case.eps, &what);
+            }
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Differential harness for the lazy priority-ordered refresh
+//! (`--residual-refresh lazy`) against the eager exact recompute and
+//! PR 3's bounded skip, across every scheduler on small
+//! Ising/Potts/chain instances.
+//!
+//! What is provable, and asserted here:
+//!
+//! * **Trajectory identity for the certified schedulers** — rbp, rnbp
+//!   and rs resolve deferred residuals in certified boundary order (no
+//!   unresolved bound above the last admitted exact residual), so their
+//!   `lazy` runs select bit-identical frontier sequences and commit
+//!   bit-identical rows: equal digests, iterate counts, message
+//!   updates, stop reasons, and bitwise marginals vs `exact`.
+//! * **lbp** takes the default resolve-all `select_lazy`, which *is*
+//!   the eager refresh executed at selection time — also digest- and
+//!   marginal-identical; the fixed-point tolerance the satellite
+//!   contract asks for is implied and asserted separately.
+//! * **Work reduction where the boundary is narrow** — on the
+//!   narrow-frontier rs workload the lazy oracle resolves only
+//!   ranking-relevant and selected edges, so it issues strictly fewer
+//!   refresh rows than `bounded` (which eagerly recomputes every
+//!   over-ε dirty edge) while being *identical* to `exact` (which
+//!   bounded is not, for rs). The full-frontier rbp control shows the
+//!   degenerate case: nothing sits outside the boundary, so lazy pays
+//!   exactly the bounded/exact rows with identical digests.
+//! * **Bound soundness under deferral** — at every refresh point the
+//!   maintained upper bound of every (possibly deferred) edge
+//!   dominates a from-scratch recompute, audited via the `RunObserver`
+//!   seam exactly like the PR 3 harness.
+//! * **srbp invariance** — the knob never touches the serial baseline.
+//!
+//! The engine matrix honors `BP_TEST_ENGINE` (`native` / `parallel`),
+//! which CI loops over; unset, both engines run.
+
+mod common;
+
+use bp_sched::coordinator::{run, run_observed, ResidualRefresh, RunParams, RunResult, StopReason};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
+use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::Rng;
+use bp_sched::Mrf;
+use common::{assert_bits_equal, engines_under_test, BoundAuditor};
+
+const CERTIFIED_SCHEDULERS: [&str; 3] = ["rbp", "rs", "rnbp"];
+
+fn test_graphs() -> Vec<(&'static str, Mrf)> {
+    let mut rng = Rng::new(20_260_729);
+    vec![
+        (
+            "ising6",
+            DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap(),
+        ),
+        (
+            "potts5_q3",
+            DatasetSpec::Potts { n: 5, q: 3, c: 1.0 }.generate(&mut rng).unwrap(),
+        ),
+        (
+            "chain40",
+            DatasetSpec::Chain { n: 40, c: 5.0 }.generate(&mut rng).unwrap(),
+        ),
+    ]
+}
+
+fn mk_sched(name: &str) -> Box<dyn Scheduler> {
+    match name {
+        "lbp" => Box::new(Lbp::new()),
+        "rbp" => Box::new(Rbp::new(0.25)),
+        "rs" => Box::new(ResidualSplash::new(0.25, 2)),
+        "rnbp" => Box::new(Rnbp::synthetic(0.7, 11)),
+        other => panic!("unknown scheduler {other}"),
+    }
+}
+
+fn mk_engine(name: &str) -> Box<dyn MessageEngine> {
+    match name {
+        "native" => Box::new(NativeEngine::new()),
+        "parallel" => Box::new(ParallelEngine::with_threads(4)),
+        other => panic!("unknown engine {other}"),
+    }
+}
+
+fn params(mode: ResidualRefresh) -> RunParams {
+    RunParams {
+        want_marginals: true,
+        timeout: 30.0,
+        // untracked beliefs: every engine read re-derives from the
+        // current messages, bit-identical to the auditor's reference
+        belief_refresh_every: 0,
+        residual_refresh: mode,
+        ..Default::default()
+    }
+}
+
+fn run_one(g: &Mrf, sched: &str, engine: &str, mode: ResidualRefresh) -> RunResult {
+    let mut eng = mk_engine(engine);
+    let mut s = mk_sched(sched);
+    run(g, eng.as_mut(), s.as_mut(), &params(mode)).unwrap()
+}
+
+fn assert_identical(exact: &RunResult, lazy: &RunResult, what: &str) {
+    assert_eq!(exact.stop, lazy.stop, "{what}: stop");
+    assert_eq!(exact.iterations, lazy.iterations, "{what}: iterations");
+    assert_eq!(
+        exact.message_updates, lazy.message_updates,
+        "{what}: message updates"
+    );
+    assert_eq!(
+        exact.frontier_digest, lazy.frontier_digest,
+        "{what}: the refresh modes selected different frontiers"
+    );
+    assert_bits_equal(
+        exact.marginals.as_ref().unwrap(),
+        lazy.marginals.as_ref().unwrap(),
+        &format!("{what}: marginals"),
+    );
+}
+
+#[test]
+fn lazy_is_trajectory_identical_to_exact_for_certified_schedulers() {
+    for (glabel, g) in &test_graphs() {
+        for sched in CERTIFIED_SCHEDULERS {
+            for engine in engines_under_test() {
+                let what = format!("{glabel}/{sched}/{engine}");
+                let exact = run_one(g, sched, engine, ResidualRefresh::Exact);
+                let lazy = run_one(g, sched, engine, ResidualRefresh::Lazy);
+                assert_eq!(exact.stop, StopReason::Converged, "{what}: exact");
+                assert_identical(&exact, &lazy, &what);
+                assert!(lazy.final_residual < params(ResidualRefresh::Lazy).eps, "{what}");
+                // counter sanity: lazy defers instead of skipping, and
+                // never resolves more than it deferred; resolutions are
+                // the only lazy refresh rows
+                assert_eq!(lazy.refresh_skipped, 0, "{what}");
+                assert_eq!(exact.refresh_deferred, 0, "{what}");
+                assert!(
+                    lazy.refresh_resolved <= lazy.refresh_deferred,
+                    "{what}: resolved {} > deferred {}",
+                    lazy.refresh_resolved,
+                    lazy.refresh_deferred
+                );
+                assert_eq!(lazy.refresh_resolved, lazy.refresh_rows, "{what}");
+                // deferral means the lazy run never pays *more* refresh
+                // rows than the eager one
+                assert!(
+                    lazy.refresh_rows <= exact.refresh_rows,
+                    "{what}: lazy {} rows vs exact {}",
+                    lazy.refresh_rows,
+                    exact.refresh_rows
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lazy_lbp_matches_exact_at_fixed_point_and_beyond() {
+    // The satellite contract for lbp is fixed-point tolerance; the
+    // default resolve-all select_lazy actually delivers trajectory
+    // identity (it is the eager refresh run at selection time), so
+    // assert both — the tolerance bound documents the guaranteed
+    // contract, the identity the implementation's stronger one.
+    for (glabel, g) in &test_graphs() {
+        for engine in engines_under_test() {
+            let what = format!("{glabel}/lbp/{engine}");
+            let exact = run_one(g, "lbp", engine, ResidualRefresh::Exact);
+            let lazy = run_one(g, "lbp", engine, ResidualRefresh::Lazy);
+            assert!(exact.converged() && lazy.converged(), "{what}");
+            for (i, (x, y)) in exact
+                .marginals
+                .as_ref()
+                .unwrap()
+                .iter()
+                .zip(lazy.marginals.as_ref().unwrap())
+                .enumerate()
+            {
+                assert!((x - y).abs() < 1e-3, "{what}: marginal[{i}] {x} vs {y}");
+            }
+            assert_identical(&exact, &lazy, &what);
+            assert!(lazy.refresh_deferred > 0, "{what}: nothing deferred");
+        }
+    }
+}
+
+#[test]
+fn lazy_beats_bounded_on_narrow_frontier_rs_with_rbp_control() {
+    // The headline of estimate-first scheduling: on a narrow-frontier
+    // rs workload the lazy oracle pays only for ranking-relevant and
+    // selected rows, strictly undercutting bounded's eager over-ε
+    // recompute — while staying *identical* to exact (bounded only
+    // agrees at fixed-point tolerance for rs). The full-frontier rbp
+    // control has nothing outside its selection boundary: equal rows
+    // across all three modes, identical digests.
+    let mut rng = Rng::new(31);
+    let g = DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap();
+
+    let run_mode = |mk: fn() -> Box<dyn Scheduler>, mode: ResidualRefresh| -> RunResult {
+        let mut eng = NativeEngine::new();
+        let mut s = mk();
+        run(&g, &mut eng, s.as_mut(), &params(mode)).unwrap()
+    };
+
+    // narrow-frontier rs: the paper-relevant splash workload
+    let mk_rs: fn() -> Box<dyn Scheduler> = || Box::new(ResidualSplash::new(1.0 / 16.0, 2));
+    let exact = run_mode(mk_rs, ResidualRefresh::Exact);
+    let bounded = run_mode(mk_rs, ResidualRefresh::Bounded);
+    let lazy = run_mode(mk_rs, ResidualRefresh::Lazy);
+    assert!(exact.converged() && bounded.converged() && lazy.converged());
+    assert_identical(&exact, &lazy, "rs narrow: lazy vs exact");
+    assert!(
+        lazy.refresh_rows < bounded.refresh_rows,
+        "rs narrow: lazy {} rows vs bounded {} — estimate-first saved nothing",
+        lazy.refresh_rows,
+        bounded.refresh_rows
+    );
+    assert!(
+        lazy.refresh_rows < exact.refresh_rows,
+        "rs narrow: lazy {} rows vs exact {}",
+        lazy.refresh_rows,
+        exact.refresh_rows
+    );
+    assert!(lazy.refresh_deferred > lazy.refresh_resolved, "rs narrow: no row was saved");
+
+    // full-frontier rbp control: every over-ε edge is inside the
+    // boundary, so lazy degenerates to bounded-equal work
+    let mk_rbp: fn() -> Box<dyn Scheduler> = || Box::new(Rbp::new(1.0));
+    let exact = run_mode(mk_rbp, ResidualRefresh::Exact);
+    let bounded = run_mode(mk_rbp, ResidualRefresh::Bounded);
+    let lazy = run_mode(mk_rbp, ResidualRefresh::Lazy);
+    assert!(exact.converged() && bounded.converged() && lazy.converged());
+    assert_identical(&exact, &lazy, "rbp control: lazy vs exact");
+    assert_eq!(exact.frontier_digest, bounded.frontier_digest, "rbp control");
+    assert_eq!(
+        lazy.refresh_rows, bounded.refresh_rows,
+        "rbp control: full frontier must pay the full boundary"
+    );
+    assert_eq!(bounded.refresh_rows, exact.refresh_rows, "rbp control");
+}
+
+#[test]
+fn bounds_stay_sound_under_lazy_deferral() {
+    // The shared full-recompute auditor (tests/common) — here
+    // exercising deferred (never-resolved) edges under lazy refresh.
+    for (glabel, g) in &test_graphs() {
+        for sched in ["lbp", "rbp", "rs", "rnbp"] {
+            for engine in engines_under_test() {
+                let what = format!("{glabel}/{sched}/{engine} lazy");
+                let mut eng = mk_engine(engine);
+                let mut s = mk_sched(sched);
+                let mut auditor = BoundAuditor::new(what.clone(), NativeEngine::new());
+                let r = run_observed(
+                    g,
+                    eng.as_mut(),
+                    s.as_mut(),
+                    &params(ResidualRefresh::Lazy),
+                    &mut auditor,
+                )
+                .unwrap();
+                assert!(auditor.audits > 1, "{what}: auditor never ran");
+                assert_eq!(r.stop, StopReason::Converged, "{what}");
+            }
+        }
+    }
+}
+
+#[test]
+fn srbp_is_residual_refresh_invariant_across_all_modes() {
+    // The serial baseline has no dirty-list refresh: the knob must not
+    // change a single bit of its trajectory in any of the three modes.
+    let mut rng = Rng::new(99);
+    let g = DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap();
+    let a = srbp::run_serial(&g, &params(ResidualRefresh::Exact)).unwrap();
+    for mode in [ResidualRefresh::Bounded, ResidualRefresh::Lazy] {
+        let b = srbp::run_serial(&g, &params(mode)).unwrap();
+        assert_eq!(a.stop, b.stop, "{mode:?}");
+        assert_eq!(a.message_updates, b.message_updates, "{mode:?}");
+        assert_eq!(a.frontier_digest, b.frontier_digest, "{mode:?}");
+        assert_eq!(b.refresh_rows, 0, "{mode:?}");
+        assert_eq!(b.refresh_skipped, 0, "{mode:?}");
+        assert_eq!(b.refresh_deferred, 0, "{mode:?}");
+        assert_eq!(b.refresh_resolved, 0, "{mode:?}");
+        assert_bits_equal(
+            a.marginals.as_ref().unwrap(),
+            b.marginals.as_ref().unwrap(),
+            &format!("srbp marginals, {mode:?}"),
+        );
+    }
+}

@@ -34,27 +34,17 @@
 //! which CI loops over so engine-conditional regressions cannot slip
 //! through on one engine only; unset, both engines run.
 
-use bp_sched::coordinator::{
-    run, run_observed, ResidualAudit, ResidualRefresh, RunObserver, RunParams, RunResult,
-    StopReason, SLACK_CUSHION,
-};
+mod common;
+
+use bp_sched::coordinator::{run, run_observed, ResidualRefresh, RunParams, RunResult, StopReason};
 use bp_sched::datasets::DatasetSpec;
-use bp_sched::engine::{
-    native::NativeEngine, parallel::ParallelEngine, CandidateBatch, MessageEngine,
-};
+use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
 use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
 use bp_sched::util::Rng;
 use bp_sched::Mrf;
+use common::{assert_bits_equal, engines_under_test, BoundAuditor};
 
 const GPU_SCHEDULERS: [&str; 4] = ["lbp", "rbp", "rs", "rnbp"];
-
-fn engines_under_test() -> Vec<&'static str> {
-    match std::env::var("BP_TEST_ENGINE").as_deref() {
-        Ok("native") => vec!["native"],
-        Ok("parallel") => vec!["parallel"],
-        _ => vec!["native", "parallel"],
-    }
-}
 
 fn test_graphs() -> Vec<(&'static str, Mrf)> {
     let mut rng = Rng::new(20_260_729);
@@ -111,80 +101,6 @@ fn run_one(g: &Mrf, sched: &str, engine: &str, mode: ResidualRefresh) -> RunResu
     run(g, eng.as_mut(), s.as_mut(), &params(mode)).unwrap()
 }
 
-fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length");
-    for (i, (x, y)) in a.iter().zip(b).enumerate() {
-        assert!(x.to_bits() == y.to_bits(), "{what}[{i}]: {x:?} vs {y:?}");
-    }
-}
-
-/// Recomputes every live residual from the audited messages with an
-/// untracked reference engine and checks the maintained bounds.
-struct BoundAuditor {
-    what: String,
-    eng: NativeEngine,
-    batch: CandidateBatch,
-    frontier: Vec<i32>,
-    audits: usize,
-}
-
-impl BoundAuditor {
-    fn new(what: String) -> BoundAuditor {
-        BoundAuditor {
-            what,
-            eng: NativeEngine::new(),
-            batch: CandidateBatch::default(),
-            frontier: Vec::new(),
-            audits: 0,
-        }
-    }
-}
-
-impl RunObserver for BoundAuditor {
-    fn on_state(&mut self, a: &ResidualAudit) {
-        self.audits += 1;
-        if self.frontier.len() != a.live {
-            self.frontier = (0..a.live as i32).collect();
-        }
-        self.eng
-            .candidates_into(a.mrf, a.logm, &self.frontier, &mut self.batch)
-            .unwrap();
-        let mut all_bounds_converged = true;
-        for e in 0..a.live {
-            let truth = self.batch.residuals[e];
-            let bound = a.bound(e);
-            assert!(
-                bound + SLACK_CUSHION >= truth,
-                "{}: audit {}, edge {e}: bound {bound} < true residual {truth} \
-                 (res {}, slack {})",
-                self.what,
-                self.audits,
-                a.res[e],
-                a.slack[e]
-            );
-            if bound >= a.eps {
-                all_bounds_converged = false;
-            }
-        }
-        // Convergence honesty: whenever the maintained bounds say
-        // "converged" (which is exactly when the coordinator would stop
-        // Converged), a full recompute must agree up to the jitter
-        // cushion.
-        if all_bounds_converged {
-            for e in 0..a.live {
-                let truth = self.batch.residuals[e];
-                assert!(
-                    truth < a.eps + SLACK_CUSHION,
-                    "{}: declared converged but edge {e} has true residual {truth} \
-                     >= eps {}",
-                    self.what,
-                    a.eps
-                );
-            }
-        }
-    }
-}
-
 #[test]
 fn bounds_dominate_true_residuals_at_every_refresh() {
     for (glabel, g) in &test_graphs() {
@@ -193,7 +109,7 @@ fn bounds_dominate_true_residuals_at_every_refresh() {
                 let what = format!("{glabel}/{sched}/{engine} bounded");
                 let mut eng = mk_engine(engine);
                 let mut s = mk_sched(sched);
-                let mut auditor = BoundAuditor::new(what.clone());
+                let mut auditor = BoundAuditor::new(what.clone(), NativeEngine::new());
                 let r = run_observed(
                     g,
                     eng.as_mut(),
