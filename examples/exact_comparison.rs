@@ -10,6 +10,10 @@
 //! cargo run --release --example exact_comparison
 //! ```
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::{run, RunParams};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::pjrt::PjrtEngine;

@@ -7,6 +7,10 @@
 //! cargo run --release --example map_inference
 //! ```
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::{run, RunParams};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{map_decode, pjrt::PjrtEngine, Semiring, UpdateOptions};

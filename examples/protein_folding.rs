@@ -9,6 +9,10 @@
 //! cargo run --release --example protein_folding -- [graphs]
 //! ```
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::campaign::run_campaign;
 use bp_sched::coordinator::{run, RunParams, TimeBasis};
 use bp_sched::datasets::DatasetSpec;

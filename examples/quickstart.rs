@@ -1,11 +1,12 @@
-//! Quickstart: generate an Ising grid, run Randomized BP through the AOT
-//! XLA stack, and print marginals — the 20-line tour of the public API.
+//! Quickstart: generate an Ising grid, build a stateful inference
+//! `Session` over the AOT XLA stack, solve, apply evidence, and
+//! warm-start the re-solve — the 30-line tour of the public API.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use bp_sched::coordinator::{run, RunParams};
+use bp_sched::coordinator::SessionBuilder;
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::pjrt::PjrtEngine;
 use bp_sched::sched::Rnbp;
@@ -20,33 +21,50 @@ fn main() -> anyhow::Result<()> {
         graph.live_vertices, graph.live_edges, graph.class_name
     );
 
-    // 2. the many-core engine: AOT-compiled JAX/Pallas programs via PJRT
-    let mut engine = PjrtEngine::from_default_dir()?;
+    // 2. the session: owns the graph, the many-core engine (AOT-compiled
+    //    JAX/Pallas programs via PJRT), and the paper's randomized
+    //    scheduling (LowP = 0.7)
+    let mut session = SessionBuilder::new(
+        graph,
+        Box::new(PjrtEngine::from_default_dir()?),
+        Box::new(Rnbp::synthetic(0.7, 7)),
+    )
+    .with_want_marginals(true)
+    .build()?;
 
-    // 3. the paper's contribution: randomized scheduling, LowP = 0.7
-    let mut scheduler = Rnbp::synthetic(0.7, 7);
-
-    // 4. run Algorithm 1
-    let params = RunParams { want_marginals: true, ..Default::default() };
-    let result = run(&graph, &mut engine, &mut scheduler, &params)?;
-
-    println!(
-        "{} via {}: {:?} in {} iterations, {:.1} ms, {} message updates",
-        result.scheduler,
-        result.engine,
-        result.stop,
-        result.iterations,
-        result.wall * 1e3,
-        result.message_updates
-    );
-    for (phase, secs, frac) in result.phases.breakdown() {
-        println!("  {phase:<8} {:>8.2} ms  {:>5.1}%", secs * 1e3, frac * 100.0);
+    // 3. run Algorithm 1 (the priming solve)
+    {
+        let result = session.solve()?;
+        println!(
+            "{} via {}: {:?} in {} iterations, {:.1} ms, {} message updates",
+            result.scheduler,
+            result.engine,
+            result.stop,
+            result.iterations,
+            result.wall * 1e3,
+            result.message_updates
+        );
+        for (phase, secs, frac) in result.phases.breakdown() {
+            println!("  {phase:<8} {:>8.2} ms  {:>5.1}%", secs * 1e3, frac * 100.0);
+        }
     }
 
-    let marginals = result.marginals.unwrap();
+    let marginals = session.marginals()?;
     println!("first five vertex marginals P(x=1):");
     for v in 0..5 {
         println!("  vertex {v}: {:.4}", marginals[v * 2 + 1]);
     }
+
+    // 4. evidence arrives: pin vertex 0 strongly to state 1, and
+    //    warm-start the re-solve from the converged fixed point —
+    //    O(affected) work instead of a cold re-convergence
+    session.apply_evidence(&[(0, &[-3.0, 3.0])])?;
+    let (iters, rows) = {
+        let result = session.solve()?;
+        (result.iterations, result.update_rows())
+    };
+    println!("after evidence on vertex 0: re-converged in {iters} iterations, {rows} update rows");
+    let marginals = session.marginals()?;
+    println!("  vertex 0 now: P(x=1) = {:.4}", marginals[1]);
     Ok(())
 }

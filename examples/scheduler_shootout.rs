@@ -11,6 +11,10 @@
 //!     [ising_n] [C] [graphs] [engine: auto|pjrt|native|parallel]
 //! ```
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::campaign::{run_campaign, Campaign, Speedup};
 use bp_sched::coordinator::{run, RunParams, TimeBasis};
 use bp_sched::datasets::DatasetSpec;

@@ -6,10 +6,14 @@
 //! These are the numbers the §Perf iteration log in EXPERIMENTS.md
 //! tracks. Run: `cargo bench --bench microbench`.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 mod common;
 
 use bp_sched::collections::IndexedHeap;
-use bp_sched::coordinator::{run as coordinator_run, ResidualRefresh, RunParams};
+use bp_sched::coordinator::{run as coordinator_run, ResidualRefresh, RunParams, SessionBuilder};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{
     native::NativeEngine, parallel::ParallelEngine, pjrt::PjrtEngine, MessageEngine,
@@ -290,6 +294,74 @@ fn main() -> anyhow::Result<()> {
             rows[0] as f64 / (rows[1].max(1)) as f64,
             rows[0] as f64 / (rows[2].max(1)) as f64,
             rows[1] as f64 / (rows[2].max(1)) as f64,
+        );
+    }
+
+    // --- warm vs cold re-solve (Session serving) ------------------------
+    // The stateful-session acceptance signal: after a 1-vertex evidence
+    // flip on ising20, the warm re-solve (retained messages/residuals,
+    // dirty = the flipped vertex's out-edges) must pay a fraction of the
+    // cold run's iterations and engine update rows, per scheduler. Runs
+    // once per cell — each full run IS the workload (smoke-compatible).
+    println!(
+        "\nwarm vs cold re-solve, ising20 (Session, 1-vertex evidence flip, \
+         update rows = message updates + refresh rows):"
+    );
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "scheduler", "prime iters", "warm iters", "warm rows", "cold iters", "cold rows",
+        "rows ratio", "agree"
+    );
+    let mut rng = Rng::new(13);
+    let gw = DatasetSpec::Ising { n: 20, c: 2.0 }.generate(&mut rng)?;
+    let flip_vertex = gw.live_vertices / 2;
+    let serve_scheds: [(&str, fn() -> Box<dyn Scheduler>); 4] = [
+        ("rs 1/16", || Box::new(ResidualSplash::new(1.0 / 16.0, 2))),
+        ("rbp 1/16", || Box::new(Rbp::new(1.0 / 16.0))),
+        ("lbp", || Box::new(Lbp::new())),
+        ("rnbp 0.7", || Box::new(Rnbp::synthetic(0.7, 5))),
+    ];
+    for (label, mk) in serve_scheds {
+        let params = RunParams {
+            timeout: 10.0,
+            max_iterations: 50_000,
+            want_marginals: true,
+            cost_model: None,
+            ..Default::default()
+        };
+        let mut warm = SessionBuilder::new(
+            gw.clone(),
+            Box::new(ParallelEngine::with_threads(1)),
+            mk(),
+        )
+        .with_params(params.clone())
+        .build()?;
+        let prime_iters = warm.solve()?.iterations;
+        warm.apply_evidence(&[(flip_vertex, &[0.6, -0.6])])?;
+        let (warm_iters, warm_rows) = {
+            let r = warm.solve()?;
+            (r.iterations, r.update_rows())
+        };
+        // cold reference: a fresh run on the mutated graph
+        let mut cold_eng = ParallelEngine::with_threads(1);
+        let mut cold_sched = mk();
+        let cold = coordinator_run(warm.graph(), &mut cold_eng, cold_sched.as_mut(), &params)?;
+        let mw = warm.marginals()?;
+        let max_diff = mw
+            .iter()
+            .zip(cold.marginals.as_ref().unwrap())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "{:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>11.2}x {:>8}",
+            label,
+            prime_iters,
+            warm_iters,
+            warm_rows,
+            cold.iterations,
+            cold.update_rows(),
+            cold.update_rows() as f64 / warm_rows.max(1) as f64,
+            format!("{max_diff:.0e}"),
         );
     }
 

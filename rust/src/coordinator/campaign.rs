@@ -13,10 +13,13 @@
 
 use anyhow::Result;
 
-use super::{RunResult, StopReason, TimeBasis};
+use super::{RunParams, RunResult, SessionBuilder, StopReason, TimeBasis};
+use crate::engine::MessageEngine;
 use crate::graph::Mrf;
+use crate::sched::Scheduler;
 use crate::util::json::Json;
 use crate::util::parallel;
+use crate::util::Rng;
 
 /// Results of one (policy, dataset) pair.
 #[derive(Clone, Debug)]
@@ -225,7 +228,181 @@ impl Speedup {
     }
 }
 
+/// Deterministic randomized evidence stream for the serving scenario:
+/// each batch patches `flips` random live vertices with fresh random
+/// log-unary rows drawn uniformly from `[-amplitude, amplitude]` —
+/// small perturbations of the same model, the regime warm-started
+/// residual scheduling re-converges in O(affected) work.
+pub struct EvidenceStream {
+    rng: Rng,
+    flips: usize,
+    amplitude: f64,
+}
+
+impl EvidenceStream {
+    pub fn new(seed: u64, flips: usize, amplitude: f64) -> EvidenceStream {
+        assert!(flips >= 1, "an evidence batch needs at least one flip");
+        assert!(amplitude > 0.0, "amplitude must be positive");
+        EvidenceStream {
+            rng: Rng::new(seed ^ 0x5e55_1011_c01d),
+            flips,
+            amplitude,
+        }
+    }
+
+    /// The next evidence batch for `mrf` (vertex, full unary row).
+    pub fn next_batch(&mut self, mrf: &Mrf) -> Vec<(usize, Vec<f32>)> {
+        (0..self.flips)
+            .map(|_| {
+                let v = self.rng.below(mrf.live_vertices);
+                let row = (0..mrf.arity_of(v))
+                    .map(|_| self.rng.range(-self.amplitude, self.amplitude) as f32)
+                    .collect();
+                (v, row)
+            })
+            .collect()
+    }
+}
+
+/// Aggregate outcome of one warm-session evidence stream (plus the
+/// optional per-query cold re-solve comparison) over one graph.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub queries: usize,
+    /// The priming solve (first convergence from uniform messages) —
+    /// the one-time cost a cold server pays per query instead.
+    pub prime_iterations: u64,
+    pub prime_rows: u64,
+    /// Warm per-query totals ([`RunResult::update_rows`] as the work
+    /// measure).
+    pub warm_iterations: u64,
+    pub warm_rows: u64,
+    pub warm_wall: f64,
+    pub warm_converged: usize,
+    /// Cold-comparison totals: a fresh session per query on the
+    /// identically mutated graph. All zero when the comparison is off.
+    pub cold_iterations: u64,
+    pub cold_rows: u64,
+    pub cold_wall: f64,
+    pub cold_converged: usize,
+    /// Largest absolute marginal difference between a warm solve and
+    /// its cold counterpart across the stream (fixed-point agreement).
+    pub max_marginal_diff: f32,
+}
+
+impl ServeStats {
+    /// Fold another stream's stats into this one (campaign totals over
+    /// graphs). Lives next to the struct so a new field cannot be
+    /// aggregated in one place and forgotten in another.
+    pub fn absorb(&mut self, other: &ServeStats) {
+        self.queries += other.queries;
+        self.prime_iterations += other.prime_iterations;
+        self.prime_rows += other.prime_rows;
+        self.warm_iterations += other.warm_iterations;
+        self.warm_rows += other.warm_rows;
+        self.warm_wall += other.warm_wall;
+        self.warm_converged += other.warm_converged;
+        self.cold_iterations += other.cold_iterations;
+        self.cold_rows += other.cold_rows;
+        self.cold_wall += other.cold_wall;
+        self.cold_converged += other.cold_converged;
+        self.max_marginal_diff = self.max_marginal_diff.max(other.max_marginal_diff);
+    }
+
+    /// Cold-to-warm update-row ratio (> 1 means warm serving saved
+    /// engine work); `None` without the cold comparison.
+    pub fn row_ratio(&self) -> Option<f64> {
+        if self.cold_rows == 0 {
+            None
+        } else {
+            Some(self.cold_rows as f64 / self.warm_rows.max(1) as f64)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .num("queries", self.queries as f64)
+            .num("prime_iterations", self.prime_iterations as f64)
+            .num("prime_rows", self.prime_rows as f64)
+            .num("warm_iterations", self.warm_iterations as f64)
+            .num("warm_rows", self.warm_rows as f64)
+            .num("warm_wall_s", self.warm_wall)
+            .num("warm_converged", self.warm_converged as f64)
+            .num("cold_iterations", self.cold_iterations as f64)
+            .num("cold_rows", self.cold_rows as f64)
+            .num("cold_wall_s", self.cold_wall)
+            .num("cold_converged", self.cold_converged as f64)
+            .num("max_marginal_diff", self.max_marginal_diff as f64)
+            .build()
+    }
+}
+
+/// Drive one warm [`super::Session`] through `queries` evidence batches
+/// — the serving campaign primitive behind `bp-sched serve`. Per query:
+/// apply the batch, warm-solve, and (with `compare_cold`) run a fresh
+/// cold session on a clone of the mutated graph, recording the work
+/// gap and the fixed-point marginal agreement.
+pub fn serve_stream(
+    graph: &Mrf,
+    mk_engine: &dyn Fn() -> Result<Box<dyn MessageEngine>>,
+    mk_sched: &dyn Fn() -> Box<dyn Scheduler>,
+    params: &RunParams,
+    queries: usize,
+    stream: &mut EvidenceStream,
+    compare_cold: bool,
+) -> Result<ServeStats> {
+    let mut warm = SessionBuilder::new(graph.clone(), mk_engine()?, mk_sched())
+        .with_params(params.clone())
+        .build()?;
+    let mut stats = ServeStats { queries, ..Default::default() };
+    {
+        let prime = warm.solve()?;
+        stats.prime_iterations = prime.iterations as u64;
+        stats.prime_rows = prime.update_rows();
+    }
+    for _ in 0..queries {
+        let batch = stream.next_batch(warm.graph());
+        let updates: Vec<(usize, &[f32])> =
+            batch.iter().map(|(v, row)| (*v, row.as_slice())).collect();
+        warm.apply_evidence(&updates)?;
+        let (wi, wr, ww, wc) = {
+            let r = warm.solve()?;
+            (r.iterations as u64, r.update_rows(), r.wall, r.converged())
+        };
+        stats.warm_iterations += wi;
+        stats.warm_rows += wr;
+        stats.warm_wall += ww;
+        stats.warm_converged += wc as usize;
+        if compare_cold {
+            let mut cold = SessionBuilder::new(warm.graph().clone(), mk_engine()?, mk_sched())
+                .with_params(params.clone())
+                .build()?;
+            let (ci, cr, cw, cc) = {
+                let r = cold.solve()?;
+                (r.iterations as u64, r.update_rows(), r.wall, r.converged())
+            };
+            stats.cold_iterations += ci;
+            stats.cold_rows += cr;
+            stats.cold_wall += cw;
+            stats.cold_converged += cc as usize;
+            if wc && cc {
+                let mw = warm.marginals()?;
+                let mc = cold.marginals()?;
+                for (x, y) in mw.iter().zip(&mc) {
+                    let d = (x - y).abs();
+                    if d > stats.max_marginal_diff {
+                        stats.max_marginal_diff = d;
+                    }
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
 #[cfg(test)]
+// mini_campaign drives the deprecated run() shim on purpose
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::{run, RunParams};
@@ -288,6 +465,61 @@ mod tests {
         assert!(j.contains("\"runs\":4"));
         assert!(j.contains("\"stop\":[\"converged\""));
         assert!(j.contains("\"stalled\":0"));
+    }
+
+    #[test]
+    fn serve_stream_warm_start_saves_rows_and_agrees_with_cold() {
+        let ds = DatasetSpec::Ising { n: 6, c: 1.5 }.generate_many(1, 7).unwrap();
+        let params = RunParams { eps: 1e-5, timeout: 30.0, ..Default::default() };
+        let mut stream = EvidenceStream::new(3, 1, 0.5);
+        let stats = serve_stream(
+            &ds.graphs[0],
+            &|| Ok(Box::new(NativeEngine::new()) as Box<dyn MessageEngine>),
+            &|| Box::new(Lbp::new()) as Box<dyn Scheduler>,
+            &params,
+            3,
+            &mut stream,
+            true,
+        )
+        .unwrap();
+        assert_eq!(stats.queries, 3);
+        assert!(stats.prime_iterations > 0);
+        assert_eq!(stats.warm_converged, 3, "warm solves must converge");
+        assert_eq!(stats.cold_converged, 3, "cold solves must converge");
+        assert!(
+            stats.warm_rows < stats.cold_rows,
+            "warm {} rows vs cold {} — warm serving saved nothing",
+            stats.warm_rows,
+            stats.cold_rows
+        );
+        assert!(stats.row_ratio().unwrap() > 1.0);
+        assert!(
+            stats.max_marginal_diff < 1e-2,
+            "warm and cold fixed points diverged: {}",
+            stats.max_marginal_diff
+        );
+        let j = stats.to_json().render();
+        assert!(j.contains("\"warm_rows\""));
+        assert!(j.contains("\"cold_rows\""));
+    }
+
+    #[test]
+    fn evidence_stream_is_deterministic_and_in_range() {
+        let ds = DatasetSpec::Ising { n: 5, c: 1.0 }.generate_many(1, 9).unwrap();
+        let g = &ds.graphs[0];
+        let mut a = EvidenceStream::new(11, 2, 0.75);
+        let mut b = EvidenceStream::new(11, 2, 0.75);
+        for _ in 0..4 {
+            let (ba, bb) = (a.next_batch(g), b.next_batch(g));
+            assert_eq!(ba, bb, "same seed must replay the same stream");
+            for (v, row) in &ba {
+                assert!(*v < g.live_vertices);
+                assert_eq!(row.len(), g.arity_of(*v));
+                assert!(row.iter().all(|x| x.abs() <= 0.75 && x.is_finite()));
+            }
+        }
+        let mut c = EvidenceStream::new(12, 2, 0.75);
+        assert_ne!(a.next_batch(g), c.next_batch(g), "different seeds must diverge");
     }
 
     #[test]

@@ -160,6 +160,58 @@
 //! K-regime contract `tests/incremental_parity.rs` documents — while
 //! soundness and convergence honesty hold regardless.
 //!
+//! ## Session lifecycle
+//!
+//! The inference surface is the stateful [`Session`], built by
+//! [`SessionBuilder`] from an owned graph + engine + scheduler +
+//! [`RunParams`]. One `Session` serves a *stream* of queries — the
+//! regime residual scheduling was designed for (Elidan et al. 2006):
+//! evidence arrives as small perturbations of the same model, and
+//! re-convergence costs O(affected), not O(model).
+//!
+//! **Retained across [`Session::solve`] calls:** the message vectors,
+//! the candidate cache, per-edge exact residuals + slack + upper
+//! bounds, the bounded-mode ε-stale marks, the lazy deferred heap, and
+//! the scheduler (including its RNG stream and reusable scratch). The
+//! first `solve` *primes* the session — a full all-edges refresh from
+//! uniform messages, exactly the one-shot [`run`] contract — and every
+//! later `solve` warm-starts from the previous fixed point, refreshing
+//! only edges dirtied since.
+//!
+//! **Reset per `solve`:** everything reported in [`RunResult`] — the
+//! iteration count, wallclock/simulated clocks, work counters, the
+//! frontier digest, and the stop reason describe one `solve` only.
+//! Engine belief tracking is also per-solve ([`MessageEngine::begin_tracking`]
+//! at entry, `end_tracking` at exit), so between solves every engine
+//! read — e.g. [`Session::marginals`] — re-derives from the current
+//! messages and graph.
+//!
+//! **Evidence soundness.** [`Session::apply_evidence`] patches
+//! `log_unary` rows through [`crate::graph::Mrf::set_unary`] (which
+//! re-validates the row and re-allocates the instance id, so engines
+//! drop cached device literals). A unary patch with max-norm delta `δ`
+//! enters the belief of its vertex additively in log space, so exactly
+//! the *out-edges* of the vertex have stale candidates — the same
+//! dependency cut [`Mrf::dependents`] encodes for message commits —
+//! and each such candidate (hence residual) moves by at most the
+//! normalization-doubled `2δ` of the Lipschitz argument above. The
+//! session therefore routes evidence through the existing seams:
+//! `mark_dirty` on every out-edge, plus `add_slack(δ)` under
+//! bounded/lazy refresh so the maintained upper bounds keep dominating
+//! the true residuals (under eager `Exact` refresh the bounds may go
+//! stale, which is sound *there* because the entry refresh recomputes
+//! every dirty edge unconditionally before the convergence check
+//! reads them). The next `solve` then re-converges from the previous
+//! fixed point, and its marginals agree with a cold run on the mutated
+//! graph at fixed-point tolerance (`tests/session_warm_start.rs`).
+//! [`Session::clear_evidence`] restores the unary rows captured at
+//! build time through the same path.
+//!
+//! [`run`] / [`run_observed`] are thin shims: they wrap borrowed parts
+//! in a single-use `Session` ([`Session::over`]) and `solve` once — one
+//! construction path, no duplicated loop. They are kept (deprecated in
+//! favor of `Session`) so one-shot callers get a release of warning.
+//!
 //! ## Stop reasons
 //!
 //! A run that ends because a scheduler returned an *empty frontier while
@@ -177,7 +229,7 @@
 
 pub mod campaign;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::collections::IndexedHeap;
 use crate::engine::MessageEngine;
@@ -219,6 +271,15 @@ pub enum ResidualRefresh {
 /// again as headroom for log-domain damping's second renormalization
 /// (≤ `4(1-λ)δ`) so the bound is sound for every damping setting.
 pub const SLACK_PER_DELTA: f32 = 4.0;
+
+/// Look-ahead batch size of the lazy oracle's `resolve_top`: the top
+/// deferred edge plus up to this many total edges (in descending bound
+/// order, never crossing below ε) resolve in **one** engine call
+/// instead of one call per row. Selection-neutral by the certified-
+/// boundary argument (see [`crate::sched::ResidualOracle::resolve_top`]);
+/// billed as one fused resolution stream per selection
+/// ([`crate::perfmodel::CostModel::resolve_cost`]).
+pub const RESOLVE_LOOKAHEAD: usize = 8;
 
 /// Additive cushion on a nonzero slack bound, absorbing the f32
 /// evaluation jitter between the stored residual's computation and a
@@ -424,6 +485,16 @@ impl RunResult {
         self.stop == StopReason::Stalled
     }
 
+    /// Total engine update rows this run paid for: committed message
+    /// updates plus dirty-list refresh rows (eager, bounded, or lazy-
+    /// resolved — `refresh_rows` covers all three). The warm-vs-cold
+    /// serving comparisons use this as the work measure; it deliberately
+    /// *excludes* the all-edges priming refresh, which only a cold run
+    /// pays, so warm-vs-cold comparisons on it are conservative.
+    pub fn update_rows(&self) -> u64 {
+        self.message_updates + self.refresh_rows
+    }
+
     /// Run duration under a time basis; [`TimeBasis::Simulated`] falls
     /// back to wallclock when no simulated clock exists (serial runs).
     pub fn time(&self, basis: TimeBasis) -> f64 {
@@ -464,6 +535,11 @@ struct State {
     /// is the "still unresolved" predicate the oracle exposes. Empty
     /// (zero-capacity) outside `Lazy` mode.
     heap: IndexedHeap,
+    /// Lazy refresh: reusable frontier buffer for the oracle's
+    /// `resolve_top` look-ahead batches (capacity
+    /// [`RESOLVE_LOOKAHEAD`], allocated once per run/session, not per
+    /// selection).
+    lookahead: Vec<i32>,
     arity: usize,
     /// Bounded or lazy: accumulate commit-delta slack into dependents'
     /// residual upper bounds.
@@ -488,6 +564,7 @@ impl State {
             dirty_list: Vec::with_capacity(m),
             stale_ok: vec![false; m],
             heap: IndexedHeap::with_capacity(if lazy { m } else { 0 }),
+            lookahead: Vec::with_capacity(if lazy { RESOLVE_LOOKAHEAD } else { 0 }),
             arity: a,
             track_slack: mode != ResidualRefresh::Exact,
             lazy,
@@ -691,15 +768,20 @@ struct LazyOracle<'a> {
     engine: &'a mut dyn MessageEngine,
     st: &'a mut State,
     batch: &'a mut crate::engine::CandidateBatch,
-    model: Option<CostModel>,
-    /// Rows exactly recomputed (row-granular + bulk resolve_all).
+    /// Convergence threshold — the floor of the `resolve_top` look-ahead
+    /// batch (a finite bound below ε is certified out of every selection
+    /// boundary, so the batch never pulls one in).
+    eps: f32,
+    /// Rows exactly recomputed (row-granular + look-ahead batches +
+    /// bulk resolve_all). Modeled device time is billed once per
+    /// selection from this total, as one fused resolution stream
+    /// ([`CostModel::resolve_cost`]) — not per call, and (since PR 5)
+    /// not one launch per row.
     rows: u64,
     /// Engine invocations issued.
     calls: u64,
     /// Wallclock spent inside engine calls (refresh-phase attribution).
     engine_secs: f64,
-    /// Modeled device time billed for resolutions.
-    sim_secs: f64,
     /// First engine error, re-raised after selection returns.
     error: Option<anyhow::Error>,
 }
@@ -708,8 +790,63 @@ impl LazyOracle<'_> {
     fn bill(&mut self, rows: usize) {
         self.rows += rows as u64;
         self.calls += 1;
-        if let Some(m) = &self.model {
-            self.sim_secs += m.update_cost(rows, self.mrf.max_arity, self.mrf.max_in_degree);
+    }
+
+    /// Row-granular resolution of one already-dequeued edge (shared by
+    /// `resolve` and single-entry `resolve_top` batches).
+    fn resolve_now(&mut self, e: usize) -> f32 {
+        let t = Stopwatch::start();
+        let r = self.st.resolve_row(self.mrf, self.engine, e);
+        self.engine_secs += t.seconds();
+        self.bill(1);
+        match r {
+            Ok(r) => r,
+            Err(err) => {
+                // poison the bound: NaN never converges and never
+                // passes a selection filter, even if a scheduler
+                // ignores the error we re-raise after select
+                self.st.set_exact(e, f32::NAN);
+                if self.error.is_none() {
+                    self.error = Some(err);
+                }
+                f32::NAN
+            }
+        }
+    }
+
+    /// Bulk resolution of a batch of already-dequeued edges in one
+    /// engine call (bit-identical per row to the row-granular path —
+    /// every row reads the same message snapshot). Returns the first
+    /// edge's now-exact residual.
+    fn resolve_batch(&mut self, frontier: &[i32]) -> f32 {
+        debug_assert!(!frontier.is_empty());
+        let t = Stopwatch::start();
+        let res = self
+            .engine
+            .candidates_into(self.mrf, &self.st.logm, frontier, self.batch);
+        self.engine_secs += t.seconds();
+        self.bill(frontier.len());
+        match res {
+            Ok(()) => {
+                let a = self.st.arity;
+                for (i, &ei) in frontier.iter().enumerate() {
+                    let e = ei as usize;
+                    self.st.cand[e * a..(e + 1) * a].copy_from_slice(self.batch.row(i, a));
+                    self.st.set_exact(e, self.batch.residuals[i]);
+                    self.st.stale_ok[e] = false;
+                    self.st.dirty[e] = false;
+                }
+                self.batch.residuals[0]
+            }
+            Err(err) => {
+                for &ei in frontier {
+                    self.st.set_exact(ei as usize, f32::NAN);
+                }
+                if self.error.is_none() {
+                    self.error = Some(err);
+                }
+                f32::NAN
+            }
         }
     }
 }
@@ -732,8 +869,33 @@ impl ResidualOracle for LazyOracle<'_> {
     }
 
     fn resolve_top(&mut self) -> Option<(usize, f32)> {
-        let (_, e) = self.st.heap.peek()?;
-        Some((e, self.resolve(e)))
+        let (_, top) = self.st.heap.peek()?;
+        // Look-ahead batch: the top plus up to RESOLVE_LOOKAHEAD - 1
+        // further deferred edges in descending bound order, stopping at
+        // the ε floor (a finite sub-ε bound is certified outside every
+        // caller's boundary; NaN bounds ride along — every caller
+        // resolves them anyway). Extra resolutions are selection-
+        // neutral (trait docs), and the batch is one engine call where
+        // the one-row contract paid one per row.
+        let mut edges = std::mem::take(&mut self.st.lookahead);
+        edges.clear();
+        self.st.heap.remove(top);
+        edges.push(top as i32);
+        while edges.len() < RESOLVE_LOOKAHEAD {
+            let Some((b, e)) = self.st.heap.peek() else { break };
+            if !b.is_nan() && b < self.eps {
+                break;
+            }
+            self.st.heap.remove(e);
+            edges.push(e as i32);
+        }
+        let r = if edges.len() == 1 {
+            self.resolve_now(top)
+        } else {
+            self.resolve_batch(&edges)
+        };
+        self.st.lookahead = edges;
+        Some((top, r))
     }
 
     fn resolve(&mut self, e: usize) -> f32 {
@@ -741,23 +903,7 @@ impl ResidualOracle for LazyOracle<'_> {
             return self.st.ub[e];
         }
         self.st.heap.remove(e);
-        let t = Stopwatch::start();
-        let r = self.st.resolve_row(self.mrf, self.engine, e);
-        self.engine_secs += t.seconds();
-        self.bill(1);
-        match r {
-            Ok(r) => r,
-            Err(err) => {
-                // poison the bound: NaN never converges and never
-                // passes a selection filter, even if a scheduler
-                // ignores the error we re-raise after select
-                self.st.set_exact(e, f32::NAN);
-                if self.error.is_none() {
-                    self.error = Some(err);
-                }
-                f32::NAN
-            }
-        }
+        self.resolve_now(e)
     }
 
     fn resolve_all(&mut self) {
@@ -799,7 +945,782 @@ impl ResidualOracle for LazyOracle<'_> {
     }
 }
 
+/// Per-solve work counters ([`RunResult`]'s tally fields), threaded
+/// through the loop and [`refresh_dirty_step`] as one unit.
+#[derive(Default)]
+struct Counters {
+    message_updates: u64,
+    engine_calls: u64,
+    refresh_rows: u64,
+    refresh_skipped: u64,
+    refresh_deferred: u64,
+    refresh_resolved: u64,
+}
+
+/// The step-3 dirty-list refresh, shared by the per-iteration refresh
+/// and a warm solve's evidence entry refresh (one code path — the
+/// session lifecycle's "re-dirty through the existing seams" claim
+/// rests on this being literally the same function).
+///
+/// Bounded mode first drops every dirty edge whose residual upper
+/// bound keeps it certainly below eps: no engine row, no modeled
+/// device time (the bound filter itself is a host-side scan; on a
+/// device it fuses into the predicate of the update kernel, and the
+/// per-iteration convergence reduction billed by the caller already
+/// covers a full residual scan). A skipped edge becomes ε-stale
+/// (`stale_ok`) and leaves the queue — its bound cannot change until a
+/// new commit (or evidence patch) dirties it again, which re-queues it
+/// through `mark_dirty` — so each skip is decided (and counted)
+/// exactly once per dirtying. Lazy mode defers instead of recomputing:
+/// every still-dirty edge enters the bound-keyed queue for on-demand
+/// resolution at the next select; `dirty` stays set (the candidate
+/// really is input-stale until resolution), so a re-dirtying commit
+/// only grows its slack without re-queuing it here, and deferral is
+/// counted once per heap entry, mirroring `refresh_skipped`'s
+/// once-per-dirtying accounting.
+#[allow(clippy::too_many_arguments)]
+fn refresh_dirty_step(
+    mrf: &Mrf,
+    engine: &mut dyn MessageEngine,
+    st: &mut State,
+    batch: &mut crate::engine::CandidateBatch,
+    params: &RunParams,
+    model: &Option<CostModel>,
+    phases: &mut PhaseTimer,
+    sim_phases: &mut PhaseTimer,
+    sim_wall: &mut f64,
+    c: &mut Counters,
+) -> Result<()> {
+    if st.dirty_list.is_empty() {
+        return Ok(());
+    }
+    let a = st.arity;
+    let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
+    let mut dirty_list = std::mem::take(&mut st.dirty_list);
+    if st.lazy {
+        for &ei in dirty_list.iter() {
+            let e = ei as usize;
+            if !st.dirty[e] {
+                // committed (and exactly recomputed) mid-wave after
+                // being queued
+                continue;
+            }
+            if !st.heap.contains(e) {
+                c.refresh_deferred += 1;
+            }
+            st.heap.set(e, st.ub[e]);
+        }
+        dirty_list.clear();
+    } else if st.track_slack {
+        let eps = params.eps;
+        let (dirty, ub, stale_ok) = (&mut st.dirty, &st.ub, &mut st.stale_ok);
+        dirty_list.retain(|&ei| {
+            let e = ei as usize;
+            if !dirty[e] {
+                // committed (and exactly recomputed) mid-wave after
+                // being queued, or a duplicate entry
+                return false;
+            }
+            dirty[e] = false;
+            if ub[e] < eps {
+                c.refresh_skipped += 1;
+                stale_ok[e] = true;
+                false
+            } else {
+                true
+            }
+        });
+    }
+    if !dirty_list.is_empty() {
+        phases.time("refresh", || {
+            engine.candidates_into(mrf, &st.logm, &dirty_list, batch)
+        })?;
+        c.engine_calls += 1;
+        c.refresh_rows += dirty_list.len() as u64;
+        for (i, &ei) in dirty_list.iter().enumerate() {
+            let e = ei as usize;
+            st.cand[e * a..(e + 1) * a].copy_from_slice(batch.row(i, a));
+            st.set_exact(e, batch.residuals[i]);
+            st.stale_ok[e] = false;
+            st.dirty[e] = false;
+        }
+        if let Some(m) = model {
+            // residual kernel over the recomputed edges only
+            let cost = m.update_cost(dirty_list.len(), arity, degree);
+            sim_phases.add("update", cost);
+            *sim_wall += cost;
+        }
+    }
+    st.dirty_list = dirty_list;
+    st.dirty_list.clear();
+    Ok(())
+}
+
+/// Mark the out-edges of `v` stale after a unary patch of max-norm
+/// `delta` — the evidence analogue of a commit's dependent dirtying.
+/// The patch enters `belief_v` additively in log space, so exactly the
+/// out-edges of `v` read stale inputs, and each of their candidates
+/// moves by at most the normalization-doubled `2δ` (module docs), well
+/// inside the [`SLACK_PER_DELTA`] envelope the bounded/lazy upper
+/// bounds accumulate.
+fn dirty_unary_dependents(mrf: &Mrf, st: &mut State, v: usize, delta: f32) {
+    for e in mrf.outgoing(v) {
+        st.mark_dirty(e);
+        if st.track_slack {
+            st.add_slack(e, delta);
+        }
+    }
+}
+
+/// Graph slot of a [`Session`]: owned (the [`SessionBuilder`] path —
+/// required for evidence mutation) or borrowed for a one-shot solve
+/// (the [`run`]/[`run_observed`] shims).
+enum GraphSlot<'a> {
+    /// Boxed so the variant stays pointer-sized next to `Borrowed`.
+    Owned(Box<Mrf>),
+    Borrowed(&'a Mrf),
+}
+
+impl GraphSlot<'_> {
+    fn get(&self) -> &Mrf {
+        match self {
+            GraphSlot::Owned(g) => g,
+            GraphSlot::Borrowed(g) => g,
+        }
+    }
+
+    fn get_mut(&mut self) -> Option<&mut Mrf> {
+        match self {
+            GraphSlot::Owned(g) => Some(g.as_mut()),
+            GraphSlot::Borrowed(_) => None,
+        }
+    }
+}
+
+/// Engine slot of a [`Session`] (owned vs borrowed, as [`GraphSlot`]).
+enum EngineSlot<'a> {
+    Owned(Box<dyn MessageEngine>),
+    Borrowed(&'a mut dyn MessageEngine),
+}
+
+impl EngineSlot<'_> {
+    fn get_mut(&mut self) -> &mut dyn MessageEngine {
+        match self {
+            EngineSlot::Owned(e) => e.as_mut(),
+            EngineSlot::Borrowed(e) => &mut **e,
+        }
+    }
+}
+
+/// Scheduler slot of a [`Session`] (owned vs borrowed, as [`GraphSlot`]).
+enum SchedSlot<'a> {
+    Owned(Box<dyn Scheduler>),
+    Borrowed(&'a mut dyn Scheduler),
+}
+
+impl SchedSlot<'_> {
+    fn get_mut(&mut self) -> &mut dyn Scheduler {
+        match self {
+            SchedSlot::Owned(s) => s.as_mut(),
+            SchedSlot::Borrowed(s) => &mut **s,
+        }
+    }
+}
+
+/// Builder for an owning [`Session`]: graph + engine + scheduler, plus
+/// `with_*` setters over [`RunParams`] (replacing ad-hoc struct poking
+/// at call sites).
+///
+/// ```ignore
+/// let mut session = SessionBuilder::new(graph, engine, scheduler)
+///     .with_eps(1e-5)
+///     .with_want_marginals(true)
+///     .build()?;
+/// session.solve()?;                       // cold prime
+/// session.apply_evidence(&[(v, &row)])?;  // patch unaries
+/// session.solve()?;                       // warm re-converge
+/// let marginals = session.marginals()?;   // read without re-running
+/// ```
+pub struct SessionBuilder {
+    graph: Mrf,
+    engine: Box<dyn MessageEngine>,
+    scheduler: Box<dyn Scheduler>,
+    params: RunParams,
+}
+
+impl SessionBuilder {
+    pub fn new(
+        graph: Mrf,
+        engine: Box<dyn MessageEngine>,
+        scheduler: Box<dyn Scheduler>,
+    ) -> SessionBuilder {
+        SessionBuilder {
+            graph,
+            engine,
+            scheduler,
+            params: RunParams::default(),
+        }
+    }
+
+    /// Replace the whole parameter block (the `with_*` setters below
+    /// tweak individual fields on top of whatever is current).
+    pub fn with_params(mut self, params: RunParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_eps(mut self, eps: f32) -> Self {
+        self.params.eps = eps;
+        self
+    }
+
+    pub fn with_max_iterations(mut self, cap: usize) -> Self {
+        self.params.max_iterations = cap;
+        self
+    }
+
+    pub fn with_timeout(mut self, seconds: f64) -> Self {
+        self.params.timeout = seconds;
+        self
+    }
+
+    pub fn with_sim_timeout(mut self, seconds: f64) -> Self {
+        self.params.sim_timeout = seconds;
+        self
+    }
+
+    pub fn with_want_marginals(mut self, want: bool) -> Self {
+        self.params.want_marginals = want;
+        self
+    }
+
+    pub fn with_cost_model(mut self, model: Option<CostModel>) -> Self {
+        self.params.cost_model = model;
+        self
+    }
+
+    pub fn with_belief_refresh_every(mut self, every: usize) -> Self {
+        self.params.belief_refresh_every = every;
+        self
+    }
+
+    pub fn with_residual_refresh(mut self, mode: ResidualRefresh) -> Self {
+        self.params.residual_refresh = mode;
+        self
+    }
+
+    /// Validate the graph and freeze the session. The first
+    /// [`Session::solve`] primes it (full refresh from uniform
+    /// messages); later solves warm-start.
+    pub fn build(self) -> Result<Session<'static>> {
+        crate::graph::validate::validate(&self.graph)?;
+        let base_unary = self.graph.log_unary.clone();
+        Ok(Session::from_parts(
+            GraphSlot::Owned(Box::new(self.graph)),
+            EngineSlot::Owned(self.engine),
+            SchedSlot::Owned(self.scheduler),
+            self.params,
+            base_unary,
+        ))
+    }
+}
+
+/// A stateful inference session — the primary API (see the module-level
+/// "Session lifecycle" section). Owns (or, for the one-shot shims,
+/// borrows) the graph, engine, and scheduler, and retains the full
+/// residual/candidate/message state across [`solve`](Self::solve)
+/// calls, so a stream of [`apply_evidence`](Self::apply_evidence) →
+/// `solve` → [`marginals`](Self::marginals) queries warm-starts each
+/// re-convergence from the previous fixed point.
+pub struct Session<'a> {
+    graph: GraphSlot<'a>,
+    engine: EngineSlot<'a>,
+    scheduler: SchedSlot<'a>,
+    params: RunParams,
+    st: State,
+    /// One candidate batch reused for every engine call of the session:
+    /// the engines resize it in place, so the hot loop does not
+    /// allocate.
+    batch: crate::engine::CandidateBatch,
+    /// First solve done: the all-edges priming refresh has run and the
+    /// maintained state describes the current messages.
+    primed: bool,
+    last: Option<RunResult>,
+    /// `log_unary` snapshot at build time, for
+    /// [`clear_evidence`](Self::clear_evidence). Empty for borrowed
+    /// (shim) sessions, which cannot take evidence.
+    base_unary: Vec<f32>,
+    /// Vertices whose unary rows have been patched since build.
+    evidence: Vec<usize>,
+}
+
+impl<'a> Session<'a> {
+    fn from_parts(
+        graph: GraphSlot<'a>,
+        engine: EngineSlot<'a>,
+        scheduler: SchedSlot<'a>,
+        params: RunParams,
+        base_unary: Vec<f32>,
+    ) -> Session<'a> {
+        let st = State::new(graph.get(), params.residual_refresh);
+        Session {
+            graph,
+            engine,
+            scheduler,
+            params,
+            st,
+            batch: crate::engine::CandidateBatch::default(),
+            primed: false,
+            last: None,
+            base_unary,
+            evidence: Vec::new(),
+        }
+    }
+
+    /// A session over *borrowed* parts — the substrate of the one-shot
+    /// [`run`]/[`run_observed`] shims, and useful wherever the caller
+    /// keeps ownership (campaign drivers reusing one engine across
+    /// graphs). Borrowed sessions cannot take evidence (the graph is
+    /// shared); use [`SessionBuilder`] for the serving lifecycle.
+    pub fn over(
+        mrf: &'a Mrf,
+        engine: &'a mut dyn MessageEngine,
+        scheduler: &'a mut dyn Scheduler,
+        params: RunParams,
+    ) -> Session<'a> {
+        Session::from_parts(
+            GraphSlot::Borrowed(mrf),
+            EngineSlot::Borrowed(engine),
+            SchedSlot::Borrowed(scheduler),
+            params,
+            Vec::new(),
+        )
+    }
+
+    /// The session's graph (with any applied evidence).
+    pub fn graph(&self) -> &Mrf {
+        self.graph.get()
+    }
+
+    /// The parameter block every solve runs under.
+    pub fn params(&self) -> &RunParams {
+        &self.params
+    }
+
+    /// Result of the most recent [`solve`](Self::solve), if any.
+    pub fn last_result(&self) -> Option<&RunResult> {
+        self.last.as_ref()
+    }
+
+    /// Consume the session, yielding the last solve's result.
+    pub fn into_result(self) -> Option<RunResult> {
+        self.last
+    }
+
+    /// True once the priming solve has run (later solves warm-start).
+    pub fn is_warm(&self) -> bool {
+        self.primed
+    }
+
+    /// Vertices currently carrying evidence (patched unary rows).
+    pub fn evidence_vertices(&self) -> &[usize] {
+        &self.evidence
+    }
+
+    /// Patch log-unary rows (soft evidence; use [`crate::NEG`] lanes for
+    /// hard evidence) and re-dirty exactly the affected out-edges, so
+    /// the next [`solve`](Self::solve) re-converges warm from the
+    /// current fixed point. Validates every update before applying any
+    /// (a bad entry leaves the session untouched). Owning sessions
+    /// only — a borrowed (shim) session shares its graph and must not
+    /// mutate it.
+    pub fn apply_evidence(&mut self, updates: &[(usize, &[f32])]) -> Result<()> {
+        let Session { graph, st, evidence, .. } = self;
+        let Some(g) = graph.get_mut() else {
+            bail!("evidence requires an owning session (SessionBuilder); \
+                   this session borrows its graph");
+        };
+        for &(v, row) in updates {
+            g.check_unary_row(v, row)?;
+        }
+        for &(v, row) in updates {
+            let delta = g.set_unary(v, row)?;
+            if delta == 0.0 {
+                continue; // bit-identical row: nothing moved
+            }
+            if !evidence.contains(&v) {
+                evidence.push(v);
+            }
+            dirty_unary_dependents(g, st, v, delta);
+        }
+        Ok(())
+    }
+
+    /// Restore every evidenced vertex to its build-time unary row,
+    /// through the same dirtying seam as [`apply_evidence`].
+    pub fn clear_evidence(&mut self) -> Result<()> {
+        let Session { graph, st, evidence, base_unary, .. } = self;
+        let Some(g) = graph.get_mut() else {
+            bail!("evidence requires an owning session (SessionBuilder); \
+                   this session borrows its graph");
+        };
+        let a = g.max_arity;
+        for &v in evidence.iter() {
+            let row = &base_unary[v * a..v * a + g.arity_of(v)];
+            let delta = g.set_unary(v, row)?;
+            if delta != 0.0 {
+                dirty_unary_dependents(g, st, v, delta);
+            }
+        }
+        evidence.clear();
+        Ok(())
+    }
+
+    /// Current-state marginals `[V * A]`, read without re-running: a
+    /// from-scratch engine gather over the retained messages (no
+    /// incremental drift, evidence included).
+    pub fn marginals(&mut self) -> Result<Vec<f32>> {
+        let Session { graph, engine, st, .. } = self;
+        engine.get_mut().marginals(graph.get(), &st.logm)
+    }
+
+    /// MAP decode of the current state (per-vertex argmax of
+    /// [`marginals`](Self::marginals); run the engine in max-product
+    /// mode for true MAP semantics).
+    pub fn map_decode(&mut self) -> Result<Vec<usize>> {
+        let m = self.marginals()?;
+        Ok(crate::engine::map_decode(self.graph.get(), &m))
+    }
+
+    /// Run Algorithm 1 to convergence (or cap/timeout) from the current
+    /// state: the priming full refresh on the first call, a warm start
+    /// from the previous fixed point afterwards. Returns the stored
+    /// per-solve [`RunResult`] (also at [`last_result`](Self::last_result)).
+    pub fn solve(&mut self) -> Result<&RunResult> {
+        self.solve_observed(&mut NoopObserver)
+    }
+
+    /// [`solve`](Self::solve) with an observation hook (see
+    /// [`RunObserver`]).
+    pub fn solve_observed(&mut self, observer: &mut dyn RunObserver) -> Result<&RunResult> {
+        let Session {
+            graph,
+            engine,
+            scheduler,
+            params,
+            st,
+            batch,
+            primed,
+            last,
+            ..
+        } = self;
+        let mrf: &Mrf = graph.get();
+        let engine: &mut dyn MessageEngine = engine.get_mut();
+        let scheduler: &mut dyn Scheduler = scheduler.get_mut();
+        let params: &RunParams = params;
+
+        let live = mrf.live_edges;
+        let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
+        let lazy = params.residual_refresh == ResidualRefresh::Lazy;
+        let mut phases = PhaseTimer::new();
+        let mut sim_phases = PhaseTimer::new();
+        let mut sim_wall = 0.0f64;
+        let model = params.cost_model;
+        let kind = scheduler.kind();
+        let clock = Stopwatch::start();
+        let mut c = Counters::default();
+        let mut digest = FrontierDigest::new();
+
+        // Incremental belief maintenance is scoped to this solve: the
+        // engine snapshots per-vertex beliefs now and keeps them
+        // coherent from the commit notifications below (see module
+        // docs; no-op for engines without belief state).
+        engine.begin_tracking(mrf, &st.logm, params.belief_refresh_every);
+
+        let a = st.arity;
+        if !*primed {
+            // Priming refresh: all live edges, from uniform messages —
+            // the cold-start contract `run` has always had. Not counted
+            // into refresh_rows (those tally dirty-list work only).
+            let init_frontier: Vec<i32> = (0..live as i32).collect();
+            phases.time("refresh", || {
+                engine.candidates_into(mrf, &st.logm, &init_frontier, batch)
+            })?;
+            c.engine_calls += 1;
+            if let Some(m) = &model {
+                let cost = m.update_cost(live, arity, degree);
+                sim_phases.add("update", cost);
+                sim_wall += cost;
+            }
+            st.cand[..live * a].copy_from_slice(&batch.new_m);
+            st.res[..live].copy_from_slice(&batch.residuals);
+            // all residuals are freshly exact: bounds coincide, slack 0
+            st.ub[..live].copy_from_slice(&batch.residuals);
+            // evidence applied before the first solve is subsumed by
+            // the all-edges refresh: drop its dirty marks and slack
+            let (dirty, slack) = (&mut st.dirty, &mut st.slack);
+            for &ei in &st.dirty_list {
+                dirty[ei as usize] = false;
+                slack[ei as usize] = 0.0;
+            }
+            st.dirty_list.clear();
+            *primed = true;
+        } else if !st.dirty_list.is_empty() {
+            // Warm entry: refresh whatever evidence dirtied since the
+            // last solve — literally the step-3 refresh (mode-aware:
+            // exact recompute / bounded ε-skip / lazy deferral), run
+            // before the convergence check below so a genuinely moved
+            // edge's stale sub-ε residual can never fake convergence.
+            // (A warm solve with nothing dirty skips straight to the
+            // convergence check: no refresh, no observer call.)
+            refresh_dirty_step(
+                mrf,
+                engine,
+                st,
+                batch,
+                params,
+                &model,
+                &mut phases,
+                &mut sim_phases,
+                &mut sim_wall,
+                &mut c,
+            )?;
+            observer.on_state(&ResidualAudit {
+                mrf,
+                logm: &st.logm,
+                res: &st.res,
+                slack: &st.slack,
+                live,
+                eps: params.eps,
+                stopped: false,
+            });
+        }
+
+        let mut unconverged = st.unconverged(live, params.eps);
+        let mut prev_unconverged = unconverged;
+        let mut iterations = 0usize;
+        let stop;
+
+        loop {
+            if unconverged == 0 {
+                stop = StopReason::Converged;
+                break;
+            }
+            if iterations >= params.max_iterations {
+                stop = StopReason::IterationCap;
+                break;
+            }
+            if clock.seconds() > params.timeout || sim_wall > params.sim_timeout {
+                stop = StopReason::Timeout;
+                break;
+            }
+
+            // 1. GenerateFrontier (schedulers see residual upper bounds —
+            //    identical to exact residuals under `Exact` refresh). Lazy
+            //    refresh routes through the oracle seam instead: residuals
+            //    resolve from bounds to exact values on scheduler demand,
+            //    with the engine time attributed to the refresh phase (it
+            //    is step-3 work moved to selection time) and the remainder
+            //    to selection.
+            let waves = if lazy {
+                let lctx = LazySchedContext {
+                    mrf,
+                    eps: params.eps,
+                    iteration: iterations,
+                    unconverged,
+                    prev_unconverged,
+                };
+                let mut oracle = LazyOracle {
+                    mrf,
+                    engine: &mut *engine,
+                    st: &mut *st,
+                    batch: &mut *batch,
+                    eps: params.eps,
+                    rows: 0,
+                    calls: 0,
+                    engine_secs: 0.0,
+                    error: None,
+                };
+                let t = Stopwatch::start();
+                let waves = scheduler.select_lazy(&lctx, &mut oracle);
+                let total = t.seconds();
+                let LazyOracle { rows, calls, engine_secs, error, .. } = oracle;
+                phases.add("refresh", engine_secs);
+                phases.add("select", (total - engine_secs).max(0.0));
+                c.engine_calls += calls;
+                c.refresh_rows += rows;
+                c.refresh_resolved += rows;
+                if let Some(m) = &model {
+                    // one fused resolution stream per selection (see
+                    // CostModel::resolve_cost): the launch amortizes over
+                    // every row the oracle resolved while selecting,
+                    // instead of billing one kernel per row
+                    let cost = m.resolve_cost(rows as usize, arity, degree);
+                    sim_phases.add("update", cost);
+                    sim_wall += cost;
+                }
+                if let Some(err) = error {
+                    return Err(err);
+                }
+                waves
+            } else {
+                let ctx = SchedContext {
+                    mrf,
+                    residuals: &st.ub,
+                    eps: params.eps,
+                    iteration: iterations,
+                    unconverged,
+                    prev_unconverged,
+                };
+                phases.time("select", || scheduler.select(&ctx))
+            };
+            if let Some(m) = &model {
+                let total: usize = waves.iter().map(|w| w.len()).sum();
+                let cost = m.select_cost(kind, live, mrf.live_vertices, total);
+                sim_phases.add("select", cost);
+                sim_wall += cost;
+            }
+            if waves.is_empty() {
+                if lazy {
+                    // Select-time resolution may have tightened the bounds
+                    // this iteration entered with: re-check before calling
+                    // the run wedged. A scheduler that resolved everything
+                    // and certified convergence stops Converged here — at
+                    // the same iteration count eager exact refresh would
+                    // have stopped at the loop head.
+                    unconverged = st.unconverged(live, params.eps);
+                    if unconverged == 0 {
+                        stop = StopReason::Converged;
+                        break;
+                    }
+                }
+                // The scheduler sees nothing actionable while residual upper
+                // bounds are still hot (unconverged > 0 was checked above):
+                // the run is wedged. Reporting this as Converged would let
+                // campaign convergence tables count stalls as successes.
+                stop = StopReason::Stalled;
+                break;
+            }
+
+            // 2. Update(frontier): commit wave-by-wave
+            for wave in &waves {
+                debug_assert!(wave.iter().all(|&e| (e as usize) < live));
+                for &e in wave.iter() {
+                    digest.push_edge(e);
+                }
+                digest.push_wave_end();
+                // ε-stale edges (bounded skips) commit their cached rows —
+                // sound within their slack — so they never force a mid-wave
+                // recompute; only genuinely input-stale edges do.
+                let needs_compute = wave
+                    .iter()
+                    .any(|&e| st.dirty[e as usize] && !st.stale_ok[e as usize]);
+                if needs_compute {
+                    phases.time("update", || {
+                        engine.candidates_into(mrf, &st.logm, wave, batch)
+                    })?;
+                    c.engine_calls += 1;
+                    phases.time("commit", || st.commit(mrf, wave, Some(&*batch), engine));
+                } else {
+                    phases.time("commit", || st.commit(mrf, wave, None, engine));
+                }
+                c.message_updates += wave.len() as u64;
+                if let Some(m) = &model {
+                    // one bulk update kernel per wave on the device
+                    let cost = m.update_cost(wave.len(), arity, degree);
+                    sim_phases.add("update", cost);
+                    sim_wall += cost;
+                }
+            }
+
+            // 3. refresh dirtied candidates/residuals — the shared
+            //    step-3 path (eager recompute / bounded ε-skip / lazy
+            //    deferral; see refresh_dirty_step).
+            refresh_dirty_step(
+                mrf,
+                engine,
+                st,
+                batch,
+                params,
+                &model,
+                &mut phases,
+                &mut sim_phases,
+                &mut sim_wall,
+                &mut c,
+            )?;
+            observer.on_state(&ResidualAudit {
+                mrf,
+                logm: &st.logm,
+                res: &st.res,
+                slack: &st.slack,
+                live,
+                eps: params.eps,
+                stopped: false,
+            });
+
+            // 4. IsConverged
+            prev_unconverged = unconverged;
+            unconverged = phases.time("converge", || st.unconverged(live, params.eps));
+            if let Some(m) = &model {
+                let cost = m.reduce_cost(live);
+                sim_phases.add("converge", cost);
+                sim_wall += cost;
+            }
+            iterations += 1;
+        }
+
+        observer.on_state(&ResidualAudit {
+            mrf,
+            logm: &st.logm,
+            res: &st.res,
+            slack: &st.slack,
+            live,
+            eps: params.eps,
+            stopped: true,
+        });
+
+        let marginals = if params.want_marginals {
+            // engines compute marginals from a from-scratch gather, so the
+            // report carries no incremental drift
+            Some(engine.marginals(mrf, &st.logm)?)
+        } else {
+            None
+        };
+        engine.end_tracking();
+
+        *last = Some(RunResult {
+            scheduler: scheduler.name(),
+            engine: engine.name().to_string(),
+            stop,
+            iterations,
+            wall: clock.seconds(),
+            message_updates: c.message_updates,
+            engine_calls: c.engine_calls,
+            refresh_rows: c.refresh_rows,
+            refresh_skipped: c.refresh_skipped,
+            refresh_deferred: c.refresh_deferred,
+            refresh_resolved: c.refresh_resolved,
+            final_residual: st.max_residual(live),
+            frontier_digest: digest.value(),
+            phases,
+            sim_wall: model.map(|_| sim_wall),
+            sim_phases,
+            marginals,
+        });
+        Ok(last.as_ref().expect("solve_observed just stored a result"))
+    }
+}
+
 /// Run Algorithm 1 to convergence (or cap/timeout).
+///
+/// **Deprecated shim** over the stateful [`Session`] API: wraps the
+/// borrowed parts in a single-use session ([`Session::over`]) and
+/// solves once — one construction path, no duplicated loop. One-shot
+/// callers keep working for a release of warning; new code (and any
+/// caller serving more than one query per model) should use
+/// [`SessionBuilder`] and keep the session alive across queries.
+#[deprecated(note = "use coordinator::SessionBuilder / Session::over; \
+                     run() is a one-shot shim kept for one release")]
 pub fn run(
     mrf: &Mrf,
     engine: &mut dyn MessageEngine,
@@ -809,7 +1730,10 @@ pub fn run(
     run_observed(mrf, engine, scheduler, params, &mut NoopObserver)
 }
 
-/// [`run`] with an observation hook (see [`RunObserver`]).
+/// [`run`] with an observation hook (see [`RunObserver`]) — the same
+/// deprecated shim, over [`Session::solve_observed`].
+#[deprecated(note = "use coordinator::Session::solve_observed; \
+                     run_observed() is a one-shot shim kept for one release")]
 pub fn run_observed(
     mrf: &Mrf,
     engine: &mut dyn MessageEngine,
@@ -817,324 +1741,16 @@ pub fn run_observed(
     params: &RunParams,
     observer: &mut dyn RunObserver,
 ) -> Result<RunResult> {
-    let live = mrf.live_edges;
-    let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
-    let bounded = params.residual_refresh == ResidualRefresh::Bounded;
-    let lazy = params.residual_refresh == ResidualRefresh::Lazy;
-    let mut st = State::new(mrf, params.residual_refresh);
-    let mut phases = PhaseTimer::new();
-    let mut sim_phases = PhaseTimer::new();
-    let mut sim_wall = 0.0f64;
-    let model = params.cost_model;
-    let kind = scheduler.kind();
-    let clock = Stopwatch::start();
-    let mut message_updates = 0u64;
-    let mut engine_calls = 0u64;
-    let mut refresh_rows = 0u64;
-    let mut refresh_skipped = 0u64;
-    let mut refresh_deferred = 0u64;
-    let mut refresh_resolved = 0u64;
-
-    // One candidate batch reused for every engine call of the run: the
-    // engines resize it in place, so the hot loop does not allocate.
-    let mut batch = crate::engine::CandidateBatch::default();
-    let mut digest = FrontierDigest::new();
-
-    // Incremental belief maintenance: the engine snapshots per-vertex
-    // beliefs now and keeps them coherent from the commit notifications
-    // below (see module docs; no-op for engines without belief state).
-    engine.begin_tracking(mrf, &st.logm, params.belief_refresh_every);
-
-    // Initial residual computation: all live edges.
-    let init_frontier: Vec<i32> = (0..live as i32).collect();
-    phases.time("refresh", || {
-        engine.candidates_into(mrf, &st.logm, &init_frontier, &mut batch)
-    })?;
-    engine_calls += 1;
-    if let Some(m) = &model {
-        let c = m.update_cost(live, arity, degree);
-        sim_phases.add("update", c);
-        sim_wall += c;
-    }
-    let a = st.arity;
-    st.cand[..live * a].copy_from_slice(&batch.new_m);
-    st.res[..live].copy_from_slice(&batch.residuals);
-    // all residuals are freshly exact: bounds coincide, slack is zero
-    st.ub[..live].copy_from_slice(&batch.residuals);
-
-    let mut unconverged = st.unconverged(live, params.eps);
-    let mut prev_unconverged = unconverged;
-    let mut iterations = 0usize;
-    let stop;
-
-    loop {
-        if unconverged == 0 {
-            stop = StopReason::Converged;
-            break;
-        }
-        if iterations >= params.max_iterations {
-            stop = StopReason::IterationCap;
-            break;
-        }
-        if clock.seconds() > params.timeout || sim_wall > params.sim_timeout {
-            stop = StopReason::Timeout;
-            break;
-        }
-
-        // 1. GenerateFrontier (schedulers see residual upper bounds —
-        //    identical to exact residuals under `Exact` refresh). Lazy
-        //    refresh routes through the oracle seam instead: residuals
-        //    resolve from bounds to exact values on scheduler demand,
-        //    with the engine time attributed to the refresh phase (it
-        //    is step-3 work moved to selection time) and the remainder
-        //    to selection.
-        let waves = if lazy {
-            let lctx = LazySchedContext {
-                mrf,
-                eps: params.eps,
-                iteration: iterations,
-                unconverged,
-                prev_unconverged,
-            };
-            let mut oracle = LazyOracle {
-                mrf,
-                engine: &mut *engine,
-                st: &mut st,
-                batch: &mut batch,
-                model,
-                rows: 0,
-                calls: 0,
-                engine_secs: 0.0,
-                sim_secs: 0.0,
-                error: None,
-            };
-            let t = Stopwatch::start();
-            let waves = scheduler.select_lazy(&lctx, &mut oracle);
-            let total = t.seconds();
-            let LazyOracle { rows, calls, engine_secs, sim_secs, error, .. } = oracle;
-            phases.add("refresh", engine_secs);
-            phases.add("select", (total - engine_secs).max(0.0));
-            engine_calls += calls;
-            refresh_rows += rows;
-            refresh_resolved += rows;
-            if model.is_some() {
-                sim_phases.add("update", sim_secs);
-                sim_wall += sim_secs;
-            }
-            if let Some(err) = error {
-                return Err(err);
-            }
-            waves
-        } else {
-            let ctx = SchedContext {
-                mrf,
-                residuals: &st.ub,
-                eps: params.eps,
-                iteration: iterations,
-                unconverged,
-                prev_unconverged,
-            };
-            phases.time("select", || scheduler.select(&ctx))
-        };
-        if let Some(m) = &model {
-            let total: usize = waves.iter().map(|w| w.len()).sum();
-            let c = m.select_cost(kind, live, mrf.live_vertices, total);
-            sim_phases.add("select", c);
-            sim_wall += c;
-        }
-        if waves.is_empty() {
-            if lazy {
-                // Select-time resolution may have tightened the bounds
-                // this iteration entered with: re-check before calling
-                // the run wedged. A scheduler that resolved everything
-                // and certified convergence stops Converged here — at
-                // the same iteration count eager exact refresh would
-                // have stopped at the loop head.
-                unconverged = st.unconverged(live, params.eps);
-                if unconverged == 0 {
-                    stop = StopReason::Converged;
-                    break;
-                }
-            }
-            // The scheduler sees nothing actionable while residual upper
-            // bounds are still hot (unconverged > 0 was checked above):
-            // the run is wedged. Reporting this as Converged would let
-            // campaign convergence tables count stalls as successes.
-            stop = StopReason::Stalled;
-            break;
-        }
-
-        // 2. Update(frontier): commit wave-by-wave
-        for wave in &waves {
-            debug_assert!(wave.iter().all(|&e| (e as usize) < live));
-            for &e in wave.iter() {
-                digest.push_edge(e);
-            }
-            digest.push_wave_end();
-            // ε-stale edges (bounded skips) commit their cached rows —
-            // sound within their slack — so they never force a mid-wave
-            // recompute; only genuinely input-stale edges do.
-            let needs_compute = wave
-                .iter()
-                .any(|&e| st.dirty[e as usize] && !st.stale_ok[e as usize]);
-            if needs_compute {
-                phases.time("update", || {
-                    engine.candidates_into(mrf, &st.logm, wave, &mut batch)
-                })?;
-                engine_calls += 1;
-                phases.time("commit", || st.commit(mrf, wave, Some(&batch), engine));
-            } else {
-                phases.time("commit", || st.commit(mrf, wave, None, engine));
-            }
-            message_updates += wave.len() as u64;
-            if let Some(m) = &model {
-                // one bulk update kernel per wave on the device
-                let c = m.update_cost(wave.len(), arity, degree);
-                sim_phases.add("update", c);
-                sim_wall += c;
-            }
-        }
-
-        // 3. refresh dirtied candidates/residuals (one bulk call).
-        //    Bounded mode first drops every dirty edge whose residual
-        //    upper bound keeps it certainly below eps: no engine row, no
-        //    modeled device time (the bound filter itself is a host-side
-        //    scan; on a device it fuses into the predicate of the update
-        //    kernel, and the per-iteration convergence reduction below
-        //    already bills a full residual scan). A skipped edge becomes
-        //    ε-stale (`stale_ok`) and leaves the queue — its bound cannot
-        //    change until a new commit dirties it again, which re-queues
-        //    it through `mark_dirty` — so each skip is decided (and
-        //    counted) exactly once per dirtying.
-        if !st.dirty_list.is_empty() {
-            let mut dirty_list = std::mem::take(&mut st.dirty_list);
-            if lazy {
-                // Defer instead of recompute: every still-dirty edge
-                // enters the bound-keyed queue for on-demand resolution
-                // at the next select. `dirty` stays set — the candidate
-                // really is input-stale until resolution (or a mid-wave
-                // recompute) refreshes it — so a re-dirtying commit
-                // only grows its slack (add_slack re-keys the heap)
-                // without re-queuing it here; deferral is counted once
-                // per heap entry, mirroring refresh_skipped's
-                // once-per-dirtying accounting.
-                for &ei in dirty_list.iter() {
-                    let e = ei as usize;
-                    if !st.dirty[e] {
-                        // committed (and exactly recomputed) mid-wave
-                        // after being queued
-                        continue;
-                    }
-                    if !st.heap.contains(e) {
-                        refresh_deferred += 1;
-                    }
-                    st.heap.set(e, st.ub[e]);
-                }
-                dirty_list.clear();
-            } else if bounded {
-                let (dirty, ub, stale_ok) = (&mut st.dirty, &st.ub, &mut st.stale_ok);
-                dirty_list.retain(|&ei| {
-                    let e = ei as usize;
-                    if !dirty[e] {
-                        // committed (and exactly recomputed) mid-wave
-                        // after being queued, or a duplicate entry
-                        return false;
-                    }
-                    dirty[e] = false;
-                    if ub[e] < params.eps {
-                        refresh_skipped += 1;
-                        stale_ok[e] = true;
-                        false
-                    } else {
-                        true
-                    }
-                });
-            }
-            if !dirty_list.is_empty() {
-                phases.time("refresh", || {
-                    engine.candidates_into(mrf, &st.logm, &dirty_list, &mut batch)
-                })?;
-                engine_calls += 1;
-                refresh_rows += dirty_list.len() as u64;
-                for (i, &ei) in dirty_list.iter().enumerate() {
-                    let e = ei as usize;
-                    st.cand[e * a..(e + 1) * a].copy_from_slice(batch.row(i, a));
-                    st.set_exact(e, batch.residuals[i]);
-                    st.stale_ok[e] = false;
-                    st.dirty[e] = false;
-                }
-                if let Some(m) = &model {
-                    // residual kernel over the recomputed edges only
-                    let c = m.update_cost(dirty_list.len(), arity, degree);
-                    sim_phases.add("update", c);
-                    sim_wall += c;
-                }
-            }
-            st.dirty_list = dirty_list;
-            st.dirty_list.clear();
-        }
-        observer.on_state(&ResidualAudit {
-            mrf,
-            logm: &st.logm,
-            res: &st.res,
-            slack: &st.slack,
-            live,
-            eps: params.eps,
-            stopped: false,
-        });
-
-        // 4. IsConverged
-        prev_unconverged = unconverged;
-        unconverged = phases.time("converge", || st.unconverged(live, params.eps));
-        if let Some(m) = &model {
-            let c = m.reduce_cost(live);
-            sim_phases.add("converge", c);
-            sim_wall += c;
-        }
-        iterations += 1;
-    }
-
-    observer.on_state(&ResidualAudit {
-        mrf,
-        logm: &st.logm,
-        res: &st.res,
-        slack: &st.slack,
-        live,
-        eps: params.eps,
-        stopped: true,
-    });
-
-    let marginals = if params.want_marginals {
-        // engines compute marginals from a from-scratch gather, so the
-        // report carries no incremental drift
-        Some(engine.marginals(mrf, &st.logm)?)
-    } else {
-        None
-    };
-    engine.end_tracking();
-
-    Ok(RunResult {
-        scheduler: scheduler.name(),
-        engine: engine.name().to_string(),
-        stop,
-        iterations,
-        wall: clock.seconds(),
-        message_updates,
-        engine_calls,
-        refresh_rows,
-        refresh_skipped,
-        refresh_deferred,
-        refresh_resolved,
-        final_residual: st.max_residual(live),
-        frontier_digest: digest.value(),
-        phases,
-        sim_wall: model.map(|_| sim_wall),
-        sim_phases,
-        marginals,
-    })
+    let mut session = Session::over(mrf, engine, scheduler, params.clone());
+    session.solve_observed(observer)?;
+    Ok(session
+        .into_result()
+        .expect("solve_observed stores a result on success"))
 }
 
 #[cfg(test)]
+// the shim tests here exercise run()/run_observed() on purpose
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::datasets::{chain, ising};
@@ -1529,6 +2145,226 @@ mod tests {
         for (x, y) in me.iter().zip(&ml) {
             assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
         }
+    }
+
+    fn owned_session(
+        g: &Mrf,
+        sched: Box<dyn Scheduler>,
+        params: RunParams,
+    ) -> Session<'static> {
+        SessionBuilder::new(g.clone(), Box::new(NativeEngine::new()), sched)
+            .with_params(params)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn shim_and_session_share_one_path_bit_for_bit() {
+        // run() is a shim over a single-use Session: an owning session's
+        // priming solve must reproduce it exactly.
+        let mut rng = Rng::new(41);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let params = RunParams { want_marginals: true, timeout: 30.0, ..Default::default() };
+        let shim = run_with(&g, &mut Rbp::new(0.25), &params);
+        let mut session = owned_session(&g, Box::new(Rbp::new(0.25)), params);
+        let r = session.solve().unwrap();
+        assert_eq!(shim.stop, r.stop);
+        assert_eq!(shim.iterations, r.iterations);
+        assert_eq!(shim.message_updates, r.message_updates);
+        assert_eq!(shim.frontier_digest, r.frontier_digest);
+        let (ms, mr) = (shim.marginals.as_ref().unwrap(), r.marginals.as_ref().unwrap());
+        for (x, y) in ms.iter().zip(mr) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn warm_solve_without_changes_is_a_noop() {
+        let mut rng = Rng::new(42);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let mut session = owned_session(&g, Box::new(Lbp::new()), RunParams::default());
+        assert!(!session.is_warm());
+        let first = session.solve().unwrap();
+        assert!(first.converged());
+        let (it1, mu1) = (first.iterations, first.message_updates);
+        assert!(it1 > 0 && mu1 > 0);
+        assert!(session.is_warm());
+        let second = session.solve().unwrap();
+        assert_eq!(second.stop, StopReason::Converged);
+        assert_eq!(second.iterations, 0, "nothing changed: no iteration may run");
+        assert_eq!(second.message_updates, 0);
+        assert_eq!(second.update_rows(), 0);
+    }
+
+    #[test]
+    fn warm_resolve_after_evidence_beats_cold_rerun() {
+        // The serving claim: after a single-vertex evidence flip, the
+        // warm re-solve re-converges in strictly fewer update rows than
+        // a cold solve on the identically mutated graph.
+        let mut rng = Rng::new(43);
+        let g = ising::generate("i", 8, 1.5, &mut rng).unwrap();
+        let params = RunParams { timeout: 30.0, ..Default::default() };
+        let mut session = owned_session(&g, Box::new(Lbp::new()), params.clone());
+        session.solve().unwrap();
+        let v = g.live_vertices / 2;
+        session.apply_evidence(&[(v, &[0.8, -0.8])]).unwrap();
+        assert_eq!(session.evidence_vertices(), &[v]);
+        let warm = session.solve().unwrap();
+        assert!(warm.converged());
+        assert!(warm.iterations > 0, "the flip must actually cost work");
+        let warm_rows = warm.update_rows();
+        // cold: a fresh run on the mutated graph, same fixed point
+        let cold = run_with(&session.graph().clone(), &mut Lbp::new(), &params);
+        assert!(cold.converged());
+        assert!(
+            warm_rows < cold.update_rows(),
+            "warm {} rows vs cold {}",
+            warm_rows,
+            cold.update_rows()
+        );
+    }
+
+    #[test]
+    fn evidence_before_first_solve_is_subsumed_by_priming() {
+        // apply_evidence on a never-solved session: the priming refresh
+        // covers every edge, so the run must equal a one-shot run on the
+        // same mutated graph bit for bit.
+        let mut rng = Rng::new(44);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let params = RunParams { want_marginals: true, ..Default::default() };
+        let mut session = owned_session(&g, Box::new(Rbp::new(0.25)), params.clone());
+        session.apply_evidence(&[(0, &[0.5, -0.5])]).unwrap();
+        let r = session.solve().unwrap();
+        let digest = r.frontier_digest;
+        let marg = r.marginals.clone().unwrap();
+        let mut cold = g.clone();
+        cold.set_unary(0, &[0.5, -0.5]).unwrap();
+        let reference = run_with(&cold, &mut Rbp::new(0.25), &params);
+        assert_eq!(reference.frontier_digest, digest);
+        for (x, y) in reference.marginals.unwrap().iter().zip(&marg) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn borrowed_sessions_reject_evidence() {
+        let mut rng = Rng::new(45);
+        let g = ising::generate("i", 4, 1.0, &mut rng).unwrap();
+        let mut eng = NativeEngine::new();
+        let mut sched = Lbp::new();
+        let mut session = Session::over(&g, &mut eng, &mut sched, RunParams::default());
+        session.solve().unwrap();
+        assert!(session.apply_evidence(&[(0, &[0.1, 0.2])]).is_err());
+        assert!(session.clear_evidence().is_err());
+    }
+
+    #[test]
+    fn clear_evidence_restores_base_and_reconverges() {
+        let mut rng = Rng::new(46);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let base_unary = g.log_unary.clone();
+        let params = RunParams { eps: 1e-6, ..Default::default() };
+        let mut session = owned_session(&g, Box::new(Lbp::new()), params);
+        session.solve().unwrap();
+        let clean = session.marginals().unwrap();
+        session
+            .apply_evidence(&[(1, &[1.0, -1.0]), (3, &[-0.7, 0.7])])
+            .unwrap();
+        session.solve().unwrap();
+        session.clear_evidence().unwrap();
+        assert_eq!(session.graph().log_unary, base_unary, "unaries must restore bitwise");
+        assert!(session.evidence_vertices().is_empty());
+        let r = session.solve().unwrap();
+        assert!(r.converged());
+        let restored = session.marginals().unwrap();
+        for (x, y) in clean.iter().zip(&restored) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn invalid_evidence_is_rejected_atomically() {
+        let mut rng = Rng::new(47);
+        let g = ising::generate("i", 5, 1.5, &mut rng).unwrap();
+        let mut session = owned_session(&g, Box::new(Lbp::new()), RunParams::default());
+        session.solve().unwrap();
+        let before = session.graph().log_unary.clone();
+        // second entry invalid: the first must not have been applied
+        let err = session.apply_evidence(&[(0, &[0.3, -0.3]), (1, &[f32::NAN, 0.0])]);
+        assert!(err.is_err());
+        assert_eq!(session.graph().log_unary, before, "bad batch must leave the graph untouched");
+        assert!(session.evidence_vertices().is_empty());
+        assert!(session.apply_evidence(&[(99_999, &[0.0, 0.0])]).is_err());
+        assert!(session.apply_evidence(&[(0, &[0.0])]).is_err(), "arity mismatch");
+    }
+
+    #[test]
+    fn lazy_resolution_billing_amortizes_launches() {
+        // The billing pin for the fused-stream resolve_cost: lazy bills
+        // at most ONE resolution launch per selection, so its modeled
+        // device time can sit above exact's by at most a launch per
+        // iteration (bounds backlog resolving across later selects) —
+        // while the per-row launch billing this replaced charged one
+        // launch per resolved row, putting lazy ~(resolved − iterations)
+        // launches over exact on narrow-frontier rs. The row-count
+        // precondition makes the bound discriminating: resolved rows
+        // far outnumber iterations here.
+        let mut rng = Rng::new(31);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let params = RunParams { timeout: 30.0, ..Default::default() };
+        let exact = run_with(&g, &mut ResidualSplash::new(1.0 / 16.0, 2), &params);
+        let lazy = run_with(
+            &g,
+            &mut ResidualSplash::new(1.0 / 16.0, 2),
+            &RunParams { residual_refresh: ResidualRefresh::Lazy, ..params },
+        );
+        assert!(exact.converged() && lazy.converged());
+        assert!(
+            lazy.refresh_rows < exact.refresh_rows,
+            "lazy {} rows vs exact {}",
+            lazy.refresh_rows,
+            exact.refresh_rows
+        );
+        assert!(
+            lazy.refresh_resolved > 2 * lazy.iterations as u64,
+            "workload too small to discriminate the billing: {} resolved over {} iterations",
+            lazy.refresh_resolved,
+            lazy.iterations
+        );
+        let launch = CostModel::v100().launch_s;
+        let (se, sl) = (exact.sim_wall.unwrap(), lazy.sim_wall.unwrap());
+        assert!(
+            sl < se + 2.0 * launch * lazy.iterations as f64,
+            "lazy sim {sl} vs exact sim {se}: resolution launches are not amortizing \
+             (per-row billing would exceed this bound by ~(resolved - iterations) launches)"
+        );
+    }
+
+    #[test]
+    fn lazy_resolutions_batch_rows_per_engine_call() {
+        // The RESOLVE_LOOKAHEAD batch: a narrow-frontier rbp run
+        // resolves many deferred rows per iteration, and must issue
+        // fewer engine calls than resolved rows — the one-row-per-call
+        // contract would put calls strictly above resolutions.
+        let mut rng = Rng::new(48);
+        let g = ising::generate("i", 8, 2.0, &mut rng).unwrap();
+        let params = RunParams {
+            timeout: 30.0,
+            residual_refresh: ResidualRefresh::Lazy,
+            ..Default::default()
+        };
+        let r = run_with(&g, &mut Rbp::new(1.0 / 16.0), &params);
+        assert!(
+            r.refresh_resolved > 32,
+            "workload too small to exercise batching: {} resolved",
+            r.refresh_resolved
+        );
+        assert!(
+            r.engine_calls < r.refresh_resolved,
+            "{} engine calls for {} resolved rows — look-ahead batching is not amortizing",
+            r.engine_calls,
+            r.refresh_resolved
+        );
     }
 
     #[test]

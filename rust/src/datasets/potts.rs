@@ -82,15 +82,20 @@ mod tests {
 
     #[test]
     fn bp_converges_on_easy_potts() {
-        use crate::coordinator::{run, RunParams};
+        use crate::coordinator::{RunParams, SessionBuilder};
         use crate::engine::native::NativeEngine;
         use crate::sched::Rnbp;
         let mut rng = Rng::new(4);
         let g = generate("potts", 8, 4, 1.0, &mut rng).unwrap();
-        let mut eng = NativeEngine::new();
-        let mut s = Rnbp::synthetic(0.7, 1);
-        let params = RunParams { cost_model: None, ..Default::default() };
-        let r = run(&g, &mut eng, &mut s, &params).unwrap();
+        let mut session = SessionBuilder::new(
+            g,
+            Box::new(NativeEngine::new()),
+            Box::new(Rnbp::synthetic(0.7, 1)),
+        )
+        .with_params(RunParams { cost_model: None, ..Default::default() })
+        .build()
+        .unwrap();
+        let r = session.solve().unwrap();
         assert!(r.converged());
     }
 }

@@ -138,10 +138,14 @@ pub trait MessageEngine {
     /// written into `out` (length `max_arity`, padded lanes zeroed);
     /// returns the max-norm residual against the current `logm` row.
     ///
-    /// This is the entry point of the coordinator's *lazy* residual
-    /// refresh, which resolves deferred dirty edges one at a time in
-    /// certified priority order instead of re-evaluating the whole dirty
-    /// list in bulk. Implementations must produce bits identical to a
+    /// This is the row-granular entry point of the coordinator's *lazy*
+    /// residual refresh, which resolves deferred dirty edges on
+    /// scheduler demand in certified priority order instead of
+    /// re-evaluating the whole dirty list in bulk (look-ahead batches
+    /// of several rows go through
+    /// [`candidates_into`](Self::candidates_into) directly — see
+    /// [`crate::coordinator::RESOLVE_LOOKAHEAD`]). Implementations must
+    /// produce bits identical to a
     /// [`candidates_into`](Self::candidates_into) call containing `e` —
     /// the lazy/exact differential harness asserts trajectory identity
     /// on top of that contract. The default routes through a one-row

@@ -20,6 +20,8 @@ pub mod validate;
 pub use builder::MrfBuilder;
 pub use messages::Messages;
 
+use anyhow::{bail, Result};
+
 use crate::NEG;
 
 /// A pairwise MRF in envelope layout. Directed edges come in reverse
@@ -133,6 +135,52 @@ impl Mrf {
     pub fn is_live_edge(&self, e: usize) -> bool {
         e < self.live_edges
     }
+
+    /// Validate a replacement log-unary row for vertex `v` without
+    /// applying it: `v` must be live, `row` must cover exactly the
+    /// vertex's arity, and every lane must be finite (soft evidence;
+    /// use [`crate::NEG`] for "impossible" states — real `-inf` would
+    /// NaN-poison the message arithmetic).
+    pub fn check_unary_row(&self, v: usize, row: &[f32]) -> Result<()> {
+        if v >= self.live_vertices {
+            bail!("vertex {v} out of live range (live_vertices = {})", self.live_vertices);
+        }
+        let ar = self.arity_of(v);
+        if row.len() != ar {
+            bail!("vertex {v}: unary row has {} lanes, arity is {ar}", row.len());
+        }
+        if let Some(x) = row.iter().find(|x| !x.is_finite()) {
+            bail!("vertex {v}: non-finite unary lane {x} (use crate::NEG for hard evidence)");
+        }
+        Ok(())
+    }
+
+    /// Replace vertex `v`'s log-unary potentials — the evidence seam of
+    /// the stateful [`crate::coordinator::Session`] API. Live lanes come
+    /// from `row` (validated by [`check_unary_row`](Self::check_unary_row));
+    /// padded lanes keep their `NEG` fill, so the envelope invariants
+    /// [`validate::validate`] checks are preserved by construction.
+    ///
+    /// Returns the max-norm delta `max_lane |new - old|`. When the row
+    /// actually changes, the instance id is re-allocated: engines cache
+    /// per-graph device literals keyed by `instance_id`, and a mutated
+    /// payload must not alias the uploaded one.
+    pub fn set_unary(&mut self, v: usize, row: &[f32]) -> Result<f32> {
+        self.check_unary_row(v, row)?;
+        let base = v * self.max_arity;
+        let mut delta = 0.0f32;
+        for (i, &x) in row.iter().enumerate() {
+            let d = (x - self.log_unary[base + i]).abs();
+            if d > delta {
+                delta = d;
+            }
+        }
+        if delta != 0.0 {
+            self.log_unary[base..base + row.len()].copy_from_slice(row);
+            self.instance_id = next_instance_id();
+        }
+        Ok(delta)
+    }
 }
 
 /// Fill a padded unary row: valid lanes from `vals`, the rest NEG.
@@ -201,6 +249,38 @@ mod tests {
                 assert_eq!(g.src[d] as usize, g.dst[e] as usize);
             }
         }
+    }
+
+    #[test]
+    fn set_unary_patches_row_and_bumps_instance_id() {
+        let mut g = small();
+        let before = g.instance_id;
+        let d = g.set_unary(1, &[0.4, -0.6]).unwrap();
+        assert!((d - 0.8).abs() < 1e-6, "delta {d}"); // |-0.6 - 0.2| = 0.8
+        assert_eq!(g.log_unary_at(1, 0), 0.4);
+        assert_eq!(g.log_unary_at(1, 1), -0.6);
+        assert_ne!(g.instance_id, before, "mutated payload must not alias the cached one");
+        validate::validate(&g).expect("evidence patch must keep the envelope valid");
+        // identical row: zero delta, id untouched (payload unchanged)
+        let id = g.instance_id;
+        let d = g.set_unary(1, &[0.4, -0.6]).unwrap();
+        assert_eq!(d, 0.0);
+        assert_eq!(g.instance_id, id);
+    }
+
+    #[test]
+    fn set_unary_rejects_bad_rows() {
+        let mut g = small();
+        let id = g.instance_id;
+        let row = g.log_unary.clone();
+        assert!(g.set_unary(3, &[0.0, 0.0]).is_err(), "padding vertex");
+        assert!(g.set_unary(0, &[0.0]).is_err(), "arity mismatch");
+        assert!(g.set_unary(0, &[0.0, f32::NAN]).is_err(), "non-finite lane");
+        assert!(g.set_unary(0, &[0.0, f32::INFINITY]).is_err(), "non-finite lane");
+        assert_eq!(g.instance_id, id, "rejected patches must not touch the graph");
+        assert_eq!(g.log_unary, row);
+        // NEG is the supported hard-evidence encoding
+        assert!(g.set_unary(0, &[0.0, crate::NEG]).is_ok());
     }
 
     #[test]

@@ -163,11 +163,17 @@ pub fn fig5(cfg: &HarnessConfig) -> Result<()> {
     for (i, g) in ds.graphs.iter().enumerate() {
         let exact_marginals = exact::exact_marginals(g)?;
 
-        let mut params = super::gpu_params(cfg);
-        params.want_marginals = true;
-        let mut engine = super::make_engine(cfg)?;
-        let mut rnbp = Rnbp::synthetic(0.7, cfg.seed ^ i as u64);
-        let r1 = crate::coordinator::run(g, engine.as_mut(), &mut rnbp, &params)?;
+        let params = super::gpu_params(cfg);
+        let mut session = crate::coordinator::SessionBuilder::new(
+            g.clone(),
+            super::make_engine(cfg)?,
+            Box::new(Rnbp::synthetic(0.7, cfg.seed ^ i as u64)),
+        )
+        .with_params(params)
+        .with_want_marginals(true)
+        .build()?;
+        session.solve()?;
+        let r1 = session.into_result().expect("solve stores a result");
 
         let mut sparams = srbp_params(cfg);
         sparams.want_marginals = true;

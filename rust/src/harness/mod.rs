@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::config::{EngineKind, HarnessConfig};
 use crate::coordinator::campaign::{run_campaign, Campaign};
-use crate::coordinator::{run, RunParams};
+use crate::coordinator::{RunParams, Session};
 use crate::datasets::{Dataset, DatasetSpec};
 use crate::engine::{
     native::NativeEngine, parallel::ParallelEngine, pjrt::PjrtEngine, MessageEngine,
@@ -105,20 +105,31 @@ pub fn gpu_campaign(
 ) -> Result<Campaign> {
     let params = gpu_params(cfg);
     let seed_of = |i: usize| cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9);
+    // One-shot runs over borrowed parts: `Session::over` keeps the
+    // engine (PJRT client, executables, literals) owned out here and
+    // reused across the whole campaign.
+    let solve_one = |engine: &mut dyn MessageEngine,
+                     sched: &mut dyn Scheduler,
+                     g: &crate::graph::Mrf|
+     -> Result<crate::coordinator::RunResult> {
+        let mut session = Session::over(g, engine, sched, params.clone());
+        session.solve()?;
+        Ok(session.into_result().expect("solve stores a result"))
+    };
     if cfg.threads <= 1 {
         let mut engine = make_engine(cfg)?;
         let label = label.into();
         let mut outcomes = Vec::with_capacity(ds.graphs.len());
         for (i, g) in ds.graphs.iter().enumerate() {
             let mut sched = mk_sched(seed_of(i));
-            outcomes.push(run(g, engine.as_mut(), sched.as_mut(), &params)?);
+            outcomes.push(solve_one(engine.as_mut(), sched.as_mut(), g)?);
         }
         return Ok(Campaign { label, outcomes });
     }
     run_campaign(label, &ds.graphs, cfg.threads, |i, g| {
         let mut engine = make_engine(cfg)?;
         let mut sched = mk_sched(seed_of(i));
-        run(g, engine.as_mut(), sched.as_mut(), &params)
+        solve_one(engine.as_mut(), sched.as_mut(), g)
     })
 }
 

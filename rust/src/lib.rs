@@ -9,6 +9,10 @@
 //! Layering (see DESIGN.md):
 //! * [`sched`] + [`coordinator`] — Layer 3, the paper's contribution:
 //!   frontier selection, residual state, dynamic-parallelism control.
+//!   The public inference surface is the stateful
+//!   [`coordinator::Session`] (built via [`coordinator::SessionBuilder`]):
+//!   warm-start multi-query serving with evidence updates; the one-shot
+//!   [`coordinator::run`] is a deprecated shim over it.
 //! * [`runtime`] + [`engine`] — the bridge: bucketed HLO executables on
 //!   the PJRT CPU client, plus a native oracle engine.
 //! * `python/compile` — Layers 2/1 (JAX model + Pallas kernel), compiled

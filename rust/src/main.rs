@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! bp-sched run --dataset ising --n 40 --c 2.5 --scheduler rnbp ...
+//! bp-sched serve --queries 16 --flips 1   # warm-session evidence stream
 //! bp-sched table table1|table2|table3|table4 [--full] [--graphs N]
 //! bp-sched figure fig2|fig4|fig5 [--full]
 //! bp-sched generate --dataset ising --n 10 --c 2 --out g.bpmrf
@@ -12,7 +13,8 @@
 use anyhow::{bail, Context, Result};
 
 use bp_sched::config::HarnessConfig;
-use bp_sched::coordinator::run;
+use bp_sched::coordinator::campaign::{serve_stream, EvidenceStream, ServeStats};
+use bp_sched::coordinator::SessionBuilder;
 use bp_sched::datasets::{serialize, DatasetSpec};
 use bp_sched::harness;
 use bp_sched::runtime::{default_artifacts_dir, Manifest};
@@ -32,6 +34,12 @@ bp-sched — message scheduling for many-core belief propagation
 
 USAGE:
   bp-sched run    [flags]               run one BP instance
+  bp-sched serve  [flags]               warm-session evidence-stream campaign:
+                                        one stateful Session per graph answers a
+                                        stream of randomized evidence queries,
+                                        warm-starting each re-solve from the
+                                        previous fixed point (vs per-query cold
+                                        re-solves for comparison)
   bp-sched table  <table1|table2|table3|table4> [flags]
   bp-sched figure <fig2|fig4|fig5> [flags]
   bp-sched bench-all [flags]            every table and figure
@@ -70,6 +78,12 @@ RUN FLAGS:
   --n N --c X                     dataset shape/difficulty
   --scheduler lbp|rbp|rs|rnbp|srbp
   --p X --lowp X --highp X --h N  scheduler parameters (X may be 1/16)
+
+SERVE FLAGS (plus run flags; srbp has no session and is rejected):
+  --queries N           evidence queries per graph (default 16)
+  --flips K             random unary patches per query (default 1)
+  --amplitude X         patch rows drawn uniform from [-X, X] (default 1.0)
+  --no-cold             skip the per-query cold re-solve comparison
 ";
 
 fn dispatch() -> Result<()> {
@@ -82,6 +96,7 @@ fn dispatch() -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "table" | "figure" => cmd_experiment(rest),
         "bench-all" => {
             let mut cfg = HarnessConfig::default();
@@ -105,6 +120,14 @@ struct RunFlags {
     highp: f64,
     h: usize,
     out: Option<String>,
+    /// serve: evidence queries per graph.
+    queries: usize,
+    /// serve: unary patches per query.
+    flips: usize,
+    /// serve: patch rows drawn uniform from [-amplitude, amplitude].
+    amplitude: f64,
+    /// serve: skip the per-query cold re-solve comparison.
+    no_cold: bool,
 }
 
 impl Default for RunFlags {
@@ -119,6 +142,10 @@ impl Default for RunFlags {
             highp: 1.0,
             h: 2,
             out: None,
+            queries: 16,
+            flips: 1,
+            amplitude: 1.0,
+            no_cold: false,
         }
     }
 }
@@ -143,6 +170,10 @@ fn split_flags(args: &[String], flags: &mut RunFlags) -> Result<Vec<String>> {
             "--highp" => flags.highp = parse_ratio(&take(&mut i)?)?,
             "--h" => flags.h = take(&mut i)?.parse()?,
             "--out" => flags.out = Some(take(&mut i)?),
+            "--queries" => flags.queries = take(&mut i)?.parse()?,
+            "--flips" => flags.flips = take(&mut i)?.parse()?,
+            "--amplitude" => flags.amplitude = take(&mut i)?.parse()?,
+            "--no-cold" => flags.no_cold = true,
             _ => rest.push(args[i].clone()),
         }
         i += 1;
@@ -168,6 +199,18 @@ fn spec_of(flags: &RunFlags) -> Result<DatasetSpec> {
     })
 }
 
+/// Coordinator (GPU) scheduler from run flags; `srbp` is the serial
+/// baseline with its own runner, not a coordinator scheduling.
+fn make_gpu_sched(flags: &RunFlags, seed: u64) -> Result<Box<dyn Scheduler>> {
+    Ok(match flags.scheduler.as_str() {
+        "lbp" => Box::new(Lbp::new()),
+        "rbp" => Box::new(Rbp::new(flags.p)),
+        "rs" => Box::new(ResidualSplash::new(flags.p, flags.h)),
+        "rnbp" => Box::new(Rnbp::new(flags.lowp, flags.highp, seed)),
+        other => bail!("unknown scheduler {other:?}"),
+    })
+}
+
 fn cmd_run(args: &[String]) -> Result<()> {
     let mut flags = RunFlags::default();
     let rest = split_flags(args, &mut flags)?;
@@ -189,15 +232,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let result = if flags.scheduler == "srbp" {
         srbp::run_serial(&graph, &harness::srbp_params(&cfg))?
     } else {
-        let mut engine = harness::make_engine(&cfg)?;
-        let mut sched: Box<dyn Scheduler> = match flags.scheduler.as_str() {
-            "lbp" => Box::new(Lbp::new()),
-            "rbp" => Box::new(Rbp::new(flags.p)),
-            "rs" => Box::new(ResidualSplash::new(flags.p, flags.h)),
-            "rnbp" => Box::new(Rnbp::new(flags.lowp, flags.highp, cfg.seed)),
-            other => bail!("unknown scheduler {other:?}"),
-        };
-        run(&graph, engine.as_mut(), sched.as_mut(), &params)?
+        // the owning Session is the primary API; `run()` is its shim
+        let engine = harness::make_engine(&cfg)?;
+        let sched = make_gpu_sched(&flags, cfg.seed)?;
+        let mut session = SessionBuilder::new(graph, engine, sched)
+            .with_params(params)
+            .build()?;
+        session.solve()?;
+        session.into_result().expect("solve stores a result")
     };
 
     println!(
@@ -235,6 +277,109 @@ fn cmd_run(args: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Warm-session serving campaign: for each sampled graph, one stateful
+/// `Session` answers a stream of randomized evidence queries, each
+/// warm-started from the previous fixed point; unless `--no-cold`, every
+/// query is also re-solved cold on the mutated graph for the work gap
+/// and the fixed-point agreement check.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut flags = RunFlags::default();
+    let rest = split_flags(args, &mut flags)?;
+    let mut cfg = HarnessConfig::default();
+    cfg.apply_args(&rest)?;
+    if flags.scheduler == "srbp" {
+        bail!(
+            "serve drives the stateful Session API; the serial srbp baseline \
+             has no session (pick lbp|rbp|rs|rnbp)"
+        );
+    }
+    make_gpu_sched(&flags, cfg.seed)?; // fail fast so the factory below cannot
+
+    let spec = spec_of(&flags)?;
+    let ds = spec.generate_many(cfg.graphs, cfg.seed)?;
+    let params = harness::gpu_params(&cfg);
+    println!(
+        "serving {}: {} graph(s) x {} queries x {} flip(s), amplitude {}, \
+         scheduler {}, engine {:?}, residual refresh {:?}",
+        spec.label(),
+        ds.graphs.len(),
+        flags.queries,
+        flags.flips,
+        flags.amplitude,
+        flags.scheduler,
+        cfg.engine,
+        cfg.residual_refresh,
+    );
+
+    let mk_engine = || harness::make_engine(&cfg);
+    let mk_sched =
+        || make_gpu_sched(&flags, cfg.seed).expect("scheduler validated before the stream");
+    let mut total = ServeStats::default();
+    let mut reports = Vec::new();
+    for (i, g) in ds.graphs.iter().enumerate() {
+        let mut stream = EvidenceStream::new(
+            cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
+            flags.flips,
+            flags.amplitude,
+        );
+        let stats = serve_stream(
+            g,
+            &mk_engine,
+            &mk_sched,
+            &params,
+            flags.queries,
+            &mut stream,
+            !flags.no_cold,
+        )?;
+        print_serve_line(&format!("graph {i}"), &stats);
+        total.absorb(&stats);
+        reports.push(stats.to_json());
+    }
+    print_serve_line("total", &total);
+    if let Some(ratio) = total.row_ratio() {
+        println!(
+            "  warm serving paid {:.2}x fewer update rows than per-query cold re-solves \
+             (wall speedup {:.2}x, max |warm - cold| marginal {:.2e})",
+            ratio,
+            total.cold_wall / total.warm_wall.max(1e-12),
+            total.max_marginal_diff,
+        );
+    }
+    let json = bp_sched::util::json::Json::obj()
+        .str("dataset", spec.label())
+        .str("scheduler", flags.scheduler.clone())
+        .num("queries_per_graph", flags.queries as f64)
+        .num("flips", flags.flips as f64)
+        .num("amplitude", flags.amplitude)
+        .field(
+            "graphs",
+            bp_sched::util::json::Json::arr(reports.into_iter()),
+        )
+        .field("total", total.to_json())
+        .build();
+    harness::report::write_json(&cfg.out_dir, "serve", &json)?;
+    Ok(())
+}
+
+fn print_serve_line(label: &str, s: &ServeStats) {
+    println!(
+        "  {label:<8} prime {:>6} iters/{:>8} rows | warm {:>6} iters/{:>8} rows \
+         ({}/{} conv, {}) | cold {:>6} iters/{:>8} rows ({}/{} conv, {})",
+        s.prime_iterations,
+        s.prime_rows,
+        s.warm_iterations,
+        s.warm_rows,
+        s.warm_converged,
+        s.queries,
+        fmt_duration(s.warm_wall),
+        s.cold_iterations,
+        s.cold_rows,
+        s.cold_converged,
+        s.queries,
+        fmt_duration(s.cold_wall),
+    );
 }
 
 fn cmd_experiment(args: &[String]) -> Result<()> {

@@ -91,6 +91,27 @@ impl CostModel {
         self.launch_s + n as f64 * self.bytes_per_msg(arity, degree) / self.mem_bw
     }
 
+    /// One selection's worth of the lazy oracle's row-granular
+    /// resolutions: `rows` candidate rows recomputed on scheduler demand
+    /// across any number of oracle calls within a single
+    /// `select_lazy`. On a device these do not launch one kernel per
+    /// row (or per look-ahead batch) — they fuse into a single
+    /// resolution stream interleaved with the selection pass — so the
+    /// whole stream pays **one** launch plus the bandwidth of the rows
+    /// it moves. Billing each row as its own [`update_cost`] kernel
+    /// (the pre-batching accounting) overstated lazy's launch overhead
+    /// ~`rows`-fold on narrow frontiers, which in turn misstated the
+    /// modeled warm/narrow-frontier savings of lazy refresh whenever
+    /// they were compared against bulk-refresh modes.
+    ///
+    /// [`update_cost`]: Self::update_cost
+    pub fn resolve_cost(&self, rows: usize, arity: usize, degree: usize) -> f64 {
+        if rows == 0 {
+            return 0.0;
+        }
+        self.launch_s + rows as f64 * self.bytes_per_msg(arity, degree) / self.mem_bw
+    }
+
     /// Key-value radix sort of m residuals.
     pub fn sort_cost(&self, m: usize) -> f64 {
         self.launch_s * 4.0 + m as f64 / self.sort_rate
@@ -165,6 +186,23 @@ mod tests {
         let sort = m.sort_cost(m_edges);
         let update = m.update_cost(k, 2, 4) + m.update_cost(4 * k, 2, 4);
         assert!(sort / (sort + update) > 0.5, "sort {sort} update {update}");
+    }
+
+    #[test]
+    fn resolve_cost_amortizes_launch_over_the_stream() {
+        // The lazy-refresh billing pin: a selection that resolves n rows
+        // pays one fused-stream launch — exactly a bulk kernel over the
+        // same rows — never n single-row launches.
+        let m = CostModel::v100();
+        assert_eq!(m.resolve_cost(0, 2, 4), 0.0);
+        for n in [1usize, 8, 64, 1024] {
+            assert_eq!(m.resolve_cost(n, 2, 4), m.update_cost(n, 2, 4));
+        }
+        // the pre-batching accounting this replaces: per-row launches
+        assert!(
+            m.resolve_cost(64, 2, 4) < 64.0 * m.update_cost(1, 2, 4) / 10.0,
+            "a 64-row stream must amortize far below 64 single-row launches"
+        );
     }
 
     #[test]

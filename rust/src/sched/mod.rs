@@ -105,8 +105,22 @@ pub trait ResidualOracle {
     /// everything is exact. NaN bounds rank above all finite ones.
     fn peek(&self) -> Option<(f32, usize)>;
 
-    /// Exactly recompute the deferred edge with the highest bound
-    /// (one engine row); returns `(edge, exact residual)`.
+    /// Exactly recompute the deferred edge with the highest bound;
+    /// returns `(edge, exact residual)`.
+    ///
+    /// Implementations may resolve a small *look-ahead batch* behind
+    /// the top — further deferred edges in descending bound order whose
+    /// bounds are `>= eps` (or NaN) — in the same engine call (see
+    /// [`crate::coordinator::RESOLVE_LOOKAHEAD`]), amortizing the
+    /// per-call overhead the one-row-per-call contract used to pay.
+    /// This is sound and selection-neutral for every caller: resolution
+    /// only tightens bounds, a sub-`eps` bound is never pulled in, and
+    /// an edge the batch resolves early is exactly one the caller's
+    /// certified-boundary loop was allowed to resolve later — extra
+    /// exact entries below a top-k boundary cannot displace it, and the
+    /// ε-cut verdict of an edge is the same whether read from its bound
+    /// or its (smaller) exact residual. Callers must treat "additional
+    /// deferred edges became exact" as an expected side effect.
     fn resolve_top(&mut self) -> Option<(usize, f32)>;
 
     /// Exactly recompute edge `e` if deferred (one engine row); returns

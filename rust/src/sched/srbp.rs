@@ -183,9 +183,17 @@ mod tests {
             ..Default::default()
         };
         let serial = run_serial(&g, &params).unwrap();
-        let mut eng = crate::engine::native::NativeEngine::new();
-        let mut lbp = crate::sched::Lbp::new();
-        let sync = crate::coordinator::run(&g, &mut eng, &mut lbp, &params).unwrap();
+        // the sync baseline through the primary (Session) API
+        let mut session = crate::coordinator::SessionBuilder::new(
+            g.clone(),
+            Box::new(crate::engine::native::NativeEngine::new()),
+            Box::new(crate::sched::Lbp::new()),
+        )
+        .with_params(params.clone())
+        .build()
+        .unwrap();
+        session.solve().unwrap();
+        let sync = session.into_result().unwrap();
         assert!(serial.converged() && sync.converged());
         for (x, y) in serial
             .marginals

@@ -1,6 +1,10 @@
 //! Ablation tests for the design choices DESIGN.md calls out:
 //! dynamic-p control, the candidate cache, and bucketed batching.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::{run, RunParams};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::native::NativeEngine;

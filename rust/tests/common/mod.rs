@@ -1,13 +1,44 @@
 //! Shared support for the differential integration harnesses
-//! (`residual_bound_parity`, `lazy_refresh_parity`, `fuzz_schedules`):
-//! the engine matrix switch, bitwise comparison, and the
-//! full-recompute residual-bound auditor — one implementation, so a
-//! change to the audit contract (e.g. the jitter cushion) cannot
-//! silently leave a sibling harness asserting the old one.
+//! (`residual_bound_parity`, `lazy_refresh_parity`, `fuzz_schedules`,
+//! `session_warm_start`): the random-MRF sampler, the engine matrix
+//! switch, bitwise comparison, and the full-recompute residual-bound
+//! auditor — one implementation, so a change to the audit contract
+//! (e.g. the jitter cushion) cannot silently leave a sibling harness
+//! asserting the old one.
 #![allow(dead_code)] // each including test binary uses a subset
 
 use bp_sched::coordinator::{ResidualAudit, RunObserver, SLACK_CUSHION};
+use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{native::NativeEngine, CandidateBatch, MessageEngine};
+use bp_sched::util::Rng;
+use bp_sched::Mrf;
+
+/// One random small MRF (ising / potts / chain mix with randomized
+/// size and coupling) — the generator the fuzz and warm-start
+/// harnesses share. Consumes a fixed number of draws per shape arm, so
+/// callers' case streams stay reproducible per seed.
+pub fn random_mrf(rng: &mut Rng) -> (String, Mrf) {
+    let (spec, glabel) = match rng.below(3) {
+        0 => {
+            let n = 4 + rng.below(3); // 4..6
+            let c = rng.range(0.5, 2.5);
+            (DatasetSpec::Ising { n, c }, format!("ising{n}x{c:.2}"))
+        }
+        1 => {
+            let n = 4 + rng.below(2); // 4..5
+            let q = 2 + rng.below(3); // 2..4
+            let c = rng.range(0.5, 1.5);
+            (DatasetSpec::Potts { n, q, c }, format!("potts{n}q{q}x{c:.2}"))
+        }
+        _ => {
+            let n = 10 + rng.below(31); // 10..40
+            let c = rng.range(1.0, 8.0);
+            (DatasetSpec::Chain { n, c }, format!("chain{n}x{c:.2}"))
+        }
+    };
+    let graph = spec.generate(rng).unwrap();
+    (glabel, graph)
+}
 
 /// Engine matrix honoring `BP_TEST_ENGINE` (`native` / `parallel`),
 /// which CI loops over; unset, both engines run.

@@ -1,6 +1,10 @@
 //! End-to-end: full stack (dataset -> scheduler -> PJRT engine -> AOT
 //! artifacts) converges and matches exact inference on tractable graphs.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::{run, RunParams};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{native::NativeEngine, pjrt::PjrtEngine};

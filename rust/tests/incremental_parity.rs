@@ -24,6 +24,10 @@
 //! Plus: beliefs are bit-exact at every drift-guard refresh point, and
 //! serial SRBP (no belief cache) is maintenance-invariant.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::{run, RunParams, RunResult, StopReason};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::belief::BeliefCache;

@@ -32,9 +32,15 @@
 //! The engine matrix honors `BP_TEST_ENGINE` (`native` / `parallel`),
 //! which CI loops over; unset, both engines run.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 mod common;
 
-use bp_sched::coordinator::{run, run_observed, ResidualRefresh, RunParams, RunResult, StopReason};
+use bp_sched::coordinator::{
+    run_observed, ResidualRefresh, RunParams, RunResult, SessionBuilder, StopReason,
+};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
 use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
@@ -93,9 +99,13 @@ fn params(mode: ResidualRefresh) -> RunParams {
 }
 
 fn run_one(g: &Mrf, sched: &str, engine: &str, mode: ResidualRefresh) -> RunResult {
-    let mut eng = mk_engine(engine);
-    let mut s = mk_sched(sched);
-    run(g, eng.as_mut(), s.as_mut(), &params(mode)).unwrap()
+    // through the owning Session API (of which `run` is the shim)
+    let mut session = SessionBuilder::new(g.clone(), mk_engine(engine), mk_sched(sched))
+        .with_params(params(mode))
+        .build()
+        .unwrap();
+    session.solve().unwrap();
+    session.into_result().unwrap()
 }
 
 fn assert_identical(exact: &RunResult, lazy: &RunResult, what: &str) {
@@ -194,9 +204,12 @@ fn lazy_beats_bounded_on_narrow_frontier_rs_with_rbp_control() {
     let g = DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap();
 
     let run_mode = |mk: fn() -> Box<dyn Scheduler>, mode: ResidualRefresh| -> RunResult {
-        let mut eng = NativeEngine::new();
-        let mut s = mk();
-        run(&g, &mut eng, s.as_mut(), &params(mode)).unwrap()
+        let mut session = SessionBuilder::new(g.clone(), Box::new(NativeEngine::new()), mk())
+            .with_params(params(mode))
+            .build()
+            .unwrap();
+        session.solve().unwrap();
+        session.into_result().unwrap()
     };
 
     // narrow-frontier rs: the paper-relevant splash workload

@@ -2,6 +2,10 @@
 //! naturally with many variants of BP" claim, exercised end-to-end
 //! through both engines.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::{run, RunParams};
 use bp_sched::datasets::{ising, DatasetSpec};
 use bp_sched::engine::{

@@ -7,6 +7,10 @@
 //! sequence (shared with the native engine via
 //! `engine::belief::candidate_row_from_belief`), so any drift is a bug.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::belief::BeliefCache;
 use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};

@@ -34,9 +34,15 @@
 //! which CI loops over so engine-conditional regressions cannot slip
 //! through on one engine only; unset, both engines run.
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 mod common;
 
-use bp_sched::coordinator::{run, run_observed, ResidualRefresh, RunParams, RunResult, StopReason};
+use bp_sched::coordinator::{
+    run_observed, ResidualRefresh, RunParams, RunResult, SessionBuilder, StopReason,
+};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
 use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
@@ -96,9 +102,13 @@ fn params(mode: ResidualRefresh) -> RunParams {
 }
 
 fn run_one(g: &Mrf, sched: &str, engine: &str, mode: ResidualRefresh) -> RunResult {
-    let mut eng = mk_engine(engine);
-    let mut s = mk_sched(sched);
-    run(g, eng.as_mut(), s.as_mut(), &params(mode)).unwrap()
+    // through the owning Session API (of which `run` is the shim)
+    let mut session = SessionBuilder::new(g.clone(), mk_engine(engine), mk_sched(sched))
+        .with_params(params(mode))
+        .build()
+        .unwrap();
+    session.solve().unwrap();
+    session.into_result().unwrap()
 }
 
 #[test]
@@ -205,9 +215,13 @@ fn bounded_skips_rows_on_narrow_frontier_and_all_message_workloads() {
     ];
     for (label, mk) in policies {
         let run_mode = |mode: ResidualRefresh| -> RunResult {
-            let mut eng = NativeEngine::new();
-            let mut s = mk();
-            run(&g, &mut eng, s.as_mut(), &params(mode)).unwrap()
+            let mut session =
+                SessionBuilder::new(g.clone(), Box::new(NativeEngine::new()), mk())
+                    .with_params(params(mode))
+                    .build()
+                    .unwrap();
+            session.solve().unwrap();
+            session.into_result().unwrap()
         };
         let exact = run_mode(ResidualRefresh::Exact);
         let bounded = run_mode(ResidualRefresh::Bounded);

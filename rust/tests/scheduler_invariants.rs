@@ -2,6 +2,10 @@
 //! inputs (seeded, many cases — the vendored build has no proptest, so
 //! the generators live here).
 
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
 use bp_sched::coordinator::{run, RunParams, StopReason};
 use bp_sched::datasets::{ising, protein, DatasetSpec};
 use bp_sched::engine::native::NativeEngine;

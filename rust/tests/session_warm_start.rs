@@ -1,0 +1,293 @@
+//! Differential harness for the stateful `Session` API
+//! (`coordinator::SessionBuilder`): warm-started multi-query serving
+//! must agree with cold runs on the mutated graph, and must be
+//! strictly cheaper on small perturbations.
+//!
+//! What is asserted:
+//!
+//! * **Warm ≡ cold at fixed point** — random evidence-update streams
+//!   (graphs from the shared `tests/common::random_mrf` generator, the
+//!   same sampler the fuzz harness uses): after every warm `solve()`,
+//!   a cold run on an identical mutated graph lands on the same fixed
+//!   point (marginals at fixed-point tolerance), for all schedulers ×
+//!   engines × refresh modes.
+//! * **Warm is strictly cheaper** — after a single-vertex evidence
+//!   flip on a narrow-frontier workload, the warm re-solve performs
+//!   strictly fewer update rows (and iterations) than the cold solve.
+//! * **Shim equivalence** — `run()` is a bit-for-bit shim over a
+//!   single-use `Session`.
+//! * **Evidence lifecycle** — `clear_evidence` restores the build-time
+//!   unaries bitwise; invalid batches are rejected atomically;
+//!   borrowed (shim) sessions refuse evidence.
+//!
+//! The engine matrix honors `BP_TEST_ENGINE` (`native` / `parallel`),
+//! which CI loops over; unset, both engines run.
+
+// One-shot harness code: the deprecated run()/run_observed() shims are
+// exercised here on purpose (they are the kept-for-one-release API).
+#![allow(deprecated)]
+
+mod common;
+
+use bp_sched::coordinator::campaign::EvidenceStream;
+use bp_sched::coordinator::{
+    run, ResidualRefresh, RunParams, RunResult, Session, SessionBuilder, StopReason,
+};
+use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
+use bp_sched::sched::{Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::Rng;
+use common::{assert_bits_equal, engines_under_test, random_mrf};
+
+const MODES: [ResidualRefresh; 3] = [
+    ResidualRefresh::Exact,
+    ResidualRefresh::Bounded,
+    ResidualRefresh::Lazy,
+];
+
+fn mk_sched(name: &str) -> Box<dyn Scheduler> {
+    match name {
+        "lbp" => Box::new(Lbp::new()),
+        "rbp" => Box::new(Rbp::new(0.25)),
+        "rs" => Box::new(ResidualSplash::new(0.25, 2)),
+        "rnbp" => Box::new(Rnbp::synthetic(0.7, 19)),
+        other => panic!("unknown scheduler {other}"),
+    }
+}
+
+fn mk_engine(name: &str) -> Box<dyn MessageEngine> {
+    match name {
+        "native" => Box::new(NativeEngine::new()),
+        "parallel" => Box::new(ParallelEngine::with_threads(4)),
+        other => panic!("unknown engine {other}"),
+    }
+}
+
+fn params(mode: ResidualRefresh) -> RunParams {
+    RunParams {
+        eps: 1e-5,
+        // deterministic stop: iteration budget only
+        max_iterations: 2_000,
+        timeout: 1e9,
+        cost_model: None,
+        want_marginals: true,
+        belief_refresh_every: 0,
+        residual_refresh: mode,
+        ..Default::default()
+    }
+}
+
+fn apply(session: &mut Session, batch: &[(usize, Vec<f32>)]) {
+    let updates: Vec<(usize, &[f32])> = batch.iter().map(|(v, r)| (*v, r.as_slice())).collect();
+    session.apply_evidence(&updates).unwrap();
+}
+
+#[test]
+fn warm_streams_match_cold_for_all_schedulers_and_engines() {
+    let mut compared = 0usize;
+    for seed in [5u64, 6, 7] {
+        let mut rng = Rng::new(seed ^ 0x5e55_10a1);
+        let (glabel, g) = random_mrf(&mut rng);
+        for sched in ["lbp", "rbp", "rs", "rnbp"] {
+            for engine in engines_under_test() {
+                for mode in MODES {
+                    let what = format!("{glabel}/{sched}/{engine}/{mode:?}");
+                    let p = params(mode);
+                    let mut warm =
+                        SessionBuilder::new(g.clone(), mk_engine(engine), mk_sched(sched))
+                            .with_params(p.clone())
+                            .build()
+                            .unwrap();
+                    warm.solve().unwrap();
+                    let mut stream = EvidenceStream::new(seed, 1, 0.6);
+                    for _ in 0..3 {
+                        let batch = stream.next_batch(warm.graph());
+                        apply(&mut warm, &batch);
+                        let warm_ok = warm.solve().unwrap().converged();
+                        let cold = {
+                            let mut eng = mk_engine(engine);
+                            let mut s = mk_sched(sched);
+                            run(warm.graph(), eng.as_mut(), s.as_mut(), &p).unwrap()
+                        };
+                        assert_ne!(cold.stop, StopReason::Stalled, "{what}");
+                        if !(warm_ok && cold.converged()) {
+                            continue;
+                        }
+                        compared += 1;
+                        let mw = warm.marginals().unwrap();
+                        for (i, (x, y)) in
+                            mw.iter().zip(cold.marginals.as_ref().unwrap()).enumerate()
+                        {
+                            assert!(
+                                (x - y).abs() < 1e-3,
+                                "{what}: marginal[{i}] warm {x} vs cold {y}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        compared >= 10,
+        "only {compared} warm/cold fixed-point comparisons ran — workload too capped"
+    );
+}
+
+#[test]
+fn warm_resolve_is_strictly_cheaper_on_single_vertex_flip() {
+    // The acceptance bar: a narrow-frontier workload, one evidence
+    // flip, and the warm re-solve must pay strictly fewer update rows
+    // (and iterations) than a cold solve on the mutated graph — for
+    // the narrow-frontier schedulers and the full-frontier baseline
+    // alike.
+    let mut rng = Rng::new(2026);
+    let g = bp_sched::datasets::DatasetSpec::Ising { n: 12, c: 1.5 }
+        .generate(&mut rng)
+        .unwrap();
+    let flip_vertex = g.live_vertices / 2;
+    let scheds: [(&str, fn() -> Box<dyn Scheduler>); 3] = [
+        ("rs 1/16", || Box::new(ResidualSplash::new(1.0 / 16.0, 2))),
+        ("rbp 1/16", || Box::new(Rbp::new(1.0 / 16.0))),
+        ("lbp", || Box::new(Lbp::new())),
+    ];
+    for (label, mk) in scheds {
+        for mode in [ResidualRefresh::Exact, ResidualRefresh::Lazy] {
+            let what = format!("{label}/{mode:?}");
+            let p = RunParams { eps: 1e-4, ..params(mode) };
+            let mut warm = SessionBuilder::new(g.clone(), mk_engine("native"), mk())
+                .with_params(p.clone())
+                .build()
+                .unwrap();
+            warm.solve().unwrap();
+            warm.apply_evidence(&[(flip_vertex, &[0.6, -0.6])]).unwrap();
+            let (warm_rows, warm_iters, warm_ok) = {
+                let r = warm.solve().unwrap();
+                (r.update_rows(), r.iterations, r.converged())
+            };
+            assert!(warm_ok, "{what}: warm re-solve did not converge");
+            assert!(warm_iters > 0, "{what}: the flip must cost real work");
+            let cold = {
+                let mut eng = mk_engine("native");
+                let mut s = mk();
+                run(warm.graph(), eng.as_mut(), s.as_mut(), &p).unwrap()
+            };
+            assert!(cold.converged(), "{what}: cold reference did not converge");
+            assert!(
+                warm_rows < cold.update_rows(),
+                "{what}: warm {} rows vs cold {} — warm start saved nothing",
+                warm_rows,
+                cold.update_rows()
+            );
+            // iterations: non-strict — a sync sweep count is decay-
+            // driven for warm and cold alike; rows (above) carry the
+            // strict acceptance bar
+            assert!(
+                warm_iters <= cold.iterations,
+                "{what}: warm {} iterations vs cold {}",
+                warm_iters,
+                cold.iterations
+            );
+        }
+    }
+}
+
+#[test]
+fn clear_evidence_restores_base_graph_bitwise() {
+    let mut rng = Rng::new(99);
+    let (_, g) = random_mrf(&mut rng);
+    let base = g.log_unary.clone();
+    let base_id = g.instance_id;
+    let mut session = SessionBuilder::new(g, mk_engine("native"), mk_sched("lbp"))
+        .with_params(params(ResidualRefresh::Exact))
+        .build()
+        .unwrap();
+    session.solve().unwrap();
+    let clean = session.marginals().unwrap();
+    let mut stream = EvidenceStream::new(4, 2, 1.0);
+    let batch = stream.next_batch(session.graph());
+    apply(&mut session, &batch);
+    assert!(!session.evidence_vertices().is_empty());
+    assert_ne!(
+        session.graph().instance_id,
+        base_id,
+        "evidence must re-allocate the instance id (engines cache by it)"
+    );
+    session.solve().unwrap();
+    session.clear_evidence().unwrap();
+    assert_eq!(session.graph().log_unary, base, "unaries must restore bitwise");
+    assert!(session.evidence_vertices().is_empty());
+    let r = session.solve().unwrap();
+    assert!(r.converged());
+    let restored = session.marginals().unwrap();
+    for (i, (x, y)) in clean.iter().zip(&restored).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-3,
+            "marginal[{i}] clean {x} vs restored {y}"
+        );
+    }
+}
+
+#[test]
+fn shim_run_is_bit_identical_to_session_solve() {
+    let mut rng = Rng::new(123);
+    let (glabel, g) = random_mrf(&mut rng);
+    for sched in ["lbp", "rbp", "rs", "rnbp"] {
+        for engine in engines_under_test() {
+            let what = format!("{glabel}/{sched}/{engine}");
+            let p = params(ResidualRefresh::Exact);
+            let shim: RunResult = {
+                let mut eng = mk_engine(engine);
+                let mut s = mk_sched(sched);
+                run(&g, eng.as_mut(), s.as_mut(), &p).unwrap()
+            };
+            let mut session = SessionBuilder::new(g.clone(), mk_engine(engine), mk_sched(sched))
+                .with_params(p)
+                .build()
+                .unwrap();
+            let r = session.solve().unwrap();
+            assert_eq!(shim.stop, r.stop, "{what}");
+            assert_eq!(shim.iterations, r.iterations, "{what}");
+            assert_eq!(shim.message_updates, r.message_updates, "{what}");
+            assert_eq!(shim.engine_calls, r.engine_calls, "{what}");
+            assert_eq!(shim.refresh_rows, r.refresh_rows, "{what}");
+            assert_eq!(shim.frontier_digest, r.frontier_digest, "{what}");
+            assert_bits_equal(
+                shim.marginals.as_ref().unwrap(),
+                r.marginals.as_ref().unwrap(),
+                &format!("{what}: marginals"),
+            );
+        }
+    }
+}
+
+#[test]
+fn evidence_validation_is_atomic_and_borrowed_sessions_refuse() {
+    let mut rng = Rng::new(321);
+    let (_, g) = random_mrf(&mut rng);
+    let mut session = SessionBuilder::new(g.clone(), mk_engine("native"), mk_sched("lbp"))
+        .with_params(params(ResidualRefresh::Exact))
+        .build()
+        .unwrap();
+    session.solve().unwrap();
+    let before = session.graph().log_unary.clone();
+    let good: Vec<f32> = vec![0.25; session.graph().arity_of(0)];
+    let bad = vec![f32::NAN; session.graph().arity_of(1)];
+    assert!(session
+        .apply_evidence(&[(0, good.as_slice()), (1, bad.as_slice())])
+        .is_err());
+    assert_eq!(
+        session.graph().log_unary,
+        before,
+        "a rejected batch must leave the graph untouched"
+    );
+    assert!(session.apply_evidence(&[(usize::MAX, good.as_slice())]).is_err());
+    assert!(session.apply_evidence(&[(0, &[] as &[f32])]).is_err());
+
+    // borrowed (shim-style) sessions share the graph: no evidence
+    let mut eng = NativeEngine::new();
+    let mut s = Lbp::new();
+    let mut borrowed = Session::over(&g, &mut eng, &mut s, params(ResidualRefresh::Exact));
+    borrowed.solve().unwrap();
+    assert!(borrowed.apply_evidence(&[(0, good.as_slice())]).is_err());
+    assert!(borrowed.clear_evidence().is_err());
+}
