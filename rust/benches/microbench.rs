@@ -13,13 +13,15 @@
 mod common;
 
 use bp_sched::collections::IndexedHeap;
-use bp_sched::coordinator::{run as coordinator_run, ResidualRefresh, RunParams, SessionBuilder};
+use bp_sched::coordinator::{
+    run as coordinator_run, ConcurrentFrontier, ResidualRefresh, RunParams, SessionBuilder,
+};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{
     native::NativeEngine, parallel::ParallelEngine, pjrt::PjrtEngine, MessageEngine,
 };
 use bp_sched::sched::SchedContext;
-use bp_sched::sched::{Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::sched::{Lbp, Multiqueue, Rbp, ResidualSplash, Rnbp, Scheduler};
 use bp_sched::util::parallel::default_threads;
 use bp_sched::util::stats::{fmt_duration, Summary};
 use bp_sched::util::{Rng, Stopwatch};
@@ -400,6 +402,38 @@ fn main() -> anyhow::Result<()> {
             let _ = s.select(&ctx);
         });
         println!("  {:<14} {:>12}", label, fmt_duration(t));
+    }
+
+    // --- mq relaxed selection scaling -------------------------------------
+    // Selection-side scaling of the Multiqueue scheduler: rows selected
+    // per wave through the concurrent-frontier path, by worker count,
+    // with every edge hot (worst-case queue pressure). Engine commits
+    // stay serial either way, so this isolates the refill / relaxed-pop
+    // / claim machinery — the rows/sec column is the acceptance number
+    // the measurement-debt ledger in ROADMAP.md waits on.
+    println!("\nmq relaxed selection on ising40 (all edges hot), by selection workers:");
+    let frontier = ConcurrentFrontier::new(g.num_edges, 64);
+    let mut wsweep: Vec<usize> = [1usize, 2, 4, 8, threads]
+        .into_iter()
+        .filter(|&t| t <= threads)
+        .collect();
+    wsweep.dedup();
+    for w in wsweep {
+        let mut s = Multiqueue::new(w, 0, 0, 11);
+        let mut rows = 0usize;
+        let t = time_it(3, 20, || {
+            rows = s
+                .select_concurrent(&ctx, &frontier)
+                .iter()
+                .map(|v| v.len())
+                .sum();
+        });
+        println!(
+            "  w={w:<2} (queues/batch auto) {:>8} rows/wave  {:>12}/wave  {:>12.0} rows/sec",
+            rows,
+            fmt_duration(t),
+            rows as f64 / t.max(1e-12)
+        );
     }
 
     // --- indexed heap throughput ------------------------------------------

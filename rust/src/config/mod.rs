@@ -79,6 +79,17 @@ pub struct HarnessConfig {
     pub semiring: Semiring,
     /// Log-domain damping factor in [0, 1); 0 = the paper's undamped BP.
     pub damping: f64,
+    /// Relaxed queues for the `mq` scheduler; `0` = auto
+    /// (`2 * selection workers`, the Multiqueue paper's c = 2).
+    pub mq_queues: usize,
+    /// Per-worker pop budget per `mq` selection; `0` = auto
+    /// (frontier-proportional, see [`crate::sched::mq`]).
+    pub mq_batch: usize,
+    /// `--threads 0` was requested literally (the stored `threads` is
+    /// clamped to 1 for campaign fan-out, where 0 never made sense).
+    /// [`validate_scheduler_threads`](Self::validate_scheduler_threads)
+    /// rejects it for `mq`, whose selection-worker count it sets.
+    pub threads_zero: bool,
 }
 
 impl Default for HarnessConfig {
@@ -100,6 +111,9 @@ impl Default for HarnessConfig {
             engine: EngineKind::Pjrt,
             semiring: Semiring::SumProduct,
             damping: 0.0,
+            mq_queues: 0,
+            mq_batch: 0,
+            threads_zero: false,
         }
     }
 }
@@ -127,7 +141,11 @@ impl HarnessConfig {
                 self.max_iterations = value.as_usize().context("max_iterations")?
             }
             "out_dir" => self.out_dir = PathBuf::from(value.as_str().context("out_dir")?),
-            "threads" => self.threads = value.as_usize().context("threads")?.max(1),
+            "threads" => {
+                let t = value.as_usize().context("threads")?;
+                self.threads_zero = t == 0;
+                self.threads = t.max(1);
+            }
             "engine_threads" => {
                 self.engine_threads = value.as_usize().context("engine_threads")?.max(1)
             }
@@ -164,6 +182,8 @@ impl HarnessConfig {
                 }
                 self.damping = d;
             }
+            "mq_queues" => self.mq_queues = value.as_usize().context("mq_queues")?,
+            "mq_batch" => self.mq_batch = value.as_usize().context("mq_batch")?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -222,6 +242,22 @@ impl HarnessConfig {
             i += 1;
         }
         Ok(positional)
+    }
+
+    /// Reject thread settings a scheduler cannot run under. `mq` reads
+    /// `threads` as its selection-worker count, so a literal
+    /// `--threads 0` is an error there (everywhere else 0 has always
+    /// silently meant "clamp to 1 campaign worker"). Call sites pass
+    /// the resolved scheduler name from the CLI/experiment table.
+    pub fn validate_scheduler_threads(&self, scheduler: &str) -> Result<()> {
+        if scheduler == "mq" && self.threads_zero {
+            bail!(
+                "--sched mq needs at least one selection worker: \
+                 --threads 0 is invalid (use --threads N for N workers; \
+                 engine fan-out is --engine-threads, set independently)"
+            );
+        }
+        Ok(())
     }
 
     /// Parse `std::env::args()` after the binary name.
@@ -324,6 +360,29 @@ mod tests {
         assert!((c.damping - 0.5).abs() < 1e-12);
         assert!(c.apply_args(&args(&["--damping", "1.5"])).is_err());
         assert!(c.apply_args(&args(&["--mode", "tropical"])).is_err());
+    }
+
+    #[test]
+    fn mq_keys_parse_and_default_to_auto() {
+        let mut c = HarnessConfig::default();
+        assert_eq!(c.mq_queues, 0);
+        assert_eq!(c.mq_batch, 0);
+        c.apply_args(&args(&["--mq-queues", "8", "--mq-batch", "32"])).unwrap();
+        assert_eq!(c.mq_queues, 8);
+        assert_eq!(c.mq_batch, 32);
+    }
+
+    #[test]
+    fn mq_rejects_zero_threads() {
+        let mut c = HarnessConfig::default();
+        c.apply_args(&args(&["--threads", "0"])).unwrap();
+        // legacy clamp is preserved for everyone else...
+        assert_eq!(c.threads, 1);
+        assert!(c.validate_scheduler_threads("rbp").is_ok());
+        // ...but mq, whose worker count this is, refuses the literal 0
+        assert!(c.validate_scheduler_threads("mq").is_err());
+        c.apply_args(&args(&["--threads", "4"])).unwrap();
+        assert!(c.validate_scheduler_threads("mq").is_ok());
     }
 
     #[test]

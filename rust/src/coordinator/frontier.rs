@@ -1,0 +1,237 @@
+//! Concurrent frontier layer: the per-edge residual store, sharded for
+//! many-worker selection.
+//!
+//! Until this module existed, the coordinator's residual state
+//! (last-exact residual, accumulated slack, upper bound, dirty marks)
+//! lived as loose `Vec`s inside the solve loop's `State`, and every
+//! scheduler read them through a serial `select()`. The paper's own
+//! profiling says selection is where the time goes, and Relaxed
+//! Scheduling for Scalable BP (Aksenov, Alistarh & Korhonen) shows
+//! selection parallelizes well if you give up exact priority order.
+//! This type is the seam that makes that possible without touching the
+//! serial schedulers:
+//!
+//! * **Residual store** (`res` / `slack` / `ub` / `dirty` / `stale_ok`
+//!   / `dirty_list`): plain fields, mutated only by the coordinator
+//!   *between* selections (commit, refresh, evidence entry). During a
+//!   selection they are read-shared — handed to schedulers as `&[f32]`
+//!   — so concurrent selection workers may read them freely. Serial
+//!   schedulers going through the compatibility path
+//!   ([`crate::sched::Scheduler::select_concurrent`]'s default impl)
+//!   see bit-identical state and behavior to the pre-frontier layout.
+//! * **Shard layout**: edge `e` belongs to shard `e % shards`. Shards
+//!   partition *work*, not locks: a selection worker `w` of `W` scans
+//!   exactly the shards `s` with `s % W == w`, so refill passes touch
+//!   disjoint interleaved stripes of the edge space (cache-friendly
+//!   for the dense residual array, and balanced because hot edges are
+//!   not clustered by id on grid graphs). The priority structures
+//!   themselves live in the scheduler ([`crate::sched::mq`] keeps one
+//!   mutex-protected heap per relaxed queue).
+//! * **Claim flags** (`claimed`): one atomic per edge, CAS-claimed by
+//!   whichever selection worker pops the edge first in the current
+//!   round. This is what makes a multi-worker wave duplicate-free by
+//!   construction: an edge enters the returned frontier exactly once
+//!   no matter how many workers race on it. Claims guard membership
+//!   only — the row data a claim "protects" is read after the scoped
+//!   workers join, so `Relaxed` ordering suffices.
+//! * **Commit counters** (`commits`): one atomic counter per edge,
+//!   bumped by the coordinator for every row it routes through the
+//!   engine. They exist for verification: the concurrency stress
+//!   harness asserts `sum(commits) == message_updates` (no committed
+//!   row was lost or double-counted between selection and commit) —
+//!   see `rust/tests/mq_stress.rs`.
+//!
+//! Nothing here blocks: flags and counters are lock-free, and the
+//! residual arrays are never written concurrently. The engine wave
+//! stays the coordinator's serial commit path (`MessageEngine` is
+//! `&mut` and `dyn`), so the consistency argument for bounded/lazy
+//! refresh is unchanged — this layer only widens who may *read* state
+//! and *propose* frontier membership at the same time.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+/// Sharded per-edge residual/slack/dirty state plus the lock-free
+/// claim/commit flags that make concurrent frontier selection safe.
+/// See the module docs for the full access contract.
+pub struct ConcurrentFrontier {
+    /// Last exactly-computed residual per edge `[M]`.
+    pub res: Vec<f32>,
+    /// Accumulated commit-delta slack since the last exact refresh.
+    pub slack: Vec<f32>,
+    /// Selection key `[M]`: `residual_upper_bound(res, slack)` — exact
+    /// where slack is zero, a sound upper bound otherwise.
+    pub ub: Vec<f32>,
+    /// Candidate row is stale (a dependency committed since the last
+    /// refresh of this edge).
+    pub dirty: Vec<bool>,
+    /// Dirty edge whose bound certifies it converged: its cached
+    /// candidate may be committed as-is (slack carries over).
+    pub stale_ok: Vec<bool>,
+    /// Dense list of currently-dirty edges (insertion order).
+    pub dirty_list: Vec<i32>,
+    shards: usize,
+    claimed: Vec<AtomicBool>,
+    commits: Vec<AtomicU32>,
+}
+
+impl ConcurrentFrontier {
+    /// State for `m` edge slots across `shards` shards (clamped to at
+    /// least one shard, at most one per edge).
+    pub fn new(m: usize, shards: usize) -> ConcurrentFrontier {
+        ConcurrentFrontier {
+            res: vec![0.0; m],
+            slack: vec![0.0; m],
+            ub: vec![0.0; m],
+            dirty: vec![false; m],
+            stale_ok: vec![false; m],
+            dirty_list: Vec::new(),
+            shards: shards.clamp(1, m.max(1)),
+            claimed: (0..m).map(|_| AtomicBool::new(false)).collect(),
+            commits: (0..m).map(|_| AtomicU32::new(0)).collect(),
+        }
+    }
+
+    /// Number of edge slots.
+    pub fn len(&self) -> usize {
+        self.res.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.res.is_empty()
+    }
+
+    /// Shard count (>= 1).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard owning edge `e`.
+    #[inline]
+    pub fn shard_of(&self, e: usize) -> usize {
+        e % self.shards
+    }
+
+    /// Whether worker `w` of `workers` owns edge `e`'s shard — the
+    /// stripe partition concurrent refill scans use. Every edge is
+    /// owned by exactly one worker for any `workers >= 1`.
+    #[inline]
+    pub fn worker_owns(&self, e: usize, w: usize, workers: usize) -> bool {
+        self.shard_of(e) % workers.max(1) == w
+    }
+
+    /// Drop all claims from the previous selection round. `&self`
+    /// because clearing is plain atomic stores; callers run it before
+    /// spawning workers.
+    pub fn reset_claims(&self) {
+        for c in &self.claimed {
+            c.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Claim edge `e` for the current frontier. Exactly one caller
+    /// wins between resets, no matter how many workers race.
+    #[inline]
+    pub fn try_claim(&self, e: usize) -> bool {
+        self.claimed[e]
+            .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Whether edge `e` is claimed in the current round.
+    pub fn is_claimed(&self, e: usize) -> bool {
+        self.claimed[e].load(Ordering::Relaxed)
+    }
+
+    /// Count one committed row for edge `e` (coordinator commit path).
+    #[inline]
+    pub fn record_commit(&self, e: usize) {
+        self.commits[e].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lifetime committed-row count for edge `e`.
+    pub fn commit_count(&self, e: usize) -> u64 {
+        self.commits[e].load(Ordering::Relaxed) as u64
+    }
+
+    /// Per-edge lifetime commit counters, snapshotted.
+    pub fn edge_commits(&self) -> Vec<u64> {
+        self.commits
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed) as u64)
+            .collect()
+    }
+
+    /// Total committed rows across all edges.
+    pub fn total_commits(&self) -> u64 {
+        self.commits
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_edge_owned_by_exactly_one_worker() {
+        for shards in [1, 3, 7, 64] {
+            let f = ConcurrentFrontier::new(100, shards);
+            for workers in [1, 2, 3, 5, 8] {
+                for e in 0..100 {
+                    let owners = (0..workers)
+                        .filter(|&w| f.worker_owns(e, w, workers))
+                        .count();
+                    assert_eq!(owners, 1, "edge {e}, {workers} workers, {shards} shards");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped() {
+        assert_eq!(ConcurrentFrontier::new(4, 0).shards(), 1);
+        assert_eq!(ConcurrentFrontier::new(4, 100).shards(), 4);
+        assert_eq!(ConcurrentFrontier::new(0, 0).shards(), 1);
+    }
+
+    #[test]
+    fn claims_are_exclusive_under_contention() {
+        // Many threads race to claim every edge; each edge must be won
+        // exactly once, and the winner set must cover all edges.
+        let f = ConcurrentFrontier::new(512, 8);
+        let wins: Vec<AtomicU32> = (0..512).map(|_| AtomicU32::new(0)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let f = &f;
+                let wins = &wins;
+                scope.spawn(move || {
+                    for e in 0..512 {
+                        if f.try_claim(e) {
+                            wins[e].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        for (e, w) in wins.iter().enumerate() {
+            assert_eq!(w.load(Ordering::Relaxed), 1, "edge {e} won {w:?} times");
+        }
+        f.reset_claims();
+        assert!(f.try_claim(3), "claims must reset between rounds");
+    }
+
+    #[test]
+    fn commit_counters_accumulate() {
+        let f = ConcurrentFrontier::new(4, 2);
+        f.record_commit(0);
+        f.record_commit(2);
+        f.record_commit(2);
+        assert_eq!(f.commit_count(0), 1);
+        assert_eq!(f.commit_count(1), 0);
+        assert_eq!(f.commit_count(2), 2);
+        assert_eq!(f.total_commits(), 3);
+        assert_eq!(f.edge_commits(), vec![1, 0, 2, 0]);
+    }
+}

@@ -160,6 +160,49 @@
 //! K-regime contract `tests/incremental_parity.rs` documents — while
 //! soundness and convergence honesty hold regardless.
 //!
+//! ## Concurrent frontier
+//!
+//! The per-edge residual store (exact residual, slack, upper bound,
+//! dirty/ε-stale marks, dirty list) lives in a
+//! [`ConcurrentFrontier`] ([`frontier`] module), sharded by
+//! `edge % shards` for many-worker selection. Serial schedulers are
+//! untouched: the eager loop calls
+//! [`crate::sched::Scheduler::select_concurrent`], whose default
+//! ignores the frontier handle and delegates to plain `select` over
+//! the same `&[f32]` bound array as before — a bit-identical
+//! compatibility path (every pre-existing digest-parity harness pins
+//! this). A concurrent scheduler ([`crate::sched::Multiqueue`]) uses
+//! the extra structure: shard stripes partition its refill scans,
+//! per-edge CAS claim flags make multi-worker waves duplicate-free by
+//! construction, and per-edge commit counters let the stress harness
+//! prove no committed row is lost or duplicated between selection and
+//! commit. Concurrency is *selection-side only* — the engine wave
+//! remains the serial commit path ([`MessageEngine`] is `&mut`), so
+//! every soundness argument above (slack bounds, ε-stale commits,
+//! lazy deferral) is unchanged.
+//!
+//! **Relaxed-pop certification.** Under lazy refresh, mq needs a far
+//! weaker certification than rbp's exact boundary: each *popped* edge
+//! is resolved individually (kept if its exact residual passes ε,
+//! dropped or recycled otherwise), and un-popped bounds are never
+//! resolved at all. This is sound for the same reason the bounded skip
+//! is — a bound below ε certifies the edge out, and membership in a
+//! relaxed frontier never depends on any *other* edge's exact value —
+//! but it buys O(popped) resolutions where rbp pays O(boundary).
+//!
+//! **Envelope, not digest, parity.** A relaxed frontier's content
+//! depends on worker interleaving, so at ≥ 2 workers mq runs are
+//! nondeterministic *by design* and digest parity is the wrong
+//! contract — there is no reference trajectory to equal. What relaxed
+//! scheduling guarantees (bounded rank error) preserves is
+//! *convergence behavior*: the harness (`tests/mq_envelope.rs`)
+//! instead pins seeds and asserts that mq reaches the same fixed
+//! point as rbp (marginal agreement at fixed-point tolerance) within
+//! an iteration/row envelope, with converged-rate no worse than
+//! rbp's on the same matrix. The deterministic configuration (one
+//! worker, one queue) still gets the strong contract: bitwise-equal
+//! marginals and digests across identical runs.
+//!
 //! ## Session lifecycle
 //!
 //! The inference surface is the stateful [`Session`], built by
@@ -228,6 +271,9 @@
 //! iteration cap or timeout — also never `Converged`.)
 
 pub mod campaign;
+pub mod frontier;
+
+pub use frontier::ConcurrentFrontier;
 
 use anyhow::{bail, Result};
 
@@ -235,7 +281,7 @@ use crate::collections::IndexedHeap;
 use crate::engine::MessageEngine;
 use crate::graph::Mrf;
 use crate::perfmodel::CostModel;
-use crate::sched::{LazySchedContext, ResidualOracle, SchedContext, Scheduler};
+use crate::sched::{LazySchedContext, RelaxedStats, ResidualOracle, SchedContext, Scheduler};
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
 /// How the step-3 dirty-list refresh recomputes residuals.
@@ -457,6 +503,20 @@ pub struct RunResult {
     /// over-counts only by deferred edges a wave recomputed mid-commit
     /// before any resolution).
     pub refresh_resolved: u64,
+    /// Relaxed-queue pops this solve performed (certified-out and
+    /// stale-recycled pops included). 0 for exact-selection schedulers.
+    pub relaxed_pops: u64,
+    /// Fraction of relaxed-selected edges that fell outside the exact
+    /// top-|frontier| cut at selection time — the observable rank error
+    /// of Multiqueue relaxation, cumulative over the scheduler's
+    /// lifetime (a ratio has no meaningful per-solve delta). 0.0 for
+    /// exact-selection schedulers.
+    pub rank_error_estimate: f64,
+    /// Rows selected (hence committed) per relaxed selection worker
+    /// this solve; empty for exact-selection schedulers. Lazy-mode
+    /// relaxed selection is serial (the oracle is exclusive) and
+    /// attributes everything to worker 0.
+    pub worker_commits: Vec<u64>,
     /// Max residual *upper bound* at stop (== max exact residual under
     /// `Exact` refresh, where slack is always zero).
     pub final_residual: f32,
@@ -505,31 +565,42 @@ impl RunResult {
     }
 }
 
+/// Shard count for the coordinator's [`ConcurrentFrontier`]. Shards
+/// partition refill work across selection workers (interleaved edge
+/// stripes), so the only requirement is "comfortably more shards than
+/// any plausible worker count"; 64 keeps every stripe dense on the
+/// small end of our graphs while staying far above core counts we
+/// model. `ConcurrentFrontier::new` clamps to the edge count.
+const FRONTIER_SHARDS: usize = 64;
+
 /// Mutable residual/candidate state for one run.
+///
+/// The per-edge residual store (`res`/`slack`/`ub`/`dirty`/`stale_ok`/
+/// `dirty_list`) lives in `f`, the [`ConcurrentFrontier`]: plain vecs
+/// the coordinator mutates serially between selections, read-shared by
+/// concurrent selection workers during one. Semantics per field:
+///
+/// * `f.res` — last exactly computed residual per edge.
+/// * `f.slack` — accumulated movement bound since `res[e]` was
+///   computed: `Σ SLACK_PER_DELTA · δ` over commits that dirtied the
+///   edge. Always zero under `Exact` refresh.
+/// * `f.ub` — residual upper bound, `residual_upper_bound(res, slack)`
+///   kept materialized. This is what schedulers and the convergence
+///   check read; under `Exact` refresh it equals `res` bit for bit.
+/// * `f.stale_ok` — bounded refresh: edge was skipped as certainly
+///   converged, so its candidate cache is ε-stale (within its
+///   accumulated slack). Such an edge may be committed from cache —
+///   the slack then carries over instead of resetting — and must not
+///   force a mid-wave recompute. Cleared by any exact recompute. Never
+///   set under `Exact` or `Lazy` refresh (lazy keeps input-stale edges
+///   `dirty` and deferred instead, so a wave that reaches one before
+///   resolution still forces the sound mid-wave recompute).
 struct State {
     logm: Vec<f32>,
     cand: Vec<f32>,
-    /// Last exactly computed residual per edge.
-    res: Vec<f32>,
-    /// Accumulated movement bound since `res[e]` was computed:
-    /// `Σ SLACK_PER_DELTA · δ` over commits that dirtied the edge.
-    /// Always zero under `Exact` refresh.
-    slack: Vec<f32>,
-    /// Residual upper bound per edge — `residual_upper_bound(res, slack)`
-    /// kept materialized. This is what schedulers and the convergence
-    /// check read; under `Exact` refresh it equals `res` bit for bit.
-    ub: Vec<f32>,
-    dirty: Vec<bool>,
-    dirty_list: Vec<i32>,
-    /// Bounded refresh: edge was skipped as certainly converged, so its
-    /// candidate cache is ε-stale (within its accumulated slack). Such
-    /// an edge may be committed from cache — the slack then carries over
-    /// instead of resetting — and must not force a mid-wave recompute.
-    /// Cleared by any exact recompute. Never set under `Exact` or
-    /// `Lazy` refresh (lazy keeps input-stale edges `dirty` and
-    /// deferred instead, so a wave that reaches one before resolution
-    /// still forces the sound mid-wave recompute).
-    stale_ok: Vec<bool>,
+    /// Sharded residual store + claim/commit flags (see above and
+    /// [`frontier`] module docs).
+    f: ConcurrentFrontier,
     /// Lazy refresh: deferred dirty edges keyed by residual upper bound
     /// (canonical max order, NaN above every finite bound). Membership
     /// is the "still unresolved" predicate the oracle exposes. Empty
@@ -557,12 +628,7 @@ impl State {
         State {
             logm: mrf.uniform_messages().as_slice().to_vec(),
             cand: vec![0.0; m * a],
-            res: vec![0.0; m],
-            slack: vec![0.0; m],
-            ub: vec![0.0; m],
-            dirty: vec![false; m],
-            dirty_list: Vec::with_capacity(m),
-            stale_ok: vec![false; m],
+            f: ConcurrentFrontier::new(m, FRONTIER_SHARDS),
             heap: IndexedHeap::with_capacity(if lazy { m } else { 0 }),
             lookahead: Vec::with_capacity(if lazy { RESOLVE_LOOKAHEAD } else { 0 }),
             arity: a,
@@ -573,9 +639,9 @@ impl State {
 
     #[inline]
     fn mark_dirty(&mut self, e: usize) {
-        if !self.dirty[e] {
-            self.dirty[e] = true;
-            self.dirty_list.push(e as i32);
+        if !self.f.dirty[e] {
+            self.f.dirty[e] = true;
+            self.f.dirty_list.push(e as i32);
         }
     }
 
@@ -583,20 +649,20 @@ impl State {
     /// collapses onto the residual.
     #[inline]
     fn set_exact(&mut self, e: usize, r: f32) {
-        self.res[e] = r;
-        self.slack[e] = 0.0;
-        self.ub[e] = r;
+        self.f.res[e] = r;
+        self.f.slack[e] = 0.0;
+        self.f.ub[e] = r;
     }
 
     /// Accumulate one commit's movement bound into a dependent edge.
     #[inline]
     fn add_slack(&mut self, e: usize, delta: f32) {
-        self.slack[e] += SLACK_PER_DELTA * delta;
-        self.ub[e] = residual_upper_bound(self.res[e], self.slack[e]);
+        self.f.slack[e] += SLACK_PER_DELTA * delta;
+        self.f.ub[e] = residual_upper_bound(self.f.res[e], self.f.slack[e]);
         if self.lazy && self.heap.contains(e) {
             // already-deferred edge: re-key to the grown bound so the
             // oracle's certified resolution order stays sound
-            self.heap.set(e, self.ub[e]);
+            self.heap.set(e, self.f.ub[e]);
         }
     }
 
@@ -612,8 +678,8 @@ impl State {
         let a = self.arity;
         let r = engine.candidate_row_into(mrf, &self.logm, e, &mut self.cand[e * a..(e + 1) * a])?;
         self.set_exact(e, r);
-        self.stale_ok[e] = false;
-        self.dirty[e] = false;
+        self.f.stale_ok[e] = false;
+        self.f.dirty[e] = false;
         Ok(r)
     }
 
@@ -649,11 +715,12 @@ impl State {
                 changed.push((e, delta));
             }
             self.logm[e * a..(e + 1) * a].copy_from_slice(row);
+            self.f.record_commit(e);
             if let Some(b) = batch {
                 // keep the candidate cache coherent with the new value
                 self.cand[e * a..(e + 1) * a].copy_from_slice(b.row(i, a));
             }
-            if batch.is_none() && self.stale_ok[e] {
+            if batch.is_none() && self.f.stale_ok[e] {
                 // Bounded mode committed an ε-stale cached candidate:
                 // the true candidate has moved from it by at most the
                 // accumulated slack, so the slack carries over as the
@@ -661,13 +728,13 @@ impl State {
                 // edge stays ε-stale until an exact recompute — and if
                 // an earlier wave re-dirtied it this iteration, it
                 // stays queued so step 3 re-checks its (grown) bound.
-                self.res[e] = 0.0;
-                self.ub[e] = residual_upper_bound(0.0, self.slack[e]);
+                self.f.res[e] = 0.0;
+                self.f.ub[e] = residual_upper_bound(0.0, self.f.slack[e]);
             } else {
                 // just-updated edge with unchanged inputs: residual 0
                 self.set_exact(e, 0.0);
-                self.stale_ok[e] = false;
-                self.dirty[e] = false;
+                self.f.stale_ok[e] = false;
+                self.f.dirty[e] = false;
                 if self.lazy {
                     // a deferred edge swept into a recomputed wave is
                     // now exact without ever being resolved: drop it
@@ -690,7 +757,7 @@ impl State {
     /// bound (divergent run) counts as unconverged — `r >= eps` alone
     /// would silently drop it and let the run stop `Converged`.
     fn unconverged(&self, live: usize, eps: f32) -> usize {
-        self.ub[..live]
+        self.f.ub[..live]
             .iter()
             .filter(|&&r| r >= eps || r.is_nan())
             .count()
@@ -700,7 +767,7 @@ impl State {
     /// divergent run reports NaN instead of a bogus finite residual.
     fn max_residual(&self, live: usize) -> f32 {
         let mut mx = 0.0f32;
-        for &r in &self.ub[..live] {
+        for &r in &self.f.ub[..live] {
             if r.is_nan() {
                 return f32::NAN;
             }
@@ -833,8 +900,8 @@ impl LazyOracle<'_> {
                     let e = ei as usize;
                     self.st.cand[e * a..(e + 1) * a].copy_from_slice(self.batch.row(i, a));
                     self.st.set_exact(e, self.batch.residuals[i]);
-                    self.st.stale_ok[e] = false;
-                    self.st.dirty[e] = false;
+                    self.st.f.stale_ok[e] = false;
+                    self.st.f.dirty[e] = false;
                 }
                 self.batch.residuals[0]
             }
@@ -853,7 +920,7 @@ impl LazyOracle<'_> {
 
 impl ResidualOracle for LazyOracle<'_> {
     fn residuals(&self) -> &[f32] {
-        &self.st.ub
+        &self.st.f.ub
     }
 
     fn is_exact(&self, e: usize) -> bool {
@@ -900,7 +967,7 @@ impl ResidualOracle for LazyOracle<'_> {
 
     fn resolve(&mut self, e: usize) -> f32 {
         if !self.st.heap.contains(e) {
-            return self.st.ub[e];
+            return self.st.f.ub[e];
         }
         self.st.heap.remove(e);
         self.resolve_now(e)
@@ -929,8 +996,8 @@ impl ResidualOracle for LazyOracle<'_> {
                     let e = ei as usize;
                     self.st.cand[e * a..(e + 1) * a].copy_from_slice(self.batch.row(i, a));
                     self.st.set_exact(e, self.batch.residuals[i]);
-                    self.st.stale_ok[e] = false;
-                    self.st.dirty[e] = false;
+                    self.st.f.stale_ok[e] = false;
+                    self.st.f.dirty[e] = false;
                 }
             }
             Err(err) => {
@@ -991,16 +1058,16 @@ fn refresh_dirty_step(
     sim_wall: &mut f64,
     c: &mut Counters,
 ) -> Result<()> {
-    if st.dirty_list.is_empty() {
+    if st.f.dirty_list.is_empty() {
         return Ok(());
     }
     let a = st.arity;
     let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
-    let mut dirty_list = std::mem::take(&mut st.dirty_list);
+    let mut dirty_list = std::mem::take(&mut st.f.dirty_list);
     if st.lazy {
         for &ei in dirty_list.iter() {
             let e = ei as usize;
-            if !st.dirty[e] {
+            if !st.f.dirty[e] {
                 // committed (and exactly recomputed) mid-wave after
                 // being queued
                 continue;
@@ -1008,12 +1075,12 @@ fn refresh_dirty_step(
             if !st.heap.contains(e) {
                 c.refresh_deferred += 1;
             }
-            st.heap.set(e, st.ub[e]);
+            st.heap.set(e, st.f.ub[e]);
         }
         dirty_list.clear();
     } else if st.track_slack {
         let eps = params.eps;
-        let (dirty, ub, stale_ok) = (&mut st.dirty, &st.ub, &mut st.stale_ok);
+        let (dirty, ub, stale_ok) = (&mut st.f.dirty, &st.f.ub, &mut st.f.stale_ok);
         dirty_list.retain(|&ei| {
             let e = ei as usize;
             if !dirty[e] {
@@ -1041,8 +1108,8 @@ fn refresh_dirty_step(
             let e = ei as usize;
             st.cand[e * a..(e + 1) * a].copy_from_slice(batch.row(i, a));
             st.set_exact(e, batch.residuals[i]);
-            st.stale_ok[e] = false;
-            st.dirty[e] = false;
+            st.f.stale_ok[e] = false;
+            st.f.dirty[e] = false;
         }
         if let Some(m) = model {
             // residual kernel over the recomputed edges only
@@ -1051,9 +1118,34 @@ fn refresh_dirty_step(
             *sim_wall += cost;
         }
     }
-    st.dirty_list = dirty_list;
-    st.dirty_list.clear();
+    st.f.dirty_list = dirty_list;
+    st.f.dirty_list.clear();
     Ok(())
+}
+
+/// Per-solve delta between two [`Scheduler::relaxed_stats`] snapshots:
+/// pops and per-worker commits subtract (lifetime counters), the rank
+/// error passes through cumulative (a ratio has no meaningful delta).
+/// Exact-selection schedulers report `None` both times → all zeros.
+fn relaxed_delta(
+    base: Option<RelaxedStats>,
+    now: Option<RelaxedStats>,
+) -> (u64, f64, Vec<u64>) {
+    let Some(now) = now else {
+        return (0, 0.0, Vec::new());
+    };
+    let base = base.unwrap_or_default();
+    let commits = now
+        .worker_commits
+        .iter()
+        .enumerate()
+        .map(|(w, &c)| c - base.worker_commits.get(w).copied().unwrap_or(0))
+        .collect();
+    (
+        now.relaxed_pops - base.relaxed_pops,
+        now.rank_error_estimate,
+        commits,
+    )
 }
 
 /// Mark the out-edges of `v` stale after a unary patch of max-norm
@@ -1376,6 +1468,26 @@ impl<'a> Session<'a> {
         Ok(())
     }
 
+    /// Re-pin the scheduler's random stream to `seed` (PR 5 follow-up:
+    /// deterministic replay across warm solves). Randomized schedulers
+    /// (rnbp, mq) reset their generator — and any queue state derived
+    /// from past draws — exactly as if freshly constructed with that
+    /// seed; deterministic schedulers ignore it. Two sessions given the
+    /// same evidence/solve sequence after the same `reset_scheduler_rng`
+    /// replay bitwise-identical schedules.
+    pub fn reset_scheduler_rng(&mut self, seed: u64) {
+        self.scheduler.get_mut().reseed(seed);
+    }
+
+    /// Per-edge lifetime committed-row counters from the concurrent
+    /// frontier (`sum == Σ message_updates` over this session's solves).
+    /// The concurrency stress harness uses this to prove no committed
+    /// row was lost or double-counted between relaxed selection and the
+    /// serial commit path.
+    pub fn edge_commits(&self) -> Vec<u64> {
+        self.st.f.edge_commits()
+    }
+
     /// Current-state marginals `[V * A]`, read without re-running: a
     /// from-scratch engine gather over the retained messages (no
     /// incremental drift, evidence included).
@@ -1427,6 +1539,10 @@ impl<'a> Session<'a> {
         let mut sim_wall = 0.0f64;
         let model = params.cost_model;
         let kind = scheduler.kind();
+        // Relaxed schedulers accumulate pop/commit tallies over their
+        // lifetime; snapshot here so the RunResult reports this solve's
+        // delta (rank error stays cumulative — it is a ratio).
+        let relaxed_base = scheduler.relaxed_stats();
         let clock = Stopwatch::start();
         let mut c = Counters::default();
         let mut digest = FrontierDigest::new();
@@ -1453,19 +1569,19 @@ impl<'a> Session<'a> {
                 sim_wall += cost;
             }
             st.cand[..live * a].copy_from_slice(&batch.new_m);
-            st.res[..live].copy_from_slice(&batch.residuals);
+            st.f.res[..live].copy_from_slice(&batch.residuals);
             // all residuals are freshly exact: bounds coincide, slack 0
-            st.ub[..live].copy_from_slice(&batch.residuals);
+            st.f.ub[..live].copy_from_slice(&batch.residuals);
             // evidence applied before the first solve is subsumed by
             // the all-edges refresh: drop its dirty marks and slack
-            let (dirty, slack) = (&mut st.dirty, &mut st.slack);
-            for &ei in &st.dirty_list {
+            let (dirty, slack) = (&mut st.f.dirty, &mut st.f.slack);
+            for &ei in &st.f.dirty_list {
                 dirty[ei as usize] = false;
                 slack[ei as usize] = 0.0;
             }
-            st.dirty_list.clear();
+            st.f.dirty_list.clear();
             *primed = true;
-        } else if !st.dirty_list.is_empty() {
+        } else if !st.f.dirty_list.is_empty() {
             // Warm entry: refresh whatever evidence dirtied since the
             // last solve — literally the step-3 refresh (mode-aware:
             // exact recompute / bounded ε-skip / lazy deferral), run
@@ -1488,8 +1604,8 @@ impl<'a> Session<'a> {
             observer.on_state(&ResidualAudit {
                 mrf,
                 logm: &st.logm,
-                res: &st.res,
-                slack: &st.slack,
+                res: &st.f.res,
+                slack: &st.f.slack,
                 live,
                 eps: params.eps,
                 stopped: false,
@@ -1566,13 +1682,18 @@ impl<'a> Session<'a> {
             } else {
                 let ctx = SchedContext {
                     mrf,
-                    residuals: &st.ub,
+                    residuals: &st.f.ub,
                     eps: params.eps,
                     iteration: iterations,
                     unconverged,
                     prev_unconverged,
                 };
-                phases.time("select", || scheduler.select(&ctx))
+                // Concurrent frontier seam: relaxed schedulers fan
+                // selection out over the frontier's shard stripes and
+                // claim flags; everything else takes the default
+                // compatibility path, which forwards to select() —
+                // bit-identical to the pre-frontier coordinator.
+                phases.time("select", || scheduler.select_concurrent(&ctx, &st.f))
             };
             if let Some(m) = &model {
                 let total: usize = waves.iter().map(|w| w.len()).sum();
@@ -1614,7 +1735,7 @@ impl<'a> Session<'a> {
                 // recompute; only genuinely input-stale edges do.
                 let needs_compute = wave
                     .iter()
-                    .any(|&e| st.dirty[e as usize] && !st.stale_ok[e as usize]);
+                    .any(|&e| st.f.dirty[e as usize] && !st.f.stale_ok[e as usize]);
                 if needs_compute {
                     phases.time("update", || {
                         engine.candidates_into(mrf, &st.logm, wave, batch)
@@ -1651,8 +1772,8 @@ impl<'a> Session<'a> {
             observer.on_state(&ResidualAudit {
                 mrf,
                 logm: &st.logm,
-                res: &st.res,
-                slack: &st.slack,
+                res: &st.f.res,
+                slack: &st.f.slack,
                 live,
                 eps: params.eps,
                 stopped: false,
@@ -1672,8 +1793,8 @@ impl<'a> Session<'a> {
         observer.on_state(&ResidualAudit {
             mrf,
             logm: &st.logm,
-            res: &st.res,
-            slack: &st.slack,
+            res: &st.f.res,
+            slack: &st.f.slack,
             live,
             eps: params.eps,
             stopped: true,
@@ -1688,6 +1809,8 @@ impl<'a> Session<'a> {
         };
         engine.end_tracking();
 
+        let (relaxed_pops, rank_error_estimate, worker_commits) =
+            relaxed_delta(relaxed_base, scheduler.relaxed_stats());
         *last = Some(RunResult {
             scheduler: scheduler.name(),
             engine: engine.name().to_string(),
@@ -1700,6 +1823,9 @@ impl<'a> Session<'a> {
             refresh_skipped: c.refresh_skipped,
             refresh_deferred: c.refresh_deferred,
             refresh_resolved: c.refresh_resolved,
+            relaxed_pops,
+            rank_error_estimate,
+            worker_commits,
             final_residual: st.max_residual(live),
             frontier_digest: digest.value(),
             phases,

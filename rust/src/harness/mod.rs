@@ -148,6 +148,7 @@ pub fn run_experiment(cfg: &HarnessConfig, id: &str) -> Result<()> {
         "table2" => tables::table2(cfg),
         "table3" => tables::table3(cfg),
         "table4" => tables::table4(cfg),
+        "mq" => tables::table_mq(cfg),
         "fig2" => figures::fig2(cfg),
         "fig4" => figures::fig4(cfg),
         "fig5" => figures::fig5(cfg),
@@ -158,7 +159,8 @@ pub fn run_experiment(cfg: &HarnessConfig, id: &str) -> Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown experiment {other:?} (want table1|table2|table3|table4|fig2|fig4|fig5|all)"
+            "unknown experiment {other:?} \
+             (want table1|table2|table3|table4|mq|fig2|fig4|fig5|all)"
         ),
     }
 }

@@ -17,7 +17,7 @@ use crate::config::HarnessConfig;
 use crate::coordinator::campaign::Speedup;
 use crate::coordinator::TimeBasis;
 use crate::datasets::DatasetSpec;
-use crate::sched::{self, Rbp, ResidualSplash, Rnbp, Scheduler};
+use crate::sched::{self, Multiqueue, Rbp, ResidualSplash, Rnbp, Scheduler};
 use crate::util::json::Json;
 
 struct SpeedupRow {
@@ -186,6 +186,46 @@ pub fn table3(cfg: &HarnessConfig) -> Result<()> {
                 DatasetSpec::Chain { n: chain, c: 10.0 },
                 "LowP = 0.7".into(),
                 Box::new(|s| Box::new(Rnbp::synthetic(0.7, s))),
+            ),
+        ],
+    )
+}
+
+/// Multiqueue relaxed-selection speedups over SRBP — a post-paper
+/// extension row set, not one of the paper's tables (Table IV mirrors
+/// the paper's registry and deliberately excludes mq). `--threads` is
+/// the selection-worker count *inside* each run here, so campaign
+/// fan-out is pinned to one run at a time instead of double-subscribing
+/// the cores; `--mq-queues` / `--mq-batch` pass through (0 = auto).
+pub fn table_mq(cfg: &HarnessConfig) -> Result<()> {
+    let (small, large, chain) = (ising_small(cfg), ising_large(cfg), chain_len(cfg));
+    let workers = cfg.threads;
+    let (queues, batch) = (cfg.mq_queues, cfg.mq_batch);
+    let mut serial = cfg.clone();
+    serial.threads = 1;
+    let settings = format!("w = {workers}");
+    let mk = move |s| -> Box<dyn Scheduler> {
+        Box::new(Multiqueue::new(workers, queues, batch, s))
+    };
+    speedup_table(
+        &serial,
+        &format!("Table MQ — relaxed Multiqueue ({settings}) speedups over SRBP"),
+        "table_mq",
+        vec![
+            (
+                DatasetSpec::Ising { n: small, c: 2.5 },
+                settings.clone(),
+                Box::new(mk),
+            ),
+            (
+                DatasetSpec::Ising { n: large, c: 2.5 },
+                settings.clone(),
+                Box::new(mk),
+            ),
+            (
+                DatasetSpec::Chain { n: chain, c: 10.0 },
+                settings.clone(),
+                Box::new(mk),
             ),
         ],
     )

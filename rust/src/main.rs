@@ -18,7 +18,7 @@ use bp_sched::coordinator::SessionBuilder;
 use bp_sched::datasets::{serialize, DatasetSpec};
 use bp_sched::harness;
 use bp_sched::runtime::{default_artifacts_dir, Manifest};
-use bp_sched::sched::{srbp, Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::sched::{srbp, Lbp, Multiqueue, Rbp, ResidualSplash, Rnbp, Scheduler};
 use bp_sched::util::stats::fmt_duration;
 use bp_sched::util::Rng;
 
@@ -40,7 +40,10 @@ USAGE:
                                         warm-starting each re-solve from the
                                         previous fixed point (vs per-query cold
                                         re-solves for comparison)
-  bp-sched table  <table1|table2|table3|table4> [flags]
+  bp-sched table  <table1|table2|table3|table4|mq> [flags]
+                                        (mq: relaxed Multiqueue speedup rows,
+                                        post-paper extension; --threads =
+                                        selection workers per run)
   bp-sched figure <fig2|fig4|fig5> [flags]
   bp-sched bench-all [flags]            every table and figure
   bp-sched generate [flags] --out FILE  sample a graph to a .bpmrf file
@@ -76,8 +79,16 @@ COMMON FLAGS (also settable via --config file.toml):
 RUN FLAGS:
   --dataset ising|chain|protein   (default ising)
   --n N --c X                     dataset shape/difficulty
-  --scheduler lbp|rbp|rs|rnbp|srbp
+  --scheduler lbp|rbp|rs|rnbp|mq|srbp   (--sched is an alias)
   --p X --lowp X --highp X --h N  scheduler parameters (X may be 1/16)
+  --threads N           mq only: relaxed selection workers (>= 1; a
+                        literal 0 is rejected). Independent of
+                        --engine-threads, the update-wave fan-out —
+                        selection and engine scale separately.
+  --mq-queues Q         mq: relaxed queue count (default 0 = auto,
+                        2 x workers)
+  --mq-batch B          mq: per-worker pops per selection (default
+                        0 = auto, frontier-proportional)
 
 SERVE FLAGS (plus run flags; srbp has no session and is rejected):
   --queries N           evidence queries per graph (default 16)
@@ -164,7 +175,7 @@ fn split_flags(args: &[String], flags: &mut RunFlags) -> Result<Vec<String>> {
             "--dataset" => flags.dataset = take(&mut i)?,
             "--n" => flags.n = take(&mut i)?.parse()?,
             "--c" => flags.c = take(&mut i)?.parse()?,
-            "--scheduler" => flags.scheduler = take(&mut i)?,
+            "--scheduler" | "--sched" => flags.scheduler = take(&mut i)?,
             "--p" => flags.p = parse_ratio(&take(&mut i)?)?,
             "--lowp" => flags.lowp = parse_ratio(&take(&mut i)?)?,
             "--highp" => flags.highp = parse_ratio(&take(&mut i)?)?,
@@ -200,13 +211,23 @@ fn spec_of(flags: &RunFlags) -> Result<DatasetSpec> {
 }
 
 /// Coordinator (GPU) scheduler from run flags; `srbp` is the serial
-/// baseline with its own runner, not a coordinator scheduling.
-fn make_gpu_sched(flags: &RunFlags, seed: u64) -> Result<Box<dyn Scheduler>> {
+/// baseline with its own runner, not a coordinator scheduling. `mq`
+/// reads its selection-worker count from config `threads` (validated
+/// against a literal `--threads 0` by the caller) and its queue/batch
+/// knobs from `--mq-queues` / `--mq-batch`.
+fn make_gpu_sched(flags: &RunFlags, cfg: &HarnessConfig) -> Result<Box<dyn Scheduler>> {
+    cfg.validate_scheduler_threads(&flags.scheduler)?;
     Ok(match flags.scheduler.as_str() {
         "lbp" => Box::new(Lbp::new()),
         "rbp" => Box::new(Rbp::new(flags.p)),
         "rs" => Box::new(ResidualSplash::new(flags.p, flags.h)),
-        "rnbp" => Box::new(Rnbp::new(flags.lowp, flags.highp, seed)),
+        "rnbp" => Box::new(Rnbp::new(flags.lowp, flags.highp, cfg.seed)),
+        "mq" => Box::new(Multiqueue::new(
+            cfg.threads,
+            cfg.mq_queues,
+            cfg.mq_batch,
+            cfg.seed,
+        )),
         other => bail!("unknown scheduler {other:?}"),
     })
 }
@@ -234,7 +255,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     } else {
         // the owning Session is the primary API; `run()` is its shim
         let engine = harness::make_engine(&cfg)?;
-        let sched = make_gpu_sched(&flags, cfg.seed)?;
+        let sched = make_gpu_sched(&flags, &cfg)?;
         let mut session = SessionBuilder::new(graph, engine, sched)
             .with_params(params)
             .build()?;
@@ -266,6 +287,17 @@ fn cmd_run(args: &[String]) -> Result<()> {
         result.refresh_deferred,
         result.refresh_resolved
     );
+    if result.relaxed_pops > 0 {
+        let commits: Vec<String> =
+            result.worker_commits.iter().map(|c| c.to_string()).collect();
+        println!(
+            "  relaxed selection: {} pops, rank error {:.3}, \
+             per-worker commits [{}]",
+            result.relaxed_pops,
+            result.rank_error_estimate,
+            commits.join(", ")
+        );
+    }
     println!("  wallclock phases:");
     for (phase, secs, frac) in result.phases.breakdown() {
         println!("    {phase:<9} {:>10}  {:>5.1}%", fmt_duration(secs), frac * 100.0);
@@ -295,7 +327,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
              has no session (pick lbp|rbp|rs|rnbp)"
         );
     }
-    make_gpu_sched(&flags, cfg.seed)?; // fail fast so the factory below cannot
+    make_gpu_sched(&flags, &cfg)?; // fail fast so the factory below cannot
 
     let spec = spec_of(&flags)?;
     let ds = spec.generate_many(cfg.graphs, cfg.seed)?;
@@ -315,7 +347,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 
     let mk_engine = || harness::make_engine(&cfg);
     let mk_sched =
-        || make_gpu_sched(&flags, cfg.seed).expect("scheduler validated before the stream");
+        || make_gpu_sched(&flags, &cfg).expect("scheduler validated before the stream");
     let mut total = ServeStats::default();
     let mut reports = Vec::new();
     for (i, g) in ds.graphs.iter().enumerate() {
@@ -386,7 +418,7 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
     let mut cfg = HarnessConfig::default();
     let positional = cfg.apply_args(args)?;
     let Some(id) = positional.first() else {
-        bail!("expected an experiment id (table1..table4, fig2, fig4, fig5)");
+        bail!("expected an experiment id (table1..table4, mq, fig2, fig4, fig5)");
     };
     harness::run_experiment(&cfg, id)
 }

@@ -46,6 +46,10 @@ pub enum SelectKind {
     RandomFilter,
     /// Serial priority queue (not a bulk device algorithm).
     Serial,
+    /// MQ: per-worker relaxed priority queues (Multiqueue) — refill
+    /// scans fan out over shard stripes, pops touch two random queue
+    /// heads; no global sort, no global heap contention.
+    Relaxed,
 }
 
 /// Calibrated device constants.
@@ -128,6 +132,19 @@ impl CostModel {
         self.launch_s + m as f64 * 4.0 / self.mem_bw
     }
 
+    /// Multiqueue relaxed selection: one refill scan of all m residual
+    /// bounds (bandwidth-bound, striped across workers so no extra
+    /// passes), plus per-selected-edge heap traffic — each frontier
+    /// edge costs a couple of cache-line-sized heap touches (push +
+    /// better-of-two pop), modeled at the radix sort's per-key rate
+    /// (both are small-key shuffles), but only over the *frontier*,
+    /// never all m keys. That last point is the whole trade: rbp pays
+    /// `sort_cost(m)`, mq pays linear-scan + O(frontier).
+    pub fn relaxed_select_cost(&self, m: usize, frontier_total: usize) -> f64 {
+        self.launch_s + (m as f64 * 4.0) / self.mem_bw
+            + 2.0 * frontier_total as f64 / self.sort_rate
+    }
+
     /// Vertex-residual reduction (scan all m edge residuals), vertex-key
     /// sort, and splash BFS build touching ~budget tree edges.
     pub fn splash_select_cost(&self, m: usize, v: usize, budget: usize) -> f64 {
@@ -153,6 +170,7 @@ impl CostModel {
             }
             SelectKind::RandomFilter => self.filter_cost(m_live),
             SelectKind::Serial => 0.0,
+            SelectKind::Relaxed => self.relaxed_select_cost(m_live, frontier_total),
         }
     }
 }
@@ -231,5 +249,22 @@ mod tests {
             m.select_cost(SelectKind::RandomFilter, 1000, 100, 500)
                 < m.select_cost(SelectKind::SortTopK, 100_000, 100, 500)
         );
+        assert!(m.select_cost(SelectKind::Relaxed, 1000, 100, 500) > 0.0);
+    }
+
+    #[test]
+    fn relaxed_select_beats_sort_on_narrow_frontiers() {
+        // The Multiqueue pitch: selection cost scales with the frontier,
+        // not m log m — so at small frontier fractions it undercuts
+        // rbp's full radix sort, and stays in the same ballpark as the
+        // cuRAND filter (both are linear scans).
+        let m = CostModel::v100();
+        for edges in [39_600usize, 199_998] {
+            let frontier = edges / 256;
+            assert!(
+                m.select_cost(SelectKind::Relaxed, edges, 0, frontier)
+                    < m.select_cost(SelectKind::SortTopK, edges, 0, frontier)
+            );
+        }
     }
 }

@@ -7,6 +7,12 @@
 //! | GPU RBP   | sort-and-select top-k    | [`rbp`]   |
 //! | GPU RS    | sort-and-select + splash | [`rs`]    |
 //! | GPU RnBP  | randomized (contribution)| [`rnbp`]  |
+//! | MQ        | relaxed multiqueues      | [`mq`]    |
+//!
+//! `mq` post-dates the paper (it implements Aksenov/Alistarh/Korhonen's
+//! relaxed Multiqueue scheduling, ROADMAP D2) and is therefore not part
+//! of [`algorithm_registry`], which mirrors the paper's Table IV
+//! exactly.
 //!
 //! A [`Scheduler`] sees the coordinator's residual state and returns the
 //! next frontier as an ordered list of *waves*: each wave is updated
@@ -15,17 +21,20 @@
 //! returns a single wave).
 
 pub mod lbp;
+pub mod mq;
 pub mod rbp;
 pub mod rnbp;
 pub mod rs;
 pub mod srbp;
 
 pub use lbp::Lbp;
+pub use mq::Multiqueue;
 pub use rbp::Rbp;
 pub use rnbp::Rnbp;
 pub use rs::ResidualSplash;
 pub use srbp::SerialRbp;
 
+use crate::coordinator::frontier::ConcurrentFrontier;
 use crate::graph::Mrf;
 
 /// Read-only view of coordinator state handed to schedulers.
@@ -192,6 +201,52 @@ pub trait Scheduler {
     /// Frontier-selection mechanism, for the simulated many-core timing
     /// model (see [`crate::perfmodel`]).
     fn kind(&self) -> crate::perfmodel::SelectKind;
+
+    /// Select with access to the coordinator's [`ConcurrentFrontier`]
+    /// (claim flags, shard partition) — the seam concurrent schedulers
+    /// drive. The eager coordinator path always calls this; the
+    /// default ignores the frontier and delegates to
+    /// [`select`](Self::select), so every serial scheduler goes through
+    /// a bit-identical compatibility path.
+    fn select_concurrent(
+        &mut self,
+        ctx: &SchedContext,
+        frontier: &ConcurrentFrontier,
+    ) -> Vec<Vec<i32>> {
+        let _ = frontier;
+        self.select(ctx)
+    }
+
+    /// Re-pin the scheduler's random stream to `seed`, discarding any
+    /// in-flight randomized state (rnbp's coin stream, mq's queues), so
+    /// warm-session solves are replayable: after `reseed(s)` the
+    /// scheduler behaves exactly as one freshly built with seed `s`.
+    /// No-op for deterministic schedulers.
+    fn reseed(&mut self, seed: u64) {
+        let _ = seed;
+    }
+
+    /// Relaxed-selection statistics (pop counts, rank-error estimate,
+    /// per-worker commit counts), cumulative over the scheduler's
+    /// lifetime. `None` for schedulers with exact selection — the
+    /// coordinator then reports zeros.
+    fn relaxed_stats(&self) -> Option<RelaxedStats> {
+        None
+    }
+}
+
+/// Cumulative statistics from a relaxed (approximate-priority)
+/// scheduler — see [`Scheduler::relaxed_stats`]. The coordinator
+/// snapshots these around each solve to report per-run deltas.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RelaxedStats {
+    /// Queue pops performed (certified-out and recycled pops included).
+    pub relaxed_pops: u64,
+    /// Fraction of selected edges outside the exact top-|frontier| cut
+    /// at selection time — the observable rank error of relaxation.
+    pub rank_error_estimate: f64,
+    /// Rows selected (hence committed) per selection worker.
+    pub worker_commits: Vec<u64>,
 }
 
 /// Registry row for Table IV.

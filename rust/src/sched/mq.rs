@@ -1,0 +1,671 @@
+//! Multiqueue relaxed scheduling: concurrent approximate top-k
+//! selection with per-worker relaxed priority queues.
+//!
+//! Implements the scheduler family of *Relaxed Scheduling for Scalable
+//! Belief Propagation* (Aksenov, Alistarh & Korhonen): instead of one
+//! global priority structure (srbp) or a full sort-and-select scan
+//! (rbp), residual-hot edges are spread across `Q` small heaps, and
+//! each of `W` selection workers repeatedly pops from the *better of
+//! two uniformly random queues*. The classic Multiqueue argument gives
+//! bounded rank error: a popped element is, with high probability,
+//! within O(Q) rank of the true maximum, so the selected frontier is
+//! an approximate top-k — close enough for residual BP, whose
+//! convergence (per Sutton & McCallum's dynamic-schedule analysis)
+//! tolerates slightly-stale priority order. In exchange, selection has
+//! no global contention point: workers touch disjoint shard stripes of
+//! the residual array during refill (see
+//! [`crate::coordinator::frontier`]) and only ever hold one or two
+//! small per-queue locks at a time.
+//!
+//! Mechanics per `select`:
+//!
+//! 1. **Refill** — each worker scans its shard stripe of the residual
+//!    array and pushes every `>= eps` edge not already queued into a
+//!    uniformly random queue (an atomic `queued` flag keeps each edge
+//!    in at most one queue, so waves cannot contain duplicates via the
+//!    queue layer). Entries persist across selections; their keys go
+//!    stale as commits change residuals.
+//! 2. **Relaxed pop** — each worker pops up to `batch` edges via
+//!    better-of-two-random, certifying every pop against the *current*
+//!    residual: certified-converged pops are dropped, stale-keyed pops
+//!    are recycled with the fresh key, and survivors are claimed
+//!    through the frontier's per-edge CAS so racing workers cannot
+//!    select the same edge twice.
+//! 3. **Merge** — worker-local selections merge and sort into the
+//!    canonical (residual desc, edge asc) order, forming one wave.
+//!    With one worker and one queue the whole pipeline is serial and
+//!    seeded, hence bitwise deterministic across identical runs.
+//!
+//! Under `--residual-refresh lazy` the oracle is exclusive (`&mut`),
+//! so lazy selection runs serially regardless of `workers` — but it
+//! needs only *per-pop certification*, the weakest boundary any
+//! scheduler here uses: each popped edge is resolved individually and
+//! either kept, dropped, or recycled; un-popped bounds are never
+//! resolved at all (rbp by contrast must resolve every bound that
+//! could crack its exact top-k boundary).
+//!
+//! Because pop order depends on worker interleaving, mq runs at `W >=
+//! 2` are nondeterministic by design; harnesses assert seeded
+//! convergence-rate *envelopes* and fixed-point agreement instead of
+//! frontier digests (see `rust/tests/mq_envelope.rs`).
+
+use super::{LazySchedContext, RelaxedStats, ResidualOracle, SchedContext, Scheduler};
+use crate::coordinator::frontier::ConcurrentFrontier;
+use crate::util::Rng;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Keeps mq's seed stream distinct from rnbp's for the same user seed.
+const SEED_MIX: u64 = 0x6d71_5f72_656c_6178; // "mq_relax"
+
+/// Auto `batch`: target a frontier of ~`live_edges / 16` split across
+/// workers — comparable work per iteration to rbp at its default
+/// p = 1/16.
+const AUTO_FRONTIER_DIVISOR: usize = 16;
+
+/// Queue entry ordered by residual key (non-negative f32 bits preserve
+/// `total_cmp` order), ties to the smaller edge id — the same total
+/// order the other schedulers canonicalize on.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct QEntry {
+    key: u32,
+    edge: i32,
+}
+
+impl Ord for QEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.key
+            .cmp(&o.key)
+            .then_with(|| o.edge.cmp(&self.edge))
+    }
+}
+
+impl PartialOrd for QEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+/// Canonical frontier order (residual desc, edge asc) — mirrors rbp.
+#[inline]
+fn cmp_desc(a: &(f32, i32), b: &(f32, i32)) -> std::cmp::Ordering {
+    b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1))
+}
+
+struct WorkerOut {
+    selected: Vec<(f32, i32)>,
+    pops: u64,
+}
+
+/// See module docs.
+pub struct Multiqueue {
+    /// Selection worker threads (>= 1). Independent of the engine's
+    /// `--engine-threads` fan-out.
+    pub workers: usize,
+    /// Relaxed queue count; 0 = auto (2 x workers, the standard
+    /// Multiqueue over-provisioning that keeps collision rates low).
+    pub queues: usize,
+    /// Pops per worker per selection; 0 = auto (frontier of
+    /// ~live_edges/16 split across workers).
+    pub batch: usize,
+    rng: Rng,
+    qs: Vec<Mutex<BinaryHeap<QEntry>>>,
+    /// `queued[e]` == edge `e` currently has exactly one entry in some
+    /// queue (entries persist across selections; keys may be stale).
+    queued: Vec<AtomicBool>,
+    /// Selected-row count per worker (== rows the coordinator will
+    /// commit, since every selected edge is committed).
+    worker_commits: Vec<u64>,
+    relaxed_pops: u64,
+    rank_err_num: u64,
+    rank_err_den: u64,
+    scratch: Vec<f32>,
+    /// Frontier used when `select` is driven without a coordinator
+    /// (benches, unit tests); the coordinator path supplies its own.
+    fallback: Option<ConcurrentFrontier>,
+}
+
+impl Multiqueue {
+    /// `queues` / `batch` of 0 mean auto (see field docs).
+    pub fn new(workers: usize, queues: usize, batch: usize, seed: u64) -> Multiqueue {
+        assert!(workers >= 1, "mq needs at least one selection worker");
+        Multiqueue {
+            workers,
+            queues,
+            batch,
+            rng: Rng::new(seed ^ SEED_MIX),
+            qs: Vec::new(),
+            queued: Vec::new(),
+            worker_commits: vec![0; workers],
+            relaxed_pops: 0,
+            rank_err_num: 0,
+            rank_err_den: 0,
+            scratch: Vec::new(),
+            fallback: None,
+        }
+    }
+
+    fn effective_queues(&self) -> usize {
+        if self.queues == 0 {
+            (2 * self.workers).max(1)
+        } else {
+            self.queues
+        }
+    }
+
+    fn effective_batch(&self, m: usize) -> usize {
+        if self.batch == 0 {
+            m.div_ceil(AUTO_FRONTIER_DIVISOR * self.workers).max(1)
+        } else {
+            self.batch
+        }
+    }
+
+    fn ensure_capacity(&mut self, m: usize) {
+        let nq = self.effective_queues();
+        if self.qs.len() != nq {
+            // A queue-count change (re-tuned mid-session) invalidates
+            // entry placement: restart with empty queues.
+            self.qs = (0..nq).map(|_| Mutex::new(BinaryHeap::new())).collect();
+            for q in &self.queued {
+                q.store(false, Ordering::Relaxed);
+            }
+        }
+        while self.queued.len() < m {
+            self.queued.push(AtomicBool::new(false));
+        }
+        if self.worker_commits.len() < self.workers {
+            self.worker_commits.resize(self.workers, 0);
+        }
+    }
+
+    /// Merge worker-local picks into one canonically-ordered wave and
+    /// account stats; falls back to a serial exact top-`budget` scan if
+    /// the relaxed pass came up empty while hot edges remain (pop
+    /// budgets can exhaust on certified-out entries), so a hot graph
+    /// can never stall on an unlucky pop sequence.
+    fn finish_select(
+        &mut self,
+        residuals: &[f32],
+        m: usize,
+        eps: f32,
+        budget: usize,
+        outs: Vec<WorkerOut>,
+    ) -> Vec<Vec<i32>> {
+        let mut sel: Vec<(f32, i32)> = Vec::new();
+        for (w, o) in outs.iter().enumerate() {
+            self.relaxed_pops += o.pops;
+            self.worker_commits[w] += o.selected.len() as u64;
+            sel.extend_from_slice(&o.selected);
+        }
+        if sel.is_empty() {
+            let mut hot: Vec<(f32, i32)> = residuals[..m]
+                .iter()
+                .enumerate()
+                .filter(|&(_, &r)| r >= eps)
+                .map(|(e, &r)| (r, e as i32))
+                .collect();
+            if hot.is_empty() {
+                return vec![];
+            }
+            let k = budget.min(hot.len());
+            hot.select_nth_unstable_by(k - 1, cmp_desc);
+            hot.truncate(k);
+            // account the fallback rows to worker 0 so commit totals
+            // still reconcile against worker counts
+            self.worker_commits[0] += k as u64;
+            sel = hot;
+        }
+        sel.sort_unstable_by(cmp_desc);
+        for p in sel.windows(2) {
+            assert_ne!(p[0].1, p[1].1, "duplicate edge in mq wave");
+        }
+
+        // Rank-error bookkeeping: fraction of selected edges falling
+        // outside the exact top-|sel| cut of the current residuals.
+        self.scratch.clear();
+        self.scratch
+            .extend(residuals[..m].iter().copied().filter(|&r| r >= eps));
+        let k = sel.len().min(self.scratch.len());
+        if k > 0 {
+            if k < self.scratch.len() {
+                self.scratch
+                    .select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
+                let threshold = self.scratch[k - 1];
+                self.rank_err_num += sel
+                    .iter()
+                    .filter(|&&(r, _)| threshold.total_cmp(&r) == std::cmp::Ordering::Greater)
+                    .count() as u64;
+            }
+            self.rank_err_den += k as u64;
+        }
+
+        vec![sel.into_iter().map(|(_, e)| e).collect()]
+    }
+
+    fn run_select(&mut self, ctx: &SchedContext, f: &ConcurrentFrontier) -> Vec<Vec<i32>> {
+        if ctx.unconverged == 0 {
+            return vec![];
+        }
+        let m = ctx.mrf.live_edges;
+        self.ensure_capacity(m);
+        let workers = self.workers;
+        let batch = self.effective_batch(m);
+        let eps = ctx.eps;
+        let residuals = ctx.residuals;
+        f.reset_claims();
+
+        let mut rngs: Vec<Rng> = (0..workers).map(|w| self.rng.fork(w as u64 + 1)).collect();
+        let qs: &[Mutex<BinaryHeap<QEntry>>] = &self.qs;
+        let queued: &[AtomicBool] = &self.queued;
+
+        let outs: Vec<WorkerOut> = if workers == 1 {
+            vec![worker_round(
+                0,
+                1,
+                batch,
+                eps,
+                m,
+                residuals,
+                f,
+                qs,
+                queued,
+                rngs.pop().expect("one rng"),
+            )]
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = rngs
+                    .drain(..)
+                    .enumerate()
+                    .map(|(w, rng)| {
+                        scope.spawn(move || {
+                            worker_round(w, workers, batch, eps, m, residuals, f, qs, queued, rng)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("mq worker panicked"))
+                    .collect()
+            })
+        };
+
+        self.finish_select(residuals, m, eps, workers * batch, outs)
+    }
+}
+
+/// One worker's refill + relaxed-pop round (see module docs).
+#[allow(clippy::too_many_arguments)]
+fn worker_round(
+    w: usize,
+    workers: usize,
+    batch: usize,
+    eps: f32,
+    m: usize,
+    residuals: &[f32],
+    f: &ConcurrentFrontier,
+    qs: &[Mutex<BinaryHeap<QEntry>>],
+    queued: &[AtomicBool],
+    mut rng: Rng,
+) -> WorkerOut {
+    // Refill this worker's shard stripe. NaN residuals fail the eps
+    // filter and are never enqueued — the same drop rbp's eager filter
+    // applies (the coordinator still counts them unconverged).
+    for e in 0..m {
+        if !f.worker_owns(e, w, workers) {
+            continue;
+        }
+        let r = residuals[e];
+        if r >= eps && !queued[e].swap(true, Ordering::Relaxed) {
+            let qi = rng.below(qs.len());
+            qs[qi].lock().unwrap().push(QEntry { key: r.to_bits(), edge: e as i32 });
+        }
+    }
+
+    let mut out = WorkerOut { selected: Vec::with_capacity(batch), pops: 0 };
+    let mut attempts = 0usize;
+    let max_attempts = batch * 4 + 8;
+    while out.selected.len() < batch && attempts < max_attempts {
+        attempts += 1;
+        let Some(QEntry { key, edge }) = pop_better_of_two(qs, &mut rng) else {
+            break;
+        };
+        out.pops += 1;
+        let e = edge as usize;
+        let cur = residuals[e];
+        if !(cur >= eps) {
+            // Certified converged since enqueue (or NaN): drop.
+            queued[e].store(false, Ordering::Relaxed);
+            continue;
+        }
+        if cur.to_bits() != key {
+            // Stale priority: recycle with the fresh key. The entry
+            // stays unique — we hold the only copy right here.
+            let qi = rng.below(qs.len());
+            qs[qi].lock().unwrap().push(QEntry { key: cur.to_bits(), edge });
+            continue;
+        }
+        queued[e].store(false, Ordering::Relaxed);
+        if f.try_claim(e) {
+            out.selected.push((cur, edge));
+        }
+    }
+    out
+}
+
+/// Pop the better top of two uniformly random queues (locks taken in
+/// index order, so concurrent poppers cannot deadlock). Retries a few
+/// random pairs, then sweeps every queue so `None` means truly empty.
+fn pop_better_of_two(qs: &[Mutex<BinaryHeap<QEntry>>], rng: &mut Rng) -> Option<QEntry> {
+    let nq = qs.len();
+    if nq == 1 {
+        return qs[0].lock().unwrap().pop();
+    }
+    for _ in 0..4 {
+        let i = rng.below(nq);
+        let j = rng.below(nq);
+        let (a, b) = (i.min(j), i.max(j));
+        if a == b {
+            if let Some(entry) = qs[a].lock().unwrap().pop() {
+                return Some(entry);
+            }
+            continue;
+        }
+        let mut qa = qs[a].lock().unwrap();
+        let mut qb = qs[b].lock().unwrap();
+        let pick_a = match (qa.peek(), qb.peek()) {
+            (Some(x), Some(y)) => x >= y,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => continue,
+        };
+        return if pick_a { qa.pop() } else { qb.pop() };
+    }
+    for q in qs {
+        if let Some(entry) = q.lock().unwrap().pop() {
+            return Some(entry);
+        }
+    }
+    None
+}
+
+impl Scheduler for Multiqueue {
+    fn name(&self) -> String {
+        let q = if self.queues == 0 {
+            "auto".to_string()
+        } else {
+            self.queues.to_string()
+        };
+        format!("mq(w={},q={q})", self.workers)
+    }
+
+    fn kind(&self) -> crate::perfmodel::SelectKind {
+        crate::perfmodel::SelectKind::Relaxed
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Vec<Vec<i32>> {
+        // No coordinator frontier supplied (bench/test drive): claim
+        // through an owned one.
+        let n = ctx.mrf.num_edges;
+        let undersized = match &self.fallback {
+            Some(f) => f.len() < n,
+            None => true,
+        };
+        if undersized {
+            self.fallback = Some(ConcurrentFrontier::new(n, (2 * self.workers).max(1)));
+        }
+        let f = self.fallback.take().expect("fallback frontier");
+        let waves = self.run_select(ctx, &f);
+        self.fallback = Some(f);
+        waves
+    }
+
+    fn select_concurrent(
+        &mut self,
+        ctx: &SchedContext,
+        frontier: &ConcurrentFrontier,
+    ) -> Vec<Vec<i32>> {
+        self.run_select(ctx, frontier)
+    }
+
+    /// Per-pop certification (see module docs): serial because the
+    /// oracle is exclusive, but it resolves *only popped* edges — the
+    /// weakest certification boundary of any scheduler here.
+    fn select_lazy(
+        &mut self,
+        ctx: &LazySchedContext,
+        oracle: &mut dyn ResidualOracle,
+    ) -> Vec<Vec<i32>> {
+        if ctx.unconverged == 0 {
+            return vec![];
+        }
+        let m = ctx.mrf.live_edges;
+        self.ensure_capacity(m);
+        let batch = self.effective_batch(m);
+        let budget = batch * self.workers;
+        let eps = ctx.eps;
+
+        // Refill from bounds. NaN bounds (poisoned runs) must be
+        // enqueued so resolution reaches them and engine errors can
+        // re-raise instead of hiding behind the eps filter.
+        {
+            let bounds = oracle.residuals();
+            for e in 0..m {
+                let r = bounds[e];
+                if (r >= eps || r.is_nan()) && !self.queued[e].swap(true, Ordering::Relaxed) {
+                    let qi = self.rng.below(self.qs.len());
+                    self.qs[qi].lock().unwrap().push(QEntry { key: r.to_bits(), edge: e as i32 });
+                }
+            }
+        }
+
+        let mut sel: Vec<(f32, i32)> = Vec::with_capacity(budget);
+        let mut pops = 0u64;
+        let mut attempts = 0usize;
+        let max_attempts = budget * 4 + 8;
+        while sel.len() < budget && attempts < max_attempts {
+            attempts += 1;
+            let Some(QEntry { key, edge }) = pop_better_of_two(&self.qs, &mut self.rng) else {
+                break;
+            };
+            pops += 1;
+            let e = edge as usize;
+            let cur = if oracle.is_exact(e) {
+                oracle.residuals()[e]
+            } else {
+                oracle.resolve(e)
+            };
+            if !(cur >= eps) {
+                self.queued[e].store(false, Ordering::Relaxed);
+                continue;
+            }
+            if cur.to_bits() != key {
+                let qi = self.rng.below(self.qs.len());
+                self.qs[qi].lock().unwrap().push(QEntry { key: cur.to_bits(), edge });
+                continue;
+            }
+            self.queued[e].store(false, Ordering::Relaxed);
+            sel.push((cur, edge));
+        }
+        self.relaxed_pops += pops;
+
+        if sel.is_empty() {
+            // The pop budget exhausted without a certified-hot edge.
+            // Resolve everything and decide exactly — never return an
+            // empty wave while genuinely-hot edges remain, and never
+            // return one that exists only because of unresolved
+            // over-estimates.
+            oracle.resolve_all();
+            let residuals = oracle.residuals();
+            let mut hot: Vec<(f32, i32)> = residuals[..m]
+                .iter()
+                .enumerate()
+                .filter(|&(_, &r)| r >= eps || r.is_nan())
+                .map(|(e, &r)| (r, e as i32))
+                .collect();
+            if hot.is_empty() {
+                return vec![];
+            }
+            let k = budget.min(hot.len());
+            hot.select_nth_unstable_by(k - 1, cmp_desc);
+            hot.truncate(k);
+            sel = hot;
+        }
+        self.worker_commits[0] += sel.len() as u64;
+        sel.sort_unstable_by(cmp_desc);
+        vec![sel.into_iter().map(|(_, e)| e).collect()]
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed ^ SEED_MIX);
+        for q in &self.qs {
+            q.lock().unwrap().clear();
+        }
+        for q in &self.queued {
+            q.store(false, Ordering::Relaxed);
+        }
+    }
+
+    fn relaxed_stats(&self) -> Option<RelaxedStats> {
+        Some(RelaxedStats {
+            relaxed_pops: self.relaxed_pops,
+            rank_error_estimate: if self.rank_err_den == 0 {
+                0.0
+            } else {
+                self.rank_err_num as f64 / self.rank_err_den as f64
+            },
+            worker_commits: self.worker_commits.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::ising;
+    use crate::sched::test_util::ctx_with;
+
+    fn hot_residuals(g: &crate::Mrf) -> Vec<f32> {
+        let m = g.live_edges;
+        (0..g.num_edges)
+            .map(|e| if e < m { 0.1 + e as f32 / m as f32 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn single_worker_single_queue_is_deterministic() {
+        let mut rng = Rng::new(1);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let res = hot_residuals(&g);
+        let run = || {
+            let mut s = Multiqueue::new(1, 1, 0, 42);
+            let mut waves = Vec::new();
+            for _ in 0..4 {
+                waves.push(s.select(&ctx_with(&g, &res, 1e-4)));
+            }
+            waves
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn covers_all_hot_edges_with_large_batch() {
+        let mut rng = Rng::new(2);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let m = g.live_edges;
+        let res = hot_residuals(&g);
+        let mut s = Multiqueue::new(3, 0, m, 7); // budget 3m >= all hot
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        assert_eq!(waves.len(), 1);
+        let mut got = waves[0].clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..m as i32).collect::<Vec<_>>());
+        let stats = s.relaxed_stats().unwrap();
+        assert_eq!(stats.rank_error_estimate, 0.0, "full selection has no rank error");
+        assert!(stats.relaxed_pops >= m as u64);
+        assert_eq!(stats.worker_commits.iter().sum::<u64>(), m as u64);
+    }
+
+    #[test]
+    fn waves_never_duplicate_under_contention() {
+        let mut rng = Rng::new(3);
+        let g = ising::generate("i", 6, 2.0, &mut rng).unwrap();
+        let res = hot_residuals(&g);
+        let mut s = Multiqueue::new(8, 4, 5, 11);
+        for round in 0..10 {
+            let waves = s.select(&ctx_with(&g, &res, 1e-4));
+            let wave = &waves[0];
+            let set: std::collections::HashSet<_> = wave.iter().collect();
+            assert_eq!(set.len(), wave.len(), "round {round}: duplicate edges");
+            assert!(wave.iter().all(|&e| (e as usize) < g.live_edges));
+        }
+    }
+
+    #[test]
+    fn converged_and_stale_edges_filtered() {
+        let mut rng = Rng::new(4);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let m = g.live_edges;
+        let mut res = vec![0.0f32; g.num_edges];
+        res[3] = 0.5;
+        res[7] = 0.2;
+        let mut s = Multiqueue::new(2, 0, m, 5);
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        let mut got = waves[0].clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![3, 7]);
+        // Cool edge 3 (as a commit would); its queued entry must be
+        // certified out, not re-selected on a stale key.
+        res[3] = 0.0;
+        res[7] = 0.3; // stale key: must recycle and still select
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        assert_eq!(waves[0], vec![7]);
+    }
+
+    #[test]
+    fn empty_when_converged() {
+        let mut rng = Rng::new(5);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let res = vec![0.0f32; g.num_edges];
+        let mut s = Multiqueue::new(2, 0, 0, 5);
+        assert!(s.select(&ctx_with(&g, &res, 1e-4)).is_empty());
+    }
+
+    #[test]
+    fn reseed_repins_the_stream() {
+        let mut rng = Rng::new(6);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let res = hot_residuals(&g);
+        let mut a = Multiqueue::new(1, 2, 3, 100);
+        let mut b = Multiqueue::new(1, 2, 3, 200);
+        b.reseed(100);
+        for _ in 0..4 {
+            assert_eq!(
+                a.select(&ctx_with(&g, &res, 1e-4)),
+                b.select(&ctx_with(&g, &res, 1e-4)),
+                "reseed(100) must reproduce a seed-100 scheduler"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_residuals_never_selected_eager() {
+        let mut rng = Rng::new(7);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let mut res = vec![f32::NAN; g.num_edges];
+        res[3] = 0.5;
+        res[7] = 0.2;
+        let mut s = Multiqueue::new(2, 0, g.live_edges, 9);
+        let waves = s.select(&ctx_with(&g, &res, 1e-4));
+        let mut got = waves[0].clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![3, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one selection worker")]
+    fn rejects_zero_workers() {
+        Multiqueue::new(0, 0, 0, 1);
+    }
+}

@@ -111,6 +111,15 @@ impl Scheduler for Rnbp {
         crate::perfmodel::SelectKind::RandomFilter
     }
 
+    fn reseed(&mut self, seed: u64) {
+        // Exactly the state a fresh `Rnbp::new(.., seed)` would carry:
+        // the coin stream restarts and the lazy EdgeRatio memory drops,
+        // so a reseeded warm session replays a fresh one bitwise.
+        self.rng = Rng::new(seed ^ 0x5bd1_e995);
+        self.lazy_prev = None;
+        self.last_used_low = false;
+    }
+
     fn select(&mut self, ctx: &SchedContext) -> Vec<Vec<i32>> {
         if ctx.unconverged == 0 {
             return vec![];
@@ -259,6 +268,21 @@ mod tests {
         let mut a = Rnbp::new(0.4, 0.4, 99);
         let mut b = Rnbp::new(0.4, 0.4, 99);
         assert_eq!(a.select(&ctx_with(&g, &res, 1e-4)), b.select(&ctx_with(&g, &res, 1e-4)));
+    }
+
+    #[test]
+    fn reseed_matches_fresh_construction() {
+        let (g, res) = hot_graph();
+        let mut used = Rnbp::new(0.4, 0.4, 99);
+        used.select(&ctx_with(&g, &res, 1e-4)); // burn coin draws
+        used.reseed(123);
+        let mut fresh = Rnbp::new(0.4, 0.4, 123);
+        for _ in 0..3 {
+            assert_eq!(
+                used.select(&ctx_with(&g, &res, 1e-4)),
+                fresh.select(&ctx_with(&g, &res, 1e-4))
+            );
+        }
     }
 
     #[test]
