@@ -70,7 +70,9 @@ pub struct HarnessConfig {
     /// (last exact residual + accumulated commit-delta slack) stays
     /// below ε; `lazy` defers every dirty row into a bound-keyed queue
     /// and recomputes on scheduler demand only where the selection
-    /// boundary depends on it (see
+    /// boundary depends on it; `estimate` schedules directly on the
+    /// propagated bounds and materializes candidate rows only for
+    /// edges that actually commit (see
     /// [`crate::coordinator::ResidualRefresh`]).
     pub residual_refresh: ResidualRefresh,
     /// Engine selection.
@@ -157,7 +159,10 @@ impl HarnessConfig {
                     "exact" => ResidualRefresh::Exact,
                     "bounded" => ResidualRefresh::Bounded,
                     "lazy" => ResidualRefresh::Lazy,
-                    other => bail!("residual_refresh must be exact|bounded|lazy, got {other:?}"),
+                    "estimate" => ResidualRefresh::Estimate,
+                    other => {
+                        bail!("residual_refresh must be exact|bounded|lazy|estimate, got {other:?}")
+                    }
                 }
             }
             "engine" => {
@@ -347,6 +352,8 @@ mod tests {
         assert_eq!(c.residual_refresh, ResidualRefresh::Bounded);
         c.apply_args(&args(&["--residual-refresh", "lazy"])).unwrap();
         assert_eq!(c.residual_refresh, ResidualRefresh::Lazy);
+        c.apply_args(&args(&["--residual-refresh", "estimate"])).unwrap();
+        assert_eq!(c.residual_refresh, ResidualRefresh::Estimate);
         c.apply_args(&args(&["--residual-refresh=exact"])).unwrap();
         assert_eq!(c.residual_refresh, ResidualRefresh::Exact);
         assert!(c.apply_args(&args(&["--residual-refresh", "eager"])).is_err());

@@ -58,6 +58,14 @@ pub struct ConcurrentFrontier {
     pub res: Vec<f32>,
     /// Accumulated commit-delta slack since the last exact refresh.
     pub slack: Vec<f32>,
+    /// Per-edge slack contraction coefficient `[M]`: how much of a
+    /// dependency's commit delta can reach this edge's residual.
+    /// Initialized to the worst-case global constant
+    /// ([`crate::coordinator::SLACK_PER_DELTA`]); the coordinator
+    /// tightens it per edge from pairwise-potential mixing bounds when
+    /// the refresh mode and engine semiring allow (see
+    /// [`crate::coordinator::ResidualRefresh::Estimate`]).
+    pub coef: Vec<f32>,
     /// Selection key `[M]`: `residual_upper_bound(res, slack)` — exact
     /// where slack is zero, a sound upper bound otherwise.
     pub ub: Vec<f32>,
@@ -81,6 +89,7 @@ impl ConcurrentFrontier {
         ConcurrentFrontier {
             res: vec![0.0; m],
             slack: vec![0.0; m],
+            coef: vec![super::SLACK_PER_DELTA; m],
             ub: vec![0.0; m],
             dirty: vec![false; m],
             stale_ok: vec![false; m],
@@ -89,6 +98,15 @@ impl ConcurrentFrontier {
             claimed: (0..m).map(|_| AtomicBool::new(false)).collect(),
             commits: (0..m).map(|_| AtomicU32::new(0)).collect(),
         }
+    }
+
+    /// Install per-edge slack contraction coefficients (one per edge
+    /// slot). Values must be finite, non-negative, and no looser than
+    /// the worst-case constant they replace — the coordinator computes
+    /// them from pairwise mixing bounds, this just stores them.
+    pub fn set_coefficients(&mut self, coef: Vec<f32>) {
+        assert_eq!(coef.len(), self.res.len(), "one coefficient per edge slot");
+        self.coef = coef;
     }
 
     /// Number of edge slots.
@@ -220,6 +238,20 @@ mod tests {
         }
         f.reset_claims();
         assert!(f.try_claim(3), "claims must reset between rounds");
+    }
+
+    #[test]
+    fn coefficients_default_to_worst_case_and_are_settable() {
+        let mut f = ConcurrentFrontier::new(3, 1);
+        assert_eq!(f.coef, vec![crate::coordinator::SLACK_PER_DELTA; 3]);
+        f.set_coefficients(vec![0.5, 1.0, 4.0]);
+        assert_eq!(f.coef, vec![0.5, 1.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "one coefficient per edge slot")]
+    fn coefficient_length_mismatch_rejected() {
+        ConcurrentFrontier::new(3, 1).set_coefficients(vec![1.0]);
     }
 
     #[test]

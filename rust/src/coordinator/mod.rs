@@ -160,6 +160,66 @@
 //! K-regime contract `tests/incremental_parity.rs` documents — while
 //! soundness and convergence honesty hold regardless.
 //!
+//! ## Estimate refresh (`ResidualRefresh::Estimate`)
+//!
+//! Lazy refresh still spends one engine row per edge that could sit
+//! inside the selection boundary — O(selected) resolutions per wave,
+//! because its trajectory contract is bit-identity with `Exact`. The
+//! fourth rung gives that contract up: under
+//! [`RunParams::residual_refresh`] `= Estimate` selection ranks on the
+//! maintained residual *upper bounds alone* (Sutton & McCallum's
+//! zero-lookahead "upper bound on message dynamics" priority), no
+//! [`crate::sched::ResidualOracle`] exists, and candidate rows are
+//! materialized only for edges that actually *commit* — the wave's
+//! single mid-wave recompute ([`MessageEngine::candidates_into`] over
+//! the committed wave) is the only place estimates become exact.
+//!
+//! **Soundness of commit-time-only resolution.** Every argument the
+//! ladder already carries is a statement about *bounds*, not about
+//! where exactness lives: (1) each edge's key `res + coef·Σδ + cushion`
+//! dominates its true residual (the slack algebra of Bounded, now with
+//! per-edge coefficients — below); (2) convergence is declared only
+//! when every *bound* sits below ε, so an unconverged edge can never
+//! be certified away by an estimate — at worst an already-converged
+//! edge is selected (its commit is then a no-op whose measured δ = 0
+//! adds no slack); (3) committing an edge re-anchors it exactly — the
+//! mid-wave recompute feeds the commit a fresh candidate, the commit
+//! writes back `res = 0, slack = 0` (the post-commit exact-residual
+//! write-back), and the measured commit delta re-enters dependents'
+//! slack — so bounds cannot drift unboundedly: any edge whose bound
+//! stays hot eventually commits and snaps back to exact. The frontier
+//! drains for the same reason it does under exact residuals: committed
+//! edges leave the frontier at zero, and total bound mass is driven by
+//! true message movement. Trajectories are *not* digest-identical to
+//! `Exact` (an estimate may admit an edge whose true residual is below
+//! the cut); the contract is fixed-point marginal agreement plus bound
+//! domination at every selection boundary
+//! (`tests/estimate_refresh_parity.rs`), and the win condition is
+//! engine rows per converged run approaching O(committed) — strictly
+//! below lazy's O(selected) on narrow frontiers.
+//!
+//! **Per-edge contraction coefficients.** The global worst-case
+//! [`SLACK_PER_DELTA`] `= 4.0` treats every edge as maximally mixing.
+//! Ihler, Fisher & Willsky's dynamic-range bound is sharper: a cavity
+//! perturbation `δ` passes through edge `e`'s sum-product contraction
+//! attenuated by `tanh(half_range(ψ_e))`, where
+//! `half_range = (max − min)/2` over the live lanes of the pairwise
+//! log-potential — a near-uniform potential transmits almost nothing.
+//! At session build the coordinator computes
+//! `coef[e] = SLACK_PER_DELTA · tanh(half_range(ψ_e))` once per graph
+//! and stores it in [`ConcurrentFrontier::coef`]; `add_slack` charges
+//! `coef[e] · δ` instead of `4δ`, so bound growth is per-edge-tight
+//! (never looser than the constant it replaces, since `tanh ≤ 1`).
+//! Two gates keep this sound and compatible: the tanh argument only
+//! holds for sum-product updates
+//! ([`MessageEngine::sum_product_contraction`] — max-product argmax
+//! switches can transmit δ at full strength, so those runs keep the
+//! worst-case constant), and per-edge values are installed only under
+//! `Lazy`/`Estimate` — `Bounded` keeps the global constant because its
+//! bit-identity-with-`Exact` contract for rbp/rnbp (zero skips ever)
+//! is calibrated to slack ≥ 4ε per commit, and tightening it could
+//! turn a provably-never-taken skip into a taken one.
+//!
 //! ## Concurrent frontier
 //!
 //! The per-edge residual store (exact residual, slack, upper bound,
@@ -309,6 +369,15 @@ pub enum ResidualRefresh {
     /// — and lbp via the resolve-all default); narrow-frontier rs waves
     /// cost O(selected) rows instead of O(dirty). See module docs.
     Lazy,
+    /// Schedule on the residual upper bounds *alone* — zero-lookahead
+    /// estimate-first selection. No oracle, no resolution stream: the
+    /// step-3 refresh recomputes nothing (dirty edges keep their
+    /// propagated `res + coef·Σδ` bound as their selection key), and
+    /// candidate rows are materialized only for edges that actually
+    /// commit, with the commit writing exact residuals back. Marginals
+    /// agree with `Exact` at fixed-point tolerance (not digest
+    /// identity); engine rows approach O(committed). See module docs.
+    Estimate,
 }
 
 /// Per-commit slack factor: a dependent's residual moves at most
@@ -346,6 +415,39 @@ fn residual_upper_bound(res: f32, slack: f32) -> f32 {
     } else {
         res
     }
+}
+
+/// Per-edge slack contraction coefficients from pairwise-potential
+/// mixing bounds: `coef[e] = SLACK_PER_DELTA · tanh(half_range(ψ_e))`,
+/// where `half_range` is half the dynamic range `(max − min)/2` of the
+/// edge's pairwise log-potential over its live lanes (Ihler, Fisher &
+/// Willsky's sum-product contraction rate — a near-uniform potential
+/// transmits almost none of a cavity perturbation, a sharp one up to
+/// all of it). `tanh ≤ 1` makes every coefficient at most the global
+/// worst-case constant it refines; padded edge slots keep the
+/// constant. Only sound for sum-product engines
+/// ([`crate::engine::MessageEngine::sum_product_contraction`]) — the
+/// caller gates installation on that and on the refresh mode (module
+/// docs).
+pub fn contraction_coefficients(mrf: &Mrf) -> Vec<f32> {
+    let mut coef = vec![SLACK_PER_DELTA; mrf.num_edges];
+    for (e, c) in coef.iter_mut().enumerate().take(mrf.live_edges) {
+        let au = mrf.arity_of(mrf.src[e] as usize);
+        let av = mrf.arity_of(mrf.dst[e] as usize);
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for a in 0..au {
+            for b in 0..av {
+                let x = mrf.log_pair_at(e, a, b);
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if lo.is_finite() && hi.is_finite() {
+            *c = SLACK_PER_DELTA * ((hi - lo) * 0.5).tanh();
+        }
+    }
+    coef
 }
 
 /// Run parameters.
@@ -503,6 +605,14 @@ pub struct RunResult {
     /// over-counts only by deferred edges a wave recomputed mid-commit
     /// before any resolution).
     pub refresh_resolved: u64,
+    /// Candidate rows recomputed by mid-wave commit recomputes (a wave
+    /// containing a genuinely input-stale edge re-evaluates the whole
+    /// wave before committing). Counted in every mode; under
+    /// [`ResidualRefresh::Estimate`] this is where *all* row
+    /// materialization happens, so `refresh_rows +
+    /// commit_recompute_rows` ([`engine_rows`](Self::engine_rows)) is
+    /// the cross-mode engine-row comparison.
+    pub commit_recompute_rows: u64,
     /// Relaxed-queue pops this solve performed (certified-out and
     /// stale-recycled pops included). 0 for exact-selection schedulers.
     pub relaxed_pops: u64,
@@ -555,6 +665,19 @@ impl RunResult {
         self.message_updates + self.refresh_rows
     }
 
+    /// Total candidate rows the *engine* evaluated outside the priming
+    /// refresh: step-3 refresh rows (eager, bounded survivor, or
+    /// lazy-resolved) plus mid-wave commit recomputes. This is the
+    /// ladder's win metric — the quantity
+    /// `tests/estimate_refresh_parity.rs` asserts shrinks toward
+    /// O(committed) under estimate refresh. Distinct from
+    /// [`update_rows`](Self::update_rows), which measures committed
+    /// messages + refresh (the serving work measure) and deliberately
+    /// excludes mid-wave recomputes.
+    pub fn engine_rows(&self) -> u64 {
+        self.refresh_rows + self.commit_recompute_rows
+    }
+
     /// Run duration under a time basis; [`TimeBasis::Simulated`] falls
     /// back to wallclock when no simulated clock exists (serial runs).
     pub fn time(&self, basis: TimeBasis) -> f64 {
@@ -582,8 +705,10 @@ const FRONTIER_SHARDS: usize = 64;
 ///
 /// * `f.res` — last exactly computed residual per edge.
 /// * `f.slack` — accumulated movement bound since `res[e]` was
-///   computed: `Σ SLACK_PER_DELTA · δ` over commits that dirtied the
-///   edge. Always zero under `Exact` refresh.
+///   computed: `Σ coef[e] · δ` over commits that dirtied the edge
+///   (`f.coef` holds [`SLACK_PER_DELTA`] everywhere unless per-edge
+///   contraction coefficients were installed — module docs). Always
+///   zero under `Exact` refresh.
 /// * `f.ub` — residual upper bound, `residual_upper_bound(res, slack)`
 ///   kept materialized. This is what schedulers and the convergence
 ///   check read; under `Exact` refresh it equals `res` bit for bit.
@@ -612,12 +737,16 @@ struct State {
     /// selection).
     lookahead: Vec<i32>,
     arity: usize,
-    /// Bounded or lazy: accumulate commit-delta slack into dependents'
-    /// residual upper bounds.
+    /// Bounded, lazy, or estimate: accumulate commit-delta slack into
+    /// dependents' residual upper bounds.
     track_slack: bool,
     /// Lazy: step 3 defers recomputes into `heap` instead of issuing
     /// them.
     lazy: bool,
+    /// Estimate: step 3 recomputes nothing at all — dirty edges keep
+    /// their propagated bound as their selection key, and rows are
+    /// materialized only by the mid-wave commit recompute.
+    estimate: bool,
 }
 
 impl State {
@@ -634,6 +763,7 @@ impl State {
             arity: a,
             track_slack: mode != ResidualRefresh::Exact,
             lazy,
+            estimate: mode == ResidualRefresh::Estimate,
         }
     }
 
@@ -654,10 +784,13 @@ impl State {
         self.f.ub[e] = r;
     }
 
-    /// Accumulate one commit's movement bound into a dependent edge.
+    /// Accumulate one commit's movement bound into a dependent edge,
+    /// attenuated by the edge's contraction coefficient (the global
+    /// worst-case constant unless per-edge mixing bounds were
+    /// installed — see [`contraction_coefficients`]).
     #[inline]
     fn add_slack(&mut self, e: usize, delta: f32) {
-        self.f.slack[e] += SLACK_PER_DELTA * delta;
+        self.f.slack[e] += self.f.coef[e] * delta;
         self.f.ub[e] = residual_upper_bound(self.f.res[e], self.f.slack[e]);
         if self.lazy && self.heap.contains(e) {
             // already-deferred edge: re-key to the grown bound so the
@@ -1022,6 +1155,7 @@ struct Counters {
     refresh_skipped: u64,
     refresh_deferred: u64,
     refresh_resolved: u64,
+    commit_recompute_rows: u64,
 }
 
 /// The step-3 dirty-list refresh, shared by the per-iteration refresh
@@ -1044,7 +1178,12 @@ struct Counters {
 /// really is input-stale until resolution), so a re-dirtying commit
 /// only grows its slack without re-queuing it here, and deferral is
 /// counted once per heap entry, mirroring `refresh_skipped`'s
-/// once-per-dirtying accounting.
+/// once-per-dirtying accounting. Estimate mode refreshes nothing and
+/// defers into *no* structure: the maintained bound already is the
+/// selection key, `dirty` stays set so a wave that selects the edge
+/// forces the sound mid-wave recompute (the commit-time
+/// materialization), and each drained entry counts one deferral so
+/// the deferred column stays comparable with lazy's.
 #[allow(clippy::too_many_arguments)]
 fn refresh_dirty_step(
     mrf: &Mrf,
@@ -1076,6 +1215,20 @@ fn refresh_dirty_step(
                 c.refresh_deferred += 1;
             }
             st.heap.set(e, st.f.ub[e]);
+        }
+        dirty_list.clear();
+    } else if st.estimate {
+        // Zero-lookahead: no recompute, no queue. The dirty edge's
+        // maintained bound (`f.ub`) is its selection key as-is; the
+        // edge stays `dirty` so a wave admitting it triggers the
+        // mid-wave commit recompute — the only place estimates become
+        // exact. Drained entries count as deferrals (once per
+        // dirtying, like lazy: `mark_dirty` de-duplicates while the
+        // edge stays dirty).
+        for &ei in dirty_list.iter() {
+            if st.f.dirty[ei as usize] {
+                c.refresh_deferred += 1;
+            }
         }
         dirty_list.clear();
     } else if st.track_slack {
@@ -1155,9 +1308,22 @@ fn relaxed_delta(
 /// moves by at most the normalization-doubled `2δ` (module docs), well
 /// inside the [`SLACK_PER_DELTA`] envelope the bounded/lazy upper
 /// bounds accumulate.
+/// A patched out-edge that was ε-stale (`stale_ok`) additionally drops
+/// its certification and returns to the fresh-dirty state: the skip
+/// was issued against *pre-patch* inputs, and letting it leak would
+/// let a later wave commit the pre-evidence cached candidate without
+/// the mid-wave recompute (`dirty && !stale_ok` is the recompute
+/// predicate) — under bounded refresh a perf wrinkle, under estimate
+/// refresh (where the commit recompute is the *only* exactness point)
+/// an unsoundness. The accumulated slack stays: it still anchors the
+/// bound to the last exact residual, and the patch's own `coef·δ`
+/// lands on top, so the bound re-covers the true (post-patch)
+/// residual — the regression test
+/// `evidence_on_stale_edge_drops_certification` pins both halves.
 fn dirty_unary_dependents(mrf: &Mrf, st: &mut State, v: usize, delta: f32) {
     for e in mrf.outgoing(v) {
         st.mark_dirty(e);
+        st.f.stale_ok[e] = false;
         if st.track_slack {
             st.add_slack(e, delta);
         }
@@ -1349,12 +1515,27 @@ pub struct Session<'a> {
 impl<'a> Session<'a> {
     fn from_parts(
         graph: GraphSlot<'a>,
-        engine: EngineSlot<'a>,
+        mut engine: EngineSlot<'a>,
         scheduler: SchedSlot<'a>,
         params: RunParams,
         base_unary: Vec<f32>,
     ) -> Session<'a> {
-        let st = State::new(graph.get(), params.residual_refresh);
+        let mut st = State::new(graph.get(), params.residual_refresh);
+        // Per-edge contraction coefficients (module docs): installed
+        // only where both gates pass — the refresh mode must tolerate
+        // tighter bounds (Lazy's identity proofs are tightness-
+        // independent, Estimate is designed around them; Bounded's
+        // rbp/rnbp bit-identity calibration is not), and the engine's
+        // update rule must actually contract by the pairwise dynamic
+        // range (sum-product only). Everyone else keeps the worst-case
+        // constant the frontier was constructed with.
+        if matches!(
+            params.residual_refresh,
+            ResidualRefresh::Lazy | ResidualRefresh::Estimate
+        ) && engine.get_mut().sum_product_contraction()
+        {
+            st.f.set_coefficients(contraction_coefficients(graph.get()));
+        }
         Session {
             graph,
             engine,
@@ -1534,11 +1715,19 @@ impl<'a> Session<'a> {
         let live = mrf.live_edges;
         let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
         let lazy = params.residual_refresh == ResidualRefresh::Lazy;
+        let estimate = params.residual_refresh == ResidualRefresh::Estimate;
         let mut phases = PhaseTimer::new();
         let mut sim_phases = PhaseTimer::new();
         let mut sim_wall = 0.0f64;
         let model = params.cost_model;
-        let kind = scheduler.kind();
+        // Estimate-mode selection has no resolve stream: sort-class
+        // selections rank pre-materialized bound keys, billed as the
+        // fused scan+partial-select Estimate kernel.
+        let kind = if estimate {
+            scheduler.kind().estimated()
+        } else {
+            scheduler.kind()
+        };
         // Relaxed schedulers accumulate pop/commit tallies over their
         // lifetime; snapshot here so the RunResult reports this solve's
         // delta (rank error stays cumulative — it is a ratio).
@@ -1693,7 +1882,15 @@ impl<'a> Session<'a> {
                 // claim flags; everything else takes the default
                 // compatibility path, which forwards to select() —
                 // bit-identical to the pre-frontier coordinator.
-                phases.time("select", || scheduler.select_concurrent(&ctx, &st.f))
+                // Estimate mode routes through the select_estimate
+                // seam: same bound array (`f.ub` is the estimate), but
+                // schedulers may skip certification work that only
+                // exists to pin exactness.
+                if estimate {
+                    phases.time("select", || scheduler.select_estimate(&ctx, &st.f))
+                } else {
+                    phases.time("select", || scheduler.select_concurrent(&ctx, &st.f))
+                }
             };
             if let Some(m) = &model {
                 let total: usize = waves.iter().map(|w| w.len()).sum();
@@ -1741,6 +1938,10 @@ impl<'a> Session<'a> {
                         engine.candidates_into(mrf, &st.logm, wave, batch)
                     })?;
                     c.engine_calls += 1;
+                    // Commit-time materialization (all modes; under
+                    // estimate this is the *only* place bound
+                    // estimates become exact rows).
+                    c.commit_recompute_rows += wave.len() as u64;
                     phases.time("commit", || st.commit(mrf, wave, Some(&*batch), engine));
                 } else {
                     phases.time("commit", || st.commit(mrf, wave, None, engine));
@@ -1823,6 +2024,7 @@ impl<'a> Session<'a> {
             refresh_skipped: c.refresh_skipped,
             refresh_deferred: c.refresh_deferred,
             refresh_resolved: c.refresh_resolved,
+            commit_recompute_rows: c.commit_recompute_rows,
             relaxed_pops,
             rank_error_estimate,
             worker_commits,
@@ -2121,7 +2323,16 @@ mod tests {
         }
     }
 
-    /// Engine whose residuals are always NaN — a fully divergent run.
+    /// Engine whose rows *and* residuals are always NaN — a fully
+    /// divergent run. The rows must be NaN, not some constant finite
+    /// filler: a constant-row engine reaches a legitimate fixed point
+    /// (commit copies the rows into `logm`, every later candidate
+    /// equals it, and the coordinator's sound "unchanged inputs ⇒
+    /// residual 0" reasoning rightly converges), which silently
+    /// un-poisons the run this stub exists to keep poisoned. NaN rows
+    /// never compare equal to anything, so every commit is "changed"
+    /// with a NaN `row_delta_norm`, and the poison self-propagates
+    /// through slack in every refresh mode.
     struct NanEngine;
 
     impl MessageEngine for NanEngine {
@@ -2133,7 +2344,7 @@ mod tests {
             out: &mut crate::engine::CandidateBatch,
         ) -> Result<()> {
             out.new_m.clear();
-            out.new_m.resize(frontier.len() * mrf.max_arity, 0.0);
+            out.new_m.resize(frontier.len() * mrf.max_arity, f32::NAN);
             out.residuals.clear();
             out.residuals.resize(frontier.len(), f32::NAN);
             Ok(())
@@ -2158,6 +2369,7 @@ mod tests {
             ResidualRefresh::Exact,
             ResidualRefresh::Bounded,
             ResidualRefresh::Lazy,
+            ResidualRefresh::Estimate,
         ] {
             let params = RunParams {
                 max_iterations: 5,
@@ -2509,5 +2721,156 @@ mod tests {
             residual_upper_bound(0.25, 0.5),
             0.25 + 0.5 + SLACK_CUSHION
         );
+    }
+
+    #[test]
+    fn contraction_coefficients_tighten_the_worst_case() {
+        let mut rng = Rng::new(51);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let coef = contraction_coefficients(&g);
+        assert_eq!(coef.len(), g.num_edges);
+        for (e, &c) in coef.iter().enumerate().take(g.live_edges) {
+            // tanh < 1 for any finite potential range: every live edge
+            // strictly beats the global constant, and a non-constant
+            // pairwise potential keeps the coefficient positive
+            assert!(c > 0.0 && c < SLACK_PER_DELTA, "edge {e}: coef {c}");
+        }
+        // padded envelope slots never see a commit delta, but keep the
+        // sound worst-case constant rather than an uninitialized value
+        for &c in &coef[g.live_edges..] {
+            assert_eq!(c, SLACK_PER_DELTA);
+        }
+        // monotone in the potential range: a colder (weaker-coupling)
+        // graph mixes faster, so its coefficients must come out at or
+        // below a hotter one's on the same topology and draw stream
+        let mut rng_a = Rng::new(52);
+        let mut rng_b = Rng::new(52);
+        let weak = ising::generate("i", 6, 0.2, &mut rng_a).unwrap();
+        let strong = ising::generate("i", 6, 3.0, &mut rng_b).unwrap();
+        let (cw, cs) = (contraction_coefficients(&weak), contraction_coefficients(&strong));
+        let (aw, as_): (f32, f32) = (
+            cw[..weak.live_edges].iter().sum::<f32>() / weak.live_edges as f32,
+            cs[..strong.live_edges].iter().sum::<f32>() / strong.live_edges as f32,
+        );
+        assert!(aw < as_, "weak-coupling mean coef {aw} vs strong {as_}");
+    }
+
+    #[test]
+    fn per_edge_coefficients_install_only_where_sound() {
+        let mut rng = Rng::new(53);
+        let g = ising::generate("i", 5, 1.5, &mut rng).unwrap();
+        let tightened = |s: &Session| {
+            s.st.f.coef[..g.live_edges]
+                .iter()
+                .any(|&c| c < SLACK_PER_DELTA)
+        };
+        // bounded keeps the global constant: PR 3's rbp/rnbp
+        // bounded≡exact bitwise-parity pins ride on slack values, and
+        // tightening them there would shift trajectories
+        let bounded = owned_session(
+            &g,
+            Box::new(Lbp::new()),
+            RunParams { residual_refresh: ResidualRefresh::Bounded, ..Default::default() },
+        );
+        assert!(!tightened(&bounded), "bounded must keep SLACK_PER_DELTA");
+        // estimate + sum-product: per-edge mixing bounds installed
+        let estimate = owned_session(
+            &g,
+            Box::new(Lbp::new()),
+            RunParams { residual_refresh: ResidualRefresh::Estimate, ..Default::default() },
+        );
+        assert!(tightened(&estimate), "estimate + sum-product must tighten");
+        // max-product breaks the tanh bound (argmax switches): the
+        // engine capability gate must refuse the tightening
+        let opts = crate::engine::UpdateOptions {
+            semiring: crate::engine::Semiring::MaxProduct,
+            ..Default::default()
+        };
+        let maxprod = SessionBuilder::new(
+            g.clone(),
+            Box::new(NativeEngine::with_options(opts)),
+            Box::new(Lbp::new()),
+        )
+        .with_params(RunParams {
+            residual_refresh: ResidualRefresh::Estimate,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+        assert!(!tightened(&maxprod), "max-product must keep SLACK_PER_DELTA");
+    }
+
+    #[test]
+    fn estimate_mode_defers_all_refresh_to_commit_time() {
+        let mut rng = Rng::new(54);
+        let g = ising::generate("i", 6, 1.0, &mut rng).unwrap();
+        let base = RunParams { want_marginals: true, timeout: 30.0, ..Default::default() };
+        let exact = run_with(&g, &mut Lbp::new(), &base);
+        let est = run_with(
+            &g,
+            &mut Lbp::new(),
+            &RunParams { residual_refresh: ResidualRefresh::Estimate, ..base },
+        );
+        assert!(exact.converged() && est.converged(), "{:?} / {:?}", exact.stop, est.stop);
+        // step 3 never touches the engine: estimates ride the
+        // propagated bounds until a wave commits them
+        assert_eq!(est.refresh_rows, 0, "estimate must not refresh");
+        assert_eq!(est.refresh_resolved, 0, "estimate has no resolve stream");
+        assert_eq!(est.refresh_skipped, 0, "estimate defers, it never skips");
+        assert!(est.refresh_deferred > 0, "nothing was ever deferred");
+        // ...so every engine row after priming is a commit-time
+        // materialization, and the accounting identity holds
+        assert!(est.commit_recompute_rows > 0, "no wave ever materialized rows");
+        assert_eq!(est.engine_rows(), est.commit_recompute_rows);
+        assert_eq!(exact.commit_recompute_rows, 0, "exact recomputes in step 3, not mid-wave");
+        // same fixed point as exact at float tolerance
+        let (me, ms) = (exact.marginals.unwrap(), est.marginals.unwrap());
+        for (x, y) in me.iter().zip(&ms) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn evidence_on_stale_edge_drops_certification() {
+        // Regression: a bounded-mode ε-skip certifies an edge's cached
+        // candidate against *pre-patch* inputs. Evidence on its source
+        // vertex must revoke that certification (else a later wave
+        // commits the pre-evidence candidate without the mid-wave
+        // recompute — under estimate refresh, the only exactness
+        // point), while the accumulated slack keeps covering the true
+        // post-patch residual.
+        let mut rng = Rng::new(55);
+        let g = ising::generate("i", 6, 1.5, &mut rng).unwrap();
+        let params = RunParams {
+            residual_refresh: ResidualRefresh::Bounded,
+            timeout: 30.0,
+            ..Default::default()
+        };
+        let mut session = owned_session(&g, Box::new(Lbp::new()), params);
+        session.solve().unwrap();
+        // put edge 0 in the certified ε-stale state a bounded skip
+        // leaves behind (residual state stays the genuine converged one)
+        let e = 0usize;
+        let v = g.src[e] as usize;
+        session.st.f.stale_ok[e] = true;
+        session.st.f.dirty[e] = false;
+        session.apply_evidence(&[(v, &[0.9, -0.9])]).unwrap();
+        assert!(
+            !session.st.f.stale_ok[e],
+            "evidence must revoke the pre-patch ε-stale certification"
+        );
+        assert!(session.st.f.dirty[e], "patched out-edge must be dirty");
+        assert!(session.st.f.slack[e] > 0.0, "patch delta must enter the slack");
+        // the grown bound still covers the true (post-patch) residual
+        let mut eng = NativeEngine::new();
+        let mut row = vec![0.0f32; g.max_arity];
+        let truth = eng.candidate_row(session.graph(), &session.st.logm, e, &mut row);
+        assert!(
+            session.st.f.ub[e] + SLACK_CUSHION >= truth,
+            "bound {} < true residual {truth}",
+            session.st.f.ub[e]
+        );
+        let r = session.solve().unwrap();
+        assert!(r.converged(), "{:?}", r.stop);
     }
 }

@@ -201,6 +201,23 @@ pub trait MessageEngine {
     /// End incremental belief maintenance (default no-op).
     fn end_tracking(&mut self) {}
 
+    /// Whether this engine's update rule satisfies the *sum-product
+    /// contraction* property the coordinator's per-edge slack
+    /// coefficients rely on: a max-norm perturbation `delta` on an
+    /// input message moves edge `e`'s output by at most
+    /// `tanh(half_range(psi_e)) * 2 * delta` (Ihler, Fisher & Willsky's
+    /// dynamic-range bound for sum-product BP). Max-product contraction
+    /// is *not* bounded by the pairwise dynamic range this way (argmax
+    /// switches can transfer a perturbation at full strength), and a
+    /// damped update changes the constant, so the conservative default
+    /// is `false` — the coordinator then keeps the worst-case global
+    /// [`crate::coordinator::SLACK_PER_DELTA`] coefficient on every
+    /// edge. The CPU engines override this by inspecting their
+    /// configured [`UpdateOptions`].
+    fn sum_product_contraction(&self) -> bool {
+        false
+    }
+
     /// Engine label for reports.
     fn name(&self) -> &'static str;
 }

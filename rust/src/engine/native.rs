@@ -151,6 +151,15 @@ impl MessageEngine for NativeEngine {
         self.cache.end_tracking();
     }
 
+    fn sum_product_contraction(&self) -> bool {
+        // Undamped sum-product is exactly the regime Ihler's dynamic-
+        // range contraction bound covers; damping only *shrinks* the
+        // update (`new = (1-d)*cand + d*old`), so the undamped
+        // coefficient stays sound for any d in [0, 1). Max-product is
+        // excluded — argmax switches break the tanh bound.
+        self.opts.semiring == super::Semiring::SumProduct
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }

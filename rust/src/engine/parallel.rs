@@ -233,6 +233,13 @@ impl MessageEngine for ParallelEngine {
         self.cache.end_tracking();
     }
 
+    fn sum_product_contraction(&self) -> bool {
+        // Same argument as the native engine (bit-identical math):
+        // sum-product updates obey the dynamic-range contraction bound,
+        // damping only shrinks them further; max-product does not.
+        self.opts.semiring == super::Semiring::SumProduct
+    }
+
     fn name(&self) -> &'static str {
         "parallel"
     }

@@ -209,5 +209,7 @@ mod tests {
         assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Bounded);
         cfg.residual_refresh = ResidualRefresh::Lazy;
         assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Lazy);
+        cfg.residual_refresh = ResidualRefresh::Estimate;
+        assert_eq!(gpu_params(&cfg).residual_refresh, ResidualRefresh::Estimate);
     }
 }

@@ -64,16 +64,20 @@ COMMON FLAGS (also settable via --config file.toml):
   --belief-refresh-every K   incremental belief maintenance drift guard:
                         full re-gather every K committed rows
                         (default 64; 0 = re-gather every engine call)
-  --residual-refresh exact|bounded|lazy   dirty-list refresh policy
-                        (default exact; bounded skips recomputing edges
-                        whose residual upper bound stays below eps —
-                        sound, same fixed point; saves engine work for
+  --residual-refresh exact|bounded|lazy|estimate   dirty-list refresh
+                        policy (default exact; bounded skips recomputing
+                        edges whose residual upper bound stays below eps
+                        — sound, same fixed point; saves engine work for
                         rs/lbp, no-op for the eps-filtered rbp/rnbp;
                         lazy defers every dirty row and recomputes on
                         scheduler demand only inside the selection
                         boundary — identical trajectories to exact for
                         the built-ins, O(selected) rows on narrow
-                        rs/rbp frontiers)
+                        rs/rbp frontiers; estimate never refreshes at
+                        selection time at all — it ranks on propagated
+                        per-edge-contraction bounds and materializes
+                        candidate rows only for edges that commit,
+                        O(committed) rows, same fixed point)
   --out-dir DIR         JSON report directory (default results/)
 
 RUN FLAGS:
@@ -281,11 +285,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
     );
     println!(
         "  dirty refresh: {} rows recomputed, {} skipped by residual bound, \
-         {} deferred ({} resolved on demand)",
+         {} deferred ({} resolved on demand), {} recomputed at commit \
+         ({} engine rows total)",
         result.refresh_rows,
         result.refresh_skipped,
         result.refresh_deferred,
-        result.refresh_resolved
+        result.refresh_resolved,
+        result.commit_recompute_rows,
+        result.engine_rows()
     );
     if result.relaxed_pops > 0 {
         let commits: Vec<String> =

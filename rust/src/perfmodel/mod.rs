@@ -50,6 +50,29 @@ pub enum SelectKind {
     /// scans fan out over shard stripes, pops touch two random queue
     /// heads; no global sort, no global heap contention.
     Relaxed,
+    /// Estimate refresh (`--residual-refresh estimate`): selection
+    /// ranks pre-materialized bound estimates, with no residual
+    /// recompute stream interleaved — one scan of the m bound keys
+    /// fused with a partial select over the frontier. Sort-class and
+    /// relaxed selections all collapse to this shape because the
+    /// expensive part they model (full radix sort of fresh keys /
+    /// per-pop certification) only exists to rank *exact* residuals.
+    Estimate,
+}
+
+impl SelectKind {
+    /// The selection mechanism this kind degrades to under estimate
+    /// refresh: ranking pre-propagated bound keys. `All` stays free
+    /// (lbp never ranks anything) and `Serial` stays serial; every
+    /// ranking selection becomes the fused scan+partial-select
+    /// [`Estimate`](SelectKind::Estimate) kernel.
+    pub fn estimated(self) -> SelectKind {
+        match self {
+            SelectKind::All => SelectKind::All,
+            SelectKind::Serial => SelectKind::Serial,
+            _ => SelectKind::Estimate,
+        }
+    }
 }
 
 /// Calibrated device constants.
@@ -145,6 +168,17 @@ impl CostModel {
             + 2.0 * frontier_total as f64 / self.sort_rate
     }
 
+    /// Estimate-mode selection: one bandwidth-bound scan of the m
+    /// maintained bound keys fused with a partial select (heap-of-k /
+    /// nth-element style) over the frontier at the sort's per-key
+    /// shuffle rate. No resolve stream and no full m-key sort: the
+    /// bounds were maintained incrementally by commits, so selection
+    /// only *reads* them — the whole point of the estimate rung.
+    pub fn estimate_select_cost(&self, m: usize, frontier_total: usize) -> f64 {
+        self.launch_s + (m as f64 * 4.0) / self.mem_bw
+            + 2.0 * frontier_total as f64 / self.sort_rate
+    }
+
     /// Vertex-residual reduction (scan all m edge residuals), vertex-key
     /// sort, and splash BFS build touching ~budget tree edges.
     pub fn splash_select_cost(&self, m: usize, v: usize, budget: usize) -> f64 {
@@ -171,6 +205,7 @@ impl CostModel {
             SelectKind::RandomFilter => self.filter_cost(m_live),
             SelectKind::Serial => 0.0,
             SelectKind::Relaxed => self.relaxed_select_cost(m_live, frontier_total),
+            SelectKind::Estimate => self.estimate_select_cost(m_live, frontier_total),
         }
     }
 }
@@ -250,6 +285,43 @@ mod tests {
                 < m.select_cost(SelectKind::SortTopK, 100_000, 100, 500)
         );
         assert!(m.select_cost(SelectKind::Relaxed, 1000, 100, 500) > 0.0);
+    }
+
+    #[test]
+    fn estimated_kind_mapping() {
+        // ranking selections collapse to the fused scan+partial-select;
+        // the non-ranking kinds keep their (free / serial) semantics
+        assert_eq!(SelectKind::All.estimated(), SelectKind::All);
+        assert_eq!(SelectKind::Serial.estimated(), SelectKind::Serial);
+        for k in [
+            SelectKind::SortTopK,
+            SelectKind::VertexSortSplash,
+            SelectKind::RandomFilter,
+            SelectKind::Relaxed,
+            SelectKind::Estimate,
+        ] {
+            assert_eq!(k.estimated(), SelectKind::Estimate);
+        }
+    }
+
+    #[test]
+    fn estimate_select_undercuts_sort_and_has_no_resolve_stream() {
+        // The estimate rung's modeled win: selection reads maintained
+        // bound keys (scan + partial select over the frontier) instead
+        // of radix-sorting all m fresh residuals — so it must beat
+        // SortTopK on narrow frontiers, and its cost must not grow with
+        // any resolve-row stream (there is none to bill).
+        let m = CostModel::v100();
+        for edges in [39_600usize, 199_998] {
+            let frontier = edges / 256;
+            let est = m.select_cost(SelectKind::Estimate, edges, 0, frontier);
+            assert!(est > 0.0);
+            assert!(est < m.select_cost(SelectKind::SortTopK, edges, 0, frontier));
+        }
+        // scan term is linear in m, select term linear in the frontier
+        let base = m.estimate_select_cost(10_000, 100);
+        assert!(m.estimate_select_cost(20_000, 100) > base);
+        assert!(m.estimate_select_cost(10_000, 200) > base);
     }
 
     #[test]

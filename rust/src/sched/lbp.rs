@@ -4,6 +4,13 @@
 //! previous iteration's messages (paper §II-B). Full parallelism, zero
 //! selection overhead, work-inefficient, and only partially convergent on
 //! hard graphs — the baseline every figure compares against.
+//!
+//! Residual-refresh rungs are near-degenerate here: selection ignores
+//! the residual values entirely (only the unconverged count gates it),
+//! so lbp rides every trait default — under `estimate` it selects all
+//! live edges off unresolved bounds and every row materializes at
+//! commit time, which for a full frontier is the same O(M) work per
+//! iteration in different clothing.
 
 use super::{SchedContext, Scheduler};
 

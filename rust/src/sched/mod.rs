@@ -217,6 +217,32 @@ pub trait Scheduler {
         self.select(ctx)
     }
 
+    /// Select the next frontier under estimate refresh
+    /// (`--residual-refresh estimate`): `ctx.residuals` holds
+    /// *propagated bound estimates* (`res + slack·coef + cushion`), not
+    /// exact residuals, and no resolution facility exists — rank on the
+    /// estimates alone. Exactness is restored downstream: the
+    /// coordinator recomputes any input-stale selected row in the
+    /// mid-wave commit materialization and writes the exact residual
+    /// back post-commit, so over-estimates cost at most a wasted
+    /// selection slot, never a wrong message value.
+    ///
+    /// The default delegates to
+    /// [`select_concurrent`](Self::select_concurrent) — which already
+    /// ranks on whatever array the coordinator passes — so every
+    /// scheduler is estimate-safe without opting in. Overriders should
+    /// use this hook to *drop* certification work that only exists to
+    /// pin exact-mode parity (lazy resolution boundaries, per-pop
+    /// certification): under estimate refresh there is nothing exact to
+    /// be faithful to until commit time.
+    fn select_estimate(
+        &mut self,
+        ctx: &SchedContext,
+        frontier: &ConcurrentFrontier,
+    ) -> Vec<Vec<i32>> {
+        self.select_concurrent(ctx, frontier)
+    }
+
     /// Re-pin the scheduler's random stream to `seed`, discarding any
     /// in-flight randomized state (rnbp's coin stream, mq's queues), so
     /// warm-session solves are replayable: after `reseed(s)` the

@@ -44,6 +44,13 @@
 //! resolved at all (rbp by contrast must resolve every bound that
 //! could crack its exact top-k boundary).
 //!
+//! Under `--residual-refresh estimate` mq keeps the concurrent relaxed
+//! path unchanged (the `select_estimate` trait default routes to
+//! `select_concurrent`): pops rank on the propagated bound estimates,
+//! and even per-pop certification is demoted to commit time — the
+//! coordinator materializes candidate rows for committed edges whose
+//! residuals were never resolved, then writes exact residuals back.
+//!
 //! Because pop order depends on worker interleaving, mq runs at `W >=
 //! 2` are nondeterministic by design; harnesses assert seeded
 //! convergence-rate *envelopes* and fixed-point agreement instead of
@@ -64,13 +71,42 @@ const SEED_MIX: u64 = 0x6d71_5f72_656c_6178; // "mq_relax"
 /// p = 1/16.
 const AUTO_FRONTIER_DIVISOR: usize = 16;
 
-/// Queue entry ordered by residual key (non-negative f32 bits preserve
-/// `total_cmp` order), ties to the smaller edge id — the same total
-/// order the other schedulers canonicalize on.
+/// Queue entry ordered by residual key (see [`key_of`]), ties to the
+/// smaller edge id — the same total order the other schedulers
+/// canonicalize on.
 #[derive(Clone, Copy, PartialEq, Eq)]
 struct QEntry {
     key: u32,
     edge: i32,
+}
+
+/// `total_cmp`-consistent priority key: sign-fold the IEEE-754 bits so
+/// that unsigned comparison of keys equals `f32::total_cmp` of the
+/// values across the *entire* f32 range. Raw `to_bits` (the previous
+/// key) only orders correctly for non-negative payloads — a NaN bound
+/// (sign bit clear, exponent all-ones) silently outranked every finite
+/// residual by bit pattern while a negative value would have outranked
+/// +inf, so any non-canonical payload reaching a queue corrupted pop
+/// order without tripping an assert. Under the fold, +NaN still sits
+/// above +inf — exactly `total_cmp`'s order, which the lazy refill
+/// relies on to resolve poisoned bounds first — but it does so by the
+/// documented total order, not by accident of bit layout.
+#[inline]
+fn key_of(r: f32) -> u32 {
+    let bits = r.to_bits();
+    if bits & 0x8000_0000 != 0 {
+        !bits
+    } else {
+        bits | 0x8000_0000
+    }
+}
+
+/// Checked edge-id narrowing for wave construction. Edge counts beyond
+/// `i32::MAX` would previously wrap silently via `e as i32` and emit
+/// negative edge ids into waves; fail loudly instead.
+#[inline]
+fn edge_id(e: usize) -> i32 {
+    i32::try_from(e).expect("edge index exceeds i32 wave ids")
 }
 
 impl Ord for QEntry {
@@ -204,7 +240,7 @@ impl Multiqueue {
                 .iter()
                 .enumerate()
                 .filter(|&(_, &r)| r >= eps)
-                .map(|(e, &r)| (r, e as i32))
+                .map(|(e, &r)| (r, edge_id(e)))
                 .collect();
             if hot.is_empty() {
                 return vec![];
@@ -319,7 +355,7 @@ fn worker_round(
         let r = residuals[e];
         if r >= eps && !queued[e].swap(true, Ordering::Relaxed) {
             let qi = rng.below(qs.len());
-            qs[qi].lock().unwrap().push(QEntry { key: r.to_bits(), edge: e as i32 });
+            qs[qi].lock().unwrap().push(QEntry { key: key_of(r), edge: edge_id(e) });
         }
     }
 
@@ -339,11 +375,11 @@ fn worker_round(
             queued[e].store(false, Ordering::Relaxed);
             continue;
         }
-        if cur.to_bits() != key {
+        if key_of(cur) != key {
             // Stale priority: recycle with the fresh key. The entry
             // stays unique — we hold the only copy right here.
             let qi = rng.below(qs.len());
-            qs[qi].lock().unwrap().push(QEntry { key: cur.to_bits(), edge });
+            qs[qi].lock().unwrap().push(QEntry { key: key_of(cur), edge });
             continue;
         }
         queued[e].store(false, Ordering::Relaxed);
@@ -455,7 +491,7 @@ impl Scheduler for Multiqueue {
                 let r = bounds[e];
                 if (r >= eps || r.is_nan()) && !self.queued[e].swap(true, Ordering::Relaxed) {
                     let qi = self.rng.below(self.qs.len());
-                    self.qs[qi].lock().unwrap().push(QEntry { key: r.to_bits(), edge: e as i32 });
+                    self.qs[qi].lock().unwrap().push(QEntry { key: key_of(r), edge: edge_id(e) });
                 }
             }
         }
@@ -480,9 +516,9 @@ impl Scheduler for Multiqueue {
                 self.queued[e].store(false, Ordering::Relaxed);
                 continue;
             }
-            if cur.to_bits() != key {
+            if key_of(cur) != key {
                 let qi = self.rng.below(self.qs.len());
-                self.qs[qi].lock().unwrap().push(QEntry { key: cur.to_bits(), edge });
+                self.qs[qi].lock().unwrap().push(QEntry { key: key_of(cur), edge });
                 continue;
             }
             self.queued[e].store(false, Ordering::Relaxed);
@@ -502,7 +538,7 @@ impl Scheduler for Multiqueue {
                 .iter()
                 .enumerate()
                 .filter(|&(_, &r)| r >= eps || r.is_nan())
-                .map(|(e, &r)| (r, e as i32))
+                .map(|(e, &r)| (r, edge_id(e)))
                 .collect();
             if hot.is_empty() {
                 return vec![];
@@ -667,5 +703,58 @@ mod tests {
     #[should_panic(expected = "at least one selection worker")]
     fn rejects_zero_workers() {
         Multiqueue::new(0, 0, 0, 1);
+    }
+
+    #[test]
+    fn priority_keys_follow_total_cmp_order() {
+        // Regression for the raw-`to_bits` key: unsigned comparison of
+        // sign-folded keys must equal `total_cmp` across the whole f32
+        // range. The old key violated this for every negative payload
+        // (sign bit made them the largest unsigned values) and ordered
+        // NaN above +inf only by accident of bit layout.
+        let vals = [
+            f32::NEG_INFINITY,
+            -1.0f32,
+            -1e-30,
+            -0.0,
+            0.0,
+            1e-30,
+            0.5,
+            1.0,
+            f32::MAX,
+            f32::INFINITY,
+            f32::NAN,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    key_of(a).cmp(&key_of(b)),
+                    a.total_cmp(&b),
+                    "key order diverges from total_cmp for {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qentry_order_matches_canonical_frontier_order() {
+        // NaN bounds (lazy refill enqueues them deliberately) pop
+        // before every finite key — total_cmp's order, which is what
+        // routes poisoned edges to resolution first. Equal keys break
+        // ties to the smaller edge id, mirroring cmp_desc.
+        let nan = QEntry { key: key_of(f32::NAN), edge: 9 };
+        let inf = QEntry { key: key_of(f32::INFINITY), edge: 9 };
+        let hot = QEntry { key: key_of(0.7), edge: 9 };
+        assert!(nan > inf && inf > hot);
+        let tie_lo = QEntry { key: key_of(0.7), edge: 3 };
+        assert!(tie_lo > hot, "ties must prefer the smaller edge id");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds i32")]
+    fn edge_id_narrowing_is_checked() {
+        // The old `e as i32` wrapped silently past i32::MAX and emitted
+        // negative edge ids into waves.
+        edge_id(i32::MAX as usize + 1);
     }
 }

@@ -76,6 +76,22 @@ impl Scheduler for Rbp {
         self.take_topk(k)
     }
 
+    fn select_estimate(
+        &mut self,
+        ctx: &SchedContext,
+        _frontier: &crate::coordinator::frontier::ConcurrentFrontier,
+    ) -> Vec<Vec<i32>> {
+        // Estimate refresh: `ctx.residuals` are propagated upper-bound
+        // estimates and the top-k ranks them *as-is* — no certified
+        // boundary, no resolution (contrast select_lazy below, whose
+        // whole body exists to pin the exact-mode frontier). The eager
+        // scan + canonical top-k already is that ranking, so the
+        // override only makes the contract explicit: an over-estimated
+        // edge may crack the top-k early, which costs a commit-time
+        // recompute of a near-converged row, never a wrong message.
+        self.select(ctx)
+    }
+
     fn select_lazy(
         &mut self,
         ctx: &LazySchedContext,
@@ -208,6 +224,26 @@ mod tests {
     #[should_panic(expected = "p must be in")]
     fn rejects_bad_p() {
         Rbp::new(0.0);
+    }
+
+    #[test]
+    fn estimate_select_ranks_bounds_like_residuals() {
+        // The estimate contract: handed bound estimates instead of
+        // exact residuals, the frontier is the same canonical top-k
+        // over the same array — no resolution detour, no reordering.
+        let mut rng = Rng::new(5);
+        let g = ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let mut res = vec![0.0f32; g.num_edges];
+        for e in 0..g.live_edges {
+            res[e] = (e % 7) as f32 * 0.1 + 0.05;
+        }
+        let f = crate::coordinator::frontier::ConcurrentFrontier::new(g.num_edges, 4);
+        let mut a = Rbp::new(0.25);
+        let mut b = Rbp::new(0.25);
+        assert_eq!(
+            a.select(&ctx_with(&g, &res, 1e-4)),
+            b.select_estimate(&ctx_with(&g, &res, 1e-4), &f)
+        );
     }
 
     #[test]

@@ -136,6 +136,23 @@ impl Scheduler for Rnbp {
         vec![frontier]
     }
 
+    fn select_estimate(
+        &mut self,
+        ctx: &SchedContext,
+        _frontier: &crate::coordinator::frontier::ConcurrentFrontier,
+    ) -> Vec<Vec<i32>> {
+        // Estimate refresh: the ε-filter and the EdgeRatio both read
+        // the propagated bound estimates directly — no pre-draw
+        // resolution sweep (select_lazy's loop exists only to keep the
+        // coin stream synchronized with the *exact*-mode run; under
+        // estimate there is no exact run to mirror). Bound-based
+        // EdgeRatio over-counts stragglers, which only biases the
+        // dynamic-p switch toward low_p (more sequential propagation) —
+        // a conservative direction. The eager path already implements
+        // exactly this on whatever array it is handed.
+        self.select(ctx)
+    }
+
     fn select_lazy(
         &mut self,
         ctx: &LazySchedContext,
@@ -281,6 +298,23 @@ mod tests {
             assert_eq!(
                 used.select(&ctx_with(&g, &res, 1e-4)),
                 fresh.select(&ctx_with(&g, &res, 1e-4))
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_select_matches_eager_on_same_keys() {
+        // Same seed, same key array: the estimate path must consume the
+        // identical coin stream and emit the identical frontier — it is
+        // the eager filter applied to bound estimates, nothing more.
+        let (g, res) = hot_graph();
+        let f = crate::coordinator::frontier::ConcurrentFrontier::new(g.num_edges, 4);
+        let mut a = Rnbp::new(0.4, 0.4, 21);
+        let mut b = Rnbp::new(0.4, 0.4, 21);
+        for _ in 0..3 {
+            assert_eq!(
+                a.select(&ctx_with(&g, &res, 1e-4)),
+                b.select_estimate(&ctx_with(&g, &res, 1e-4), &f)
             );
         }
     }

@@ -287,6 +287,23 @@ impl Scheduler for ResidualSplash {
         waves
     }
 
+    fn select_estimate(
+        &mut self,
+        ctx: &SchedContext,
+        _frontier: &crate::coordinator::frontier::ConcurrentFrontier,
+    ) -> Vec<Vec<i32>> {
+        // Estimate refresh: vertex residuals reduce over the propagated
+        // bound estimates and roots rank on those maxima directly — no
+        // certified emission, no per-root resolution (select_lazy's
+        // machinery exists solely to replicate the exact-mode root
+        // sequence). Splash shape is unchanged: BFS growth depends on
+        // topology, not residual values, so an over-estimated root
+        // costs one splash of near-converged rows at commit time and
+        // nothing else. The eager path already computes exactly this
+        // ranking over whatever array it is handed.
+        self.select(ctx)
+    }
+
     fn select_lazy(
         &mut self,
         ctx: &LazySchedContext,
@@ -449,6 +466,26 @@ mod tests {
         let first = s.select(&ctx_with(&g, &res, 1e-4));
         let second = s.select(&ctx_with(&g, &res, 1e-4));
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn estimate_select_matches_eager_on_same_keys() {
+        // The estimate contract: root ranking and splash growth over
+        // bound estimates are the eager select applied to the same
+        // array — identical wave structure, no resolution detour.
+        let mut rng = Rng::new(7);
+        let g = ising::generate("i", 6, 2.0, &mut rng).unwrap();
+        let mut res = vec![0.0f32; g.num_edges];
+        for e in 0..g.live_edges {
+            res[e] = (e % 5) as f32 * 0.2 + 0.1;
+        }
+        let f = crate::coordinator::frontier::ConcurrentFrontier::new(g.num_edges, 4);
+        let mut a = ResidualSplash::new(0.2, 2);
+        let mut b = ResidualSplash::new(0.2, 2);
+        assert_eq!(
+            a.select(&ctx_with(&g, &res, 1e-4)),
+            b.select_estimate(&ctx_with(&g, &res, 1e-4), &f)
+        );
     }
 
     #[test]

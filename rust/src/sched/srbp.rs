@@ -137,6 +137,7 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         refresh_skipped: 0,
         refresh_deferred: 0,
         refresh_resolved: 0,
+        commit_recompute_rows: 0,
         // exact selection: no relaxed-queue stats
         relaxed_pops: 0,
         rank_error_estimate: 0.0,

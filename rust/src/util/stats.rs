@@ -52,11 +52,17 @@ impl Summary {
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Linear-interpolated percentile, q in [0, 100].
+    /// Linear-interpolated percentile. `q` is clamped into [0, 100]:
+    /// an out-of-range quantile used to index one past the sorted
+    /// sample (`sorted[hi]` panic for q > 100), and a NaN quantile
+    /// silently returned the sample minimum; both now degrade to the
+    /// nearest defined quantile (NaN q returns NaN, matching the
+    /// empty-sample convention of `mean`).
     pub fn percentile(&self, q: f64) -> f64 {
-        if self.values.is_empty() {
+        if self.values.is_empty() || q.is_nan() {
             return f64::NAN;
         }
+        let q = q.clamp(0.0, 100.0);
         let mut sorted = self.values.clone();
         sorted.sort_by(|a, b| a.total_cmp(b));
         let pos = (q / 100.0) * (sorted.len() - 1) as f64;
@@ -120,6 +126,28 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn single_element_quantiles() {
+        let s = Summary::from_values(vec![7.0]);
+        assert_eq!(s.percentile(0.0), 7.0);
+        assert_eq!(s.median(), 7.0);
+        assert_eq!(s.percentile(100.0), 7.0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_quantiles_clamp() {
+        // Pre-fix: percentile(150.0) computed hi = ceil(1.5 * (n-1))
+        // past the end of the sorted sample and panicked on the index;
+        // negative and NaN quantiles returned the minimum by accident
+        // of float->usize casts.
+        let s = Summary::from_values(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.percentile(150.0), 4.0);
+        assert_eq!(s.percentile(-25.0), 1.0);
+        assert!(s.percentile(f64::NAN).is_nan());
     }
 
     #[test]

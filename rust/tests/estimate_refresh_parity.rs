@@ -1,0 +1,253 @@
+//! Differential harness for the estimate-first refresh rung
+//! (`--residual-refresh estimate`) against the exact eager recompute
+//! and PR 6's lazy certified deferral, across the GPU schedulers on
+//! small Ising/Potts/chain instances.
+//!
+//! What estimate mode *gives up*, and what this harness therefore
+//! asserts instead of the lazy harness's trajectory identity:
+//!
+//! * **Fixed-point agreement, not digests** — selection ranks on
+//!   propagated per-edge-contraction bounds, never resolving them, so
+//!   frontier sequences legitimately diverge from `exact`. Soundness
+//!   of the bounds still pins the *destination*: a converged estimate
+//!   run has every true residual below ε, hence the same fixed point
+//!   as `exact` at float tolerance.
+//! * **Row accounting shape** — estimate performs no step-3 refresh at
+//!   all (`refresh_rows == 0`, no resolve stream); every engine row
+//!   after priming is a commit-time materialization, so
+//!   `engine_rows() == commit_recompute_rows` — O(committed), where
+//!   lazy pays O(selected + ranking boundary).
+//! * **Work reduction on narrow frontiers** — the headline: on
+//!   narrow-frontier rs and rbp p=1/64 workloads, estimate's total
+//!   engine rows undercut (with tolerance — selection on stale bounds
+//!   can cost extra iterations, this is not a theorem) lazy's, while
+//!   the full-frontier rbp p=1 control pays approximately equal rows:
+//!   with everything selected every iteration there is nothing left to
+//!   avoid materializing.
+//! * **Bound soundness with no resolution at all** — the shared
+//!   full-recompute auditor (tests/common) checks that the per-edge
+//!   contraction coefficients keep every propagated bound above the
+//!   true residual at each selection boundary, the property the whole
+//!   rung rests on.
+//!
+//! The engine matrix honors `BP_TEST_ENGINE` (`native` / `parallel`),
+//! which CI loops over; unset, both engines run.
+
+// One-shot harness code: the deprecated run_observed() shim is
+// exercised here on purpose (kept-for-one-release API).
+#![allow(deprecated)]
+
+mod common;
+
+use bp_sched::coordinator::{
+    run_observed, ResidualRefresh, RunParams, RunResult, SessionBuilder, StopReason,
+};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::{native::NativeEngine, parallel::ParallelEngine, MessageEngine};
+use bp_sched::sched::{Lbp, Multiqueue, Rbp, ResidualSplash, Rnbp, Scheduler};
+use bp_sched::util::Rng;
+use bp_sched::Mrf;
+use common::{engines_under_test, BoundAuditor};
+
+/// The schedulers the estimate rung targets (srbp has no dirty list;
+/// lbp rides the trait default and is covered by the auditor test).
+const GPU_SCHEDULERS: [&str; 4] = ["rbp", "rs", "rnbp", "mq"];
+
+fn test_graphs() -> Vec<(&'static str, Mrf)> {
+    let mut rng = Rng::new(20_260_729);
+    vec![
+        (
+            "ising6",
+            DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap(),
+        ),
+        (
+            "potts5_q3",
+            DatasetSpec::Potts { n: 5, q: 3, c: 1.0 }.generate(&mut rng).unwrap(),
+        ),
+        (
+            "chain40",
+            DatasetSpec::Chain { n: 40, c: 5.0 }.generate(&mut rng).unwrap(),
+        ),
+    ]
+}
+
+fn mk_sched(name: &str) -> Box<dyn Scheduler> {
+    match name {
+        "lbp" => Box::new(Lbp::new()),
+        "rbp" => Box::new(Rbp::new(0.25)),
+        "rs" => Box::new(ResidualSplash::new(0.25, 2)),
+        "rnbp" => Box::new(Rnbp::synthetic(0.7, 11)),
+        // one worker, one queue: the fully serial, seeded Multiqueue
+        "mq" => Box::new(Multiqueue::new(1, 1, 0, 17)),
+        other => panic!("unknown scheduler {other}"),
+    }
+}
+
+fn mk_engine(name: &str) -> Box<dyn MessageEngine> {
+    match name {
+        "native" => Box::new(NativeEngine::new()),
+        "parallel" => Box::new(ParallelEngine::with_threads(4)),
+        other => panic!("unknown engine {other}"),
+    }
+}
+
+fn params(mode: ResidualRefresh) -> RunParams {
+    RunParams {
+        want_marginals: true,
+        timeout: 30.0,
+        // untracked beliefs: the auditor's reference engine must
+        // perform identical operations to the run's engine
+        belief_refresh_every: 0,
+        residual_refresh: mode,
+        ..Default::default()
+    }
+}
+
+fn run_one(g: &Mrf, sched: &str, engine: &str, mode: ResidualRefresh) -> RunResult {
+    let mut session = SessionBuilder::new(g.clone(), mk_engine(engine), mk_sched(sched))
+        .with_params(params(mode))
+        .build()
+        .unwrap();
+    session.solve().unwrap();
+    session.into_result().unwrap()
+}
+
+/// Estimate never refreshes at selection time: the entire row budget
+/// is commit-time materialization.
+fn assert_estimate_counter_shape(r: &RunResult, what: &str) {
+    assert_eq!(r.refresh_rows, 0, "{what}: estimate must not refresh");
+    assert_eq!(r.refresh_resolved, 0, "{what}: estimate has no resolve stream");
+    assert_eq!(r.refresh_skipped, 0, "{what}: estimate defers, it never skips");
+    assert!(r.refresh_deferred > 0, "{what}: nothing was ever deferred");
+    assert!(r.commit_recompute_rows > 0, "{what}: no wave materialized rows");
+    assert_eq!(r.engine_rows(), r.commit_recompute_rows, "{what}");
+    assert!(
+        r.commit_recompute_rows <= r.message_updates,
+        "{what}: materialized more rows than it committed messages"
+    );
+}
+
+#[test]
+fn estimate_matches_exact_at_fixed_point() {
+    let eps = params(ResidualRefresh::Estimate).eps;
+    for (glabel, g) in &test_graphs() {
+        for sched in GPU_SCHEDULERS {
+            for engine in engines_under_test() {
+                let what = format!("{glabel}/{sched}/{engine}");
+                let exact = run_one(g, sched, engine, ResidualRefresh::Exact);
+                let est = run_one(g, sched, engine, ResidualRefresh::Estimate);
+                assert_eq!(exact.stop, StopReason::Converged, "{what}: exact");
+                assert_eq!(est.stop, StopReason::Converged, "{what}: estimate");
+                // converged bounds dominate true residuals, so the
+                // final residual is genuinely below eps
+                assert!(est.final_residual < eps, "{what}: {}", est.final_residual);
+                assert_estimate_counter_shape(&est, &what);
+                assert_eq!(exact.commit_recompute_rows, 0, "{what}: exact mid-wave");
+                // same fixed point at float tolerance — trajectories
+                // differ (bound-ranked selection), destination cannot
+                for (i, (x, y)) in exact
+                    .marginals
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .zip(est.marginals.as_ref().unwrap())
+                    .enumerate()
+                {
+                    assert!((x - y).abs() < 1e-3, "{what}: marginal[{i}] {x} vs {y}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn estimate_rows_approach_committed_on_narrow_frontiers() {
+    // The headline win metric: on narrow frontiers estimate's total
+    // engine rows (== commit-time materializations) undercut lazy's
+    // O(selected + ranking boundary). Not a theorem — bound-ranked
+    // selection can buy extra iterations — so the comparison carries a
+    // 10% tolerance; the counter-shape assertions stay strict.
+    let mut rng = Rng::new(31);
+    let g = DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap();
+
+    let run_mode = |mk: &dyn Fn() -> Box<dyn Scheduler>, mode: ResidualRefresh| -> RunResult {
+        let mut session = SessionBuilder::new(g.clone(), Box::new(NativeEngine::new()), mk())
+            .with_params(params(mode))
+            .build()
+            .unwrap();
+        session.solve().unwrap();
+        session.into_result().unwrap()
+    };
+
+    let within = |est: &RunResult, lazy: &RunResult, factor_pct: u64, what: &str| {
+        let (e, l) = (est.engine_rows(), lazy.engine_rows());
+        assert!(
+            e * 100 <= l * factor_pct,
+            "{what}: estimate {e} engine rows vs lazy {l} (allowed {factor_pct}%)"
+        );
+    };
+
+    // narrow-frontier rs: the paper-relevant splash workload
+    let mk_rs: Box<dyn Fn() -> Box<dyn Scheduler>> =
+        Box::new(|| Box::new(ResidualSplash::new(1.0 / 16.0, 2)));
+    let lazy = run_mode(&*mk_rs, ResidualRefresh::Lazy);
+    let est = run_mode(&*mk_rs, ResidualRefresh::Estimate);
+    assert!(lazy.converged() && est.converged(), "rs narrow");
+    assert_estimate_counter_shape(&est, "rs narrow");
+    within(&est, &lazy, 110, "rs narrow");
+
+    // narrow-frontier rbp: two edges per iteration on this instance
+    let mk_rbp_narrow: Box<dyn Fn() -> Box<dyn Scheduler>> =
+        Box::new(|| Box::new(Rbp::new(1.0 / 64.0)));
+    let lazy = run_mode(&*mk_rbp_narrow, ResidualRefresh::Lazy);
+    let est = run_mode(&*mk_rbp_narrow, ResidualRefresh::Estimate);
+    assert!(lazy.converged() && est.converged(), "rbp narrow");
+    assert_estimate_counter_shape(&est, "rbp narrow");
+    within(&est, &lazy, 110, "rbp narrow");
+
+    // full-frontier rbp control: everything over ε is selected every
+    // iteration, so there is nothing left to avoid materializing —
+    // estimate pays approximately lazy's rows (both directions, 50%
+    // tolerance: trajectories differ, magnitudes must not)
+    let mk_rbp_full: Box<dyn Fn() -> Box<dyn Scheduler>> = Box::new(|| Box::new(Rbp::new(1.0)));
+    let lazy = run_mode(&*mk_rbp_full, ResidualRefresh::Lazy);
+    let est = run_mode(&*mk_rbp_full, ResidualRefresh::Estimate);
+    assert!(lazy.converged() && est.converged(), "rbp control");
+    assert_estimate_counter_shape(&est, "rbp control");
+    within(&est, &lazy, 150, "rbp control upper");
+    let (e, l) = (est.engine_rows(), lazy.engine_rows());
+    assert!(
+        l * 100 <= e * 150,
+        "rbp control lower: estimate {e} engine rows vs lazy {l} — the full \
+         frontier should leave estimate no rows to save"
+    );
+}
+
+#[test]
+fn bounds_stay_sound_with_no_resolution_at_all() {
+    // The shared full-recompute auditor — here exercising the per-edge
+    // contraction coefficients with *zero* selection-time resolution:
+    // every bound the scheduler ever ranks on must dominate a
+    // from-scratch recompute of its edge. lbp joins the matrix (trait
+    // default estimate path) for coverage of the resolve-all shape.
+    for (glabel, g) in &test_graphs() {
+        for sched in ["lbp", "rbp", "rs", "rnbp", "mq"] {
+            for engine in engines_under_test() {
+                let what = format!("{glabel}/{sched}/{engine} estimate");
+                let mut eng = mk_engine(engine);
+                let mut s = mk_sched(sched);
+                let mut auditor = BoundAuditor::new(what.clone(), NativeEngine::new());
+                let r = run_observed(
+                    g,
+                    eng.as_mut(),
+                    s.as_mut(),
+                    &params(ResidualRefresh::Estimate),
+                    &mut auditor,
+                )
+                .unwrap();
+                assert!(auditor.audits > 1, "{what}: auditor never ran");
+                assert_eq!(r.stop, StopReason::Converged, "{what}");
+            }
+        }
+    }
+}

@@ -22,6 +22,10 @@
 //!   recompute at every refresh point.
 //! * **Stop honesty** — no run reports `Converged` while any true
 //!   residual is hot (or NaN), and no built-in scheduler stalls.
+//! * **estimate leg** (separate fn, same replayed case stream) —
+//!   honesty, the no-refresh counter shape, fixed-point agreement with
+//!   exact, cross-engine bit-identity, and the narrow-frontier row
+//!   economy vs lazy under `--residual-refresh estimate`.
 //! * **mq envelope** — the relaxed Multiqueue has no digest to compare
 //!   (its waves depend on thread interleaving at >1 worker), so it gets
 //!   envelope assertions instead: honesty on every run, fixed-point
@@ -425,6 +429,118 @@ fn randomized_evidence_streams_warm_matches_cold() {
         }
     }
     assert!(compared > 0, "every stream case hit the iteration cap — vacuous differential");
+}
+
+#[test]
+fn estimate_mode_differentials() {
+    // The estimate rung fuzz leg — a separate fn so the load-bearing
+    // `gen_case` draw stream and the typed three-mode matrix above
+    // stay untouched; it replays the identical case stream. Estimate
+    // selection ranks on unresolved bounds, so there is no digest
+    // contract against exact; the assertions are:
+    //
+    // * honesty + the estimate counter shape (no step-3 refresh, no
+    //   resolve stream, all rows materialized at commit) on every run;
+    // * fixed-point marginal agreement with exact wherever both
+    //   converge (sound bounds pin the destination, not the path);
+    // * native ≡ parallel bit-identity per case (selection and engine
+    //   are both deterministic under estimate for these schedulers);
+    // * the row economy: on narrow-frontier draws (p = 1/16), a
+    //   converged estimate run's total engine rows stay within 110% of
+    //   lazy's — usually strictly below, but selection on stale bounds
+    //   can buy extra iterations, so the fuzzer tolerates the overlap
+    //   band and the parity harness owns the strict narrow-frontier
+    //   claims.
+    let mut compared = 0usize;
+    for root in root_seeds() {
+        let mut rng = Rng::new(root ^ 0xf022_a3a1_9e1c_55d7);
+        for id in 0..CASES_PER_SEED {
+            let case = gen_case(&mut rng, id);
+            for sched in ["lbp", "rbp", "rs", "rnbp"] {
+                let mut per_engine: Vec<RunResult> = Vec::new();
+                for &engine in &engines_under_test() {
+                    let what = format!("{}/{sched}/{engine}/estimate", case.label);
+                    let est = run_one(&case, sched, engine, ResidualRefresh::Estimate);
+                    assert_honest_eps(&est, case.eps, &what);
+                    assert_eq!(est.refresh_rows, 0, "{what}: estimate must not refresh");
+                    assert_eq!(est.refresh_resolved, 0, "{what}: no resolve stream");
+                    assert_eq!(est.refresh_skipped, 0, "{what}: defers, never skips");
+                    assert_eq!(
+                        est.engine_rows(),
+                        est.commit_recompute_rows,
+                        "{what}: rows outside commit materialization"
+                    );
+
+                    let exact = run_one(&case, sched, engine, ResidualRefresh::Exact);
+                    if exact.converged() && est.converged() {
+                        compared += 1;
+                        for (i, (x, y)) in exact
+                            .marginals
+                            .as_ref()
+                            .unwrap()
+                            .iter()
+                            .zip(est.marginals.as_ref().unwrap())
+                            .enumerate()
+                        {
+                            assert!(
+                                (x - y).abs() < 1e-3,
+                                "{what}: marginal[{i}] exact {x} vs estimate {y}"
+                            );
+                        }
+                    }
+
+                    let narrow = match sched {
+                        "rbp" => case.rbp_p <= 1.0 / 16.0,
+                        "rs" => case.rs_p <= 1.0 / 16.0,
+                        _ => false,
+                    };
+                    if narrow && est.converged() {
+                        let lazy = run_one(&case, sched, engine, ResidualRefresh::Lazy);
+                        if lazy.converged() {
+                            assert!(
+                                est.engine_rows() * 100 <= lazy.engine_rows() * 110,
+                                "{what}: estimate {} engine rows vs lazy {} on a \
+                                 narrow frontier",
+                                est.engine_rows(),
+                                lazy.engine_rows()
+                            );
+                        }
+                    }
+                    per_engine.push(est);
+                }
+                if per_engine.len() == 2 {
+                    let (a, b) = (&per_engine[0], &per_engine[1]);
+                    let what =
+                        format!("{}/{sched}/estimate native-vs-parallel", case.label);
+                    assert_eq!(a.stop, b.stop, "{what}");
+                    assert_eq!(a.frontier_digest, b.frontier_digest, "{what}");
+                    assert_bits_equal(
+                        a.marginals.as_ref().unwrap(),
+                        b.marginals.as_ref().unwrap(),
+                        &what,
+                    );
+                }
+            }
+
+            // mq rides its envelope contract (no digests): honesty and
+            // conserved relaxed accounting under estimate refresh
+            for &engine in &engines_under_test() {
+                let what = format!("{}/mq/{engine}/estimate", case.label);
+                let p = params(&case, ResidualRefresh::Estimate);
+                let mut eng = mk_engine(&case, engine);
+                let mut s = mk_mq(&case);
+                let r = run(&case.graph, eng.as_mut(), s.as_mut(), &p).unwrap();
+                assert_honest_eps(&r, case.eps, &what);
+                assert_eq!(r.refresh_rows, 0, "{what}: estimate must not refresh");
+                assert_eq!(
+                    r.worker_commits.iter().sum::<u64>(),
+                    r.message_updates,
+                    "{what}: worker commit counts don't reconcile"
+                );
+            }
+        }
+    }
+    assert!(compared > 0, "no case converged under both exact and estimate — vacuous");
 }
 
 #[test]

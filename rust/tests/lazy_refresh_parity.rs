@@ -278,11 +278,15 @@ fn bounds_stay_sound_under_lazy_deferral() {
 #[test]
 fn srbp_is_residual_refresh_invariant_across_all_modes() {
     // The serial baseline has no dirty-list refresh: the knob must not
-    // change a single bit of its trajectory in any of the three modes.
+    // change a single bit of its trajectory in any of the four modes.
     let mut rng = Rng::new(99);
     let g = DatasetSpec::Ising { n: 6, c: 1.5 }.generate(&mut rng).unwrap();
     let a = srbp::run_serial(&g, &params(ResidualRefresh::Exact)).unwrap();
-    for mode in [ResidualRefresh::Bounded, ResidualRefresh::Lazy] {
+    for mode in [
+        ResidualRefresh::Bounded,
+        ResidualRefresh::Lazy,
+        ResidualRefresh::Estimate,
+    ] {
         let b = srbp::run_serial(&g, &params(mode)).unwrap();
         assert_eq!(a.stop, b.stop, "{mode:?}");
         assert_eq!(a.message_updates, b.message_updates, "{mode:?}");
