@@ -455,6 +455,61 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- storage layout: arity-exact CSR vs envelope padding --------------
+    // Memory-scaling check for the streaming loader: payload bytes vs
+    // vertex count on the skewed-arity LDPC workload (variables arity 2,
+    // checks arity dc — exactly the shape envelope padding punishes).
+    // The envelope column is the analytic bill the padded layout would
+    // pay for the same live graph: (V*A + M*A^2 + 4M) * 4 at A = dc.
+    // CI runs this section under BP_BENCH_SMOKE=1 as the memory-scaling
+    // smoke: the ratio column must stay flat (payload is proportional
+    // to actual arities, not to the envelope), which the assert pins.
+    println!("\nstorage layout: payload bytes by size, ldpc (dv=3, dc=6), streaming CSR build:");
+    println!(
+        "{:>10} {:>10} {:>12} {:>14} {:>14} {:>7} {:>10}",
+        "vars", "vertices", "edges", "csr payload", "envelope bill", "ratio", "build"
+    );
+    let sizes: &[usize] = if smoke() {
+        &[1_200, 4_800]
+    } else {
+        &[6_000, 24_000, 96_000]
+    };
+    let mut ratios = Vec::new();
+    for &nv in sizes {
+        let mut rng = Rng::new(21);
+        let code = bp_sched::datasets::ldpc::LdpcCode::new("ldpcbench", nv, 3, 6, &mut rng)?;
+        let t = Stopwatch::start();
+        let gl = code.build()?;
+        let build = t.seconds();
+        let csr_bytes = gl.payload_bytes();
+        let (v, m, a) = (gl.live_vertices, gl.live_edges, gl.max_arity);
+        let env_bytes = (v * a + m * a * a + 4 * m) * 4;
+        let ratio = env_bytes as f64 / csr_bytes as f64;
+        ratios.push(csr_bytes as f64 / v as f64);
+        println!(
+            "{:>10} {:>10} {:>12} {:>14} {:>14} {:>6.2}x {:>10}",
+            code.n_vars(),
+            v,
+            m,
+            csr_bytes,
+            env_bytes,
+            ratio,
+            fmt_duration(build)
+        );
+    }
+    // proportionality: bytes per vertex must not grow with the graph
+    // (the envelope bill per vertex is constant too, but ~4x larger
+    // here; what scaling would expose is an accidental dense term)
+    let (first, last) = (ratios[0], ratios[ratios.len() - 1]);
+    assert!(
+        last <= first * 1.05,
+        "payload bytes per vertex grew with size: {first:.1} -> {last:.1}"
+    );
+    println!(
+        "  bytes/vertex {:.1} -> {:.1} across sizes (flat = arity-exact scaling holds)",
+        first, last
+    );
+
     // --- indexed heap throughput ------------------------------------------
     let n = 100_000;
     let mut heap_rng = Rng::new(7);

@@ -47,6 +47,11 @@
 //! `&mut` and `dyn`), so the consistency argument for bounded/lazy
 //! refresh is unchanged — this layer only widens who may *read* state
 //! and *propose* frontier membership at the same time.
+//!
+//! All state here is **per-edge scalar** (one f32 / flag / counter per
+//! edge id) — nothing indexes into message or potential rows, so the
+//! frontier is storage-layout-independent: padded-envelope and
+//! arity-exact CSR graphs (`graph::Layout`) share it unchanged.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 

@@ -263,6 +263,22 @@
 //! worker, one queue) still gets the strong contract: bitwise-equal
 //! marginals and digests across identical runs.
 //!
+//! ## Storage layouts
+//!
+//! The coordinator addresses every message/candidate row through the
+//! graph's [`RowLayout`] offsets (`State.rows` clones the graph's
+//! `msg_rows`), never `e * max_arity` arithmetic, so padded-envelope
+//! and arity-exact CSR graphs (`graph::Layout`) run the same solve
+//! loop unchanged. Residual/slack/bound state is per-edge *scalar*
+//! (layout-free), and commits route old/new rows as slices of the
+//! layout's width. On uniform-arity graphs the uniform `RowLayout`
+//! degenerates to the historical `e * A` offsets, which is why CSR
+//! twins of ising/potts/chain graphs are bit-identical to their
+//! envelope originals (`tests/layout_parity.rs`); ragged CSR rows
+//! change reduction shapes, so mixed-arity parity is fixed-point, not
+//! bitwise. Cost-model byte accounting bills arity-exact payload in
+//! both layouts ([`crate::graph::Mrf::payload_bytes`]).
+//!
 //! ## Session lifecycle
 //!
 //! The inference surface is the stateful [`Session`], built by
@@ -339,7 +355,7 @@ use anyhow::{bail, Result};
 
 use crate::collections::IndexedHeap;
 use crate::engine::MessageEngine;
-use crate::graph::Mrf;
+use crate::graph::{Mrf, RowLayout};
 use crate::perfmodel::CostModel;
 use crate::sched::{LazySchedContext, RelaxedStats, ResidualOracle, SchedContext, Scheduler};
 use crate::util::timer::{PhaseTimer, Stopwatch};
@@ -736,7 +752,14 @@ struct State {
     /// [`RESOLVE_LOOKAHEAD`], allocated once per run/session, not per
     /// selection).
     lookahead: Vec<i32>,
-    arity: usize,
+    /// Per-edge message-row offsets (clone of the graph's
+    /// [`Mrf::msg_rows`]): uniform `max_arity` stride on the envelope
+    /// layout, arity-exact prefix sums on CSR. `logm` and `cand` are
+    /// sized/addressed through this, so the coordinator never assumes a
+    /// fixed row width. Engine [`crate::engine::CandidateBatch`] rows
+    /// stay dense at `max_arity`; commit/copy sites slice them down to
+    /// the edge's width (a no-op slice on the envelope layout).
+    rows: RowLayout,
     /// Bounded, lazy, or estimate: accumulate commit-delta slack into
     /// dependents' residual upper bounds.
     track_slack: bool,
@@ -752,15 +775,14 @@ struct State {
 impl State {
     fn new(mrf: &Mrf, mode: ResidualRefresh) -> State {
         let m = mrf.num_edges;
-        let a = mrf.max_arity;
         let lazy = mode == ResidualRefresh::Lazy;
         State {
             logm: mrf.uniform_messages().as_slice().to_vec(),
-            cand: vec![0.0; m * a],
+            cand: vec![0.0; mrf.msg_rows.total()],
             f: ConcurrentFrontier::new(m, FRONTIER_SHARDS),
             heap: IndexedHeap::with_capacity(if lazy { m } else { 0 }),
             lookahead: Vec::with_capacity(if lazy { RESOLVE_LOOKAHEAD } else { 0 }),
-            arity: a,
+            rows: mrf.msg_rows.clone(),
             track_slack: mode != ResidualRefresh::Exact,
             lazy,
             estimate: mode == ResidualRefresh::Estimate,
@@ -808,8 +830,8 @@ impl State {
         engine: &mut dyn MessageEngine,
         e: usize,
     ) -> Result<f32> {
-        let a = self.arity;
-        let r = engine.candidate_row_into(mrf, &self.logm, e, &mut self.cand[e * a..(e + 1) * a])?;
+        let rg = self.rows.range(e);
+        let r = engine.candidate_row_into(mrf, &self.logm, e, &mut self.cand[rg])?;
         self.set_exact(e, r);
         self.f.stale_ok[e] = false;
         self.f.dirty[e] = false;
@@ -835,23 +857,27 @@ impl State {
         batch: Option<&crate::engine::CandidateBatch>,
         engine: &mut dyn MessageEngine,
     ) {
-        let a = self.arity;
+        let a_max = mrf.max_arity;
         let mut changed: Vec<(usize, f32)> = Vec::with_capacity(wave.len());
         for (i, &ei) in wave.iter().enumerate() {
             let e = ei as usize;
+            let rg = self.rows.range(e);
+            let w = rg.len();
+            // batch rows are dense at max_arity; the edge's row is its
+            // first `w` lanes (all of them on the envelope layout)
             let row: &[f32] = match batch {
-                Some(b) => b.row(i, a),
-                None => &self.cand[e * a..(e + 1) * a],
+                Some(b) => &b.row(i, a_max)[..w],
+                None => &self.cand[rg.clone()],
             };
-            if self.logm[e * a..(e + 1) * a] != *row {
-                let delta = engine.notify_commit(mrf, e, &self.logm[e * a..(e + 1) * a], row);
+            if self.logm[rg.clone()] != *row {
+                let delta = engine.notify_commit(mrf, e, &self.logm[rg.clone()], row);
                 changed.push((e, delta));
             }
-            self.logm[e * a..(e + 1) * a].copy_from_slice(row);
+            self.logm[rg.clone()].copy_from_slice(row);
             self.f.record_commit(e);
             if let Some(b) = batch {
                 // keep the candidate cache coherent with the new value
-                self.cand[e * a..(e + 1) * a].copy_from_slice(b.row(i, a));
+                self.cand[rg].copy_from_slice(&b.row(i, a_max)[..w]);
             }
             if batch.is_none() && self.f.stale_ok[e] {
                 // Bounded mode committed an ε-stale cached candidate:
@@ -1028,10 +1054,12 @@ impl LazyOracle<'_> {
         self.bill(frontier.len());
         match res {
             Ok(()) => {
-                let a = self.st.arity;
+                let a_max = self.mrf.max_arity;
                 for (i, &ei) in frontier.iter().enumerate() {
                     let e = ei as usize;
-                    self.st.cand[e * a..(e + 1) * a].copy_from_slice(self.batch.row(i, a));
+                    let rg = self.st.rows.range(e);
+                    let w = rg.len();
+                    self.st.cand[rg].copy_from_slice(&self.batch.row(i, a_max)[..w]);
                     self.st.set_exact(e, self.batch.residuals[i]);
                     self.st.f.stale_ok[e] = false;
                     self.st.f.dirty[e] = false;
@@ -1124,10 +1152,12 @@ impl ResidualOracle for LazyOracle<'_> {
         self.bill(frontier.len());
         match res {
             Ok(()) => {
-                let a = self.st.arity;
+                let a_max = self.mrf.max_arity;
                 for (i, &ei) in frontier.iter().enumerate() {
                     let e = ei as usize;
-                    self.st.cand[e * a..(e + 1) * a].copy_from_slice(self.batch.row(i, a));
+                    let rg = self.st.rows.range(e);
+                    let w = rg.len();
+                    self.st.cand[rg].copy_from_slice(&self.batch.row(i, a_max)[..w]);
                     self.st.set_exact(e, self.batch.residuals[i]);
                     self.st.f.stale_ok[e] = false;
                     self.st.f.dirty[e] = false;
@@ -1192,6 +1222,7 @@ fn refresh_dirty_step(
     batch: &mut crate::engine::CandidateBatch,
     params: &RunParams,
     model: &Option<CostModel>,
+    bytes_msg: f64,
     phases: &mut PhaseTimer,
     sim_phases: &mut PhaseTimer,
     sim_wall: &mut f64,
@@ -1200,8 +1231,7 @@ fn refresh_dirty_step(
     if st.f.dirty_list.is_empty() {
         return Ok(());
     }
-    let a = st.arity;
-    let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
+    let arity = mrf.max_arity;
     let mut dirty_list = std::mem::take(&mut st.f.dirty_list);
     if st.lazy {
         for &ei in dirty_list.iter() {
@@ -1259,14 +1289,17 @@ fn refresh_dirty_step(
         c.refresh_rows += dirty_list.len() as u64;
         for (i, &ei) in dirty_list.iter().enumerate() {
             let e = ei as usize;
-            st.cand[e * a..(e + 1) * a].copy_from_slice(batch.row(i, a));
+            let rg = st.rows.range(e);
+            let w = rg.len();
+            st.cand[rg].copy_from_slice(&batch.row(i, arity)[..w]);
             st.set_exact(e, batch.residuals[i]);
             st.f.stale_ok[e] = false;
             st.f.dirty[e] = false;
         }
         if let Some(m) = model {
-            // residual kernel over the recomputed edges only
-            let cost = m.update_cost(dirty_list.len(), arity, degree);
+            // residual kernel over the recomputed edges only, billed at
+            // the graph's arity-exact mean bytes per message
+            let cost = m.update_cost_bytes(dirty_list.len(), bytes_msg);
             sim_phases.add("update", cost);
             *sim_wall += cost;
         }
@@ -1637,9 +1670,9 @@ impl<'a> Session<'a> {
             bail!("evidence requires an owning session (SessionBuilder); \
                    this session borrows its graph");
         };
-        let a = g.max_arity;
         for &v in evidence.iter() {
-            let row = &base_unary[v * a..v * a + g.arity_of(v)];
+            let s = g.unary_rows.start(v);
+            let row = &base_unary[s..s + g.arity_of(v)];
             let delta = g.set_unary(v, row)?;
             if delta != 0.0 {
                 dirty_unary_dependents(g, st, v, delta);
@@ -1713,13 +1746,23 @@ impl<'a> Session<'a> {
         let params: &RunParams = params;
 
         let live = mrf.live_edges;
-        let (arity, degree) = (mrf.max_arity, mrf.max_in_degree);
+        let arity = mrf.max_arity;
         let lazy = params.residual_refresh == ResidualRefresh::Lazy;
         let estimate = params.residual_refresh == ResidualRefresh::Estimate;
         let mut phases = PhaseTimer::new();
         let mut sim_phases = PhaseTimer::new();
         let mut sim_wall = 0.0f64;
         let model = params.cost_model;
+        // Arity-exact mean bytes moved per message update on this graph
+        // (one O(E) pass per solve): the device-time billing for update/
+        // refresh/resolve kernels, replacing the padded-envelope
+        // (max_arity, max_in_degree) figure that billed lanes no update
+        // touches.
+        let bytes_msg = if model.is_some() {
+            crate::perfmodel::mean_bytes_per_msg(mrf)
+        } else {
+            0.0
+        };
         // Estimate-mode selection has no resolve stream: sort-class
         // selections rank pre-materialized bound keys, billed as the
         // fused scan+partial-select Estimate kernel.
@@ -1742,7 +1785,6 @@ impl<'a> Session<'a> {
         // docs; no-op for engines without belief state).
         engine.begin_tracking(mrf, &st.logm, params.belief_refresh_every);
 
-        let a = st.arity;
         if !*primed {
             // Priming refresh: all live edges, from uniform messages —
             // the cold-start contract `run` has always had. Not counted
@@ -1753,11 +1795,21 @@ impl<'a> Session<'a> {
             })?;
             c.engine_calls += 1;
             if let Some(m) = &model {
-                let cost = m.update_cost(live, arity, degree);
+                let cost = m.update_cost_bytes(live, bytes_msg);
                 sim_phases.add("update", cost);
                 sim_wall += cost;
             }
-            st.cand[..live * a].copy_from_slice(&batch.new_m);
+            if st.rows.is_uniform() {
+                // envelope fast path: batch rows and candidate rows share
+                // the dense max_arity stride, so the prefix copies whole
+                st.cand[..live * arity].copy_from_slice(&batch.new_m);
+            } else {
+                for e in 0..live {
+                    let rg = st.rows.range(e);
+                    let w = rg.len();
+                    st.cand[rg].copy_from_slice(&batch.row(e, arity)[..w]);
+                }
+            }
             st.f.res[..live].copy_from_slice(&batch.residuals);
             // all residuals are freshly exact: bounds coincide, slack 0
             st.f.ub[..live].copy_from_slice(&batch.residuals);
@@ -1785,6 +1837,7 @@ impl<'a> Session<'a> {
                 batch,
                 params,
                 &model,
+                bytes_msg,
                 &mut phases,
                 &mut sim_phases,
                 &mut sim_wall,
@@ -1860,7 +1913,7 @@ impl<'a> Session<'a> {
                     // CostModel::resolve_cost): the launch amortizes over
                     // every row the oracle resolved while selecting,
                     // instead of billing one kernel per row
-                    let cost = m.resolve_cost(rows as usize, arity, degree);
+                    let cost = m.resolve_cost_bytes(rows as usize, bytes_msg);
                     sim_phases.add("update", cost);
                     sim_wall += cost;
                 }
@@ -1949,7 +2002,7 @@ impl<'a> Session<'a> {
                 c.message_updates += wave.len() as u64;
                 if let Some(m) = &model {
                     // one bulk update kernel per wave on the device
-                    let cost = m.update_cost(wave.len(), arity, degree);
+                    let cost = m.update_cost_bytes(wave.len(), bytes_msg);
                     sim_phases.add("update", cost);
                     sim_wall += cost;
                 }
@@ -1965,6 +2018,7 @@ impl<'a> Session<'a> {
                 batch,
                 params,
                 &model,
+                bytes_msg,
                 &mut phases,
                 &mut sim_phases,
                 &mut sim_wall,

@@ -7,13 +7,24 @@
 //! * [`protein`] — synthetic protein-folding-like MRFs: irregular
 //!   structure, variable arity up to 81 (substitution for the
 //!   non-redistributable Yanover–Weiss dataset, DESIGN.md §3).
-//! * [`serialize`] — compact binary persistence for generated instances.
+//! * [`ldpc`] — high-girth (dv, dc)-regular bipartite codes with
+//!   extreme arity skew (variables 2, checks dc); million-vertex
+//!   scale via the streaming CSR loader.
+//! * [`stereo`] — stereo-matching grids with per-pixel pruned label
+//!   windows (skewed arities in `[2, q]`), also streaming CSR.
+//! * [`stream`] — the two-pass streaming loader the above build
+//!   through ([`stream::GraphSource`] + [`stream::build_csr`]).
+//! * [`serialize`] — compact binary persistence for generated
+//!   instances (envelope layout only).
 
 pub mod chain;
 pub mod ising;
+pub mod ldpc;
 pub mod potts;
 pub mod protein;
 pub mod serialize;
+pub mod stereo;
+pub mod stream;
 
 use crate::graph::Mrf;
 use crate::util::Rng;
@@ -38,6 +49,12 @@ pub enum DatasetSpec {
     Protein,
     /// q-state Potts grid: (N, q, C).
     Potts { n: usize, q: usize, c: f64 },
+    /// (dv, dc)-regular LDPC-style bipartite code with ~n variables
+    /// (rounded to the array-code structure). CSR layout.
+    Ldpc { n: usize, dv: usize, dc: usize },
+    /// Stereo grid: w x h pixels, q disparity labels, per-pixel
+    /// pruned windows. CSR layout.
+    Stereo { w: usize, h: usize, q: usize },
 }
 
 impl DatasetSpec {
@@ -52,7 +69,17 @@ impl DatasetSpec {
             },
             DatasetSpec::Protein => "protein".to_string(),
             DatasetSpec::Potts { n, q, .. } => format!("potts{n}_{q}"),
+            DatasetSpec::Ldpc { n, dv, dc } => format!("ldpc{n}_{dv}_{dc}"),
+            DatasetSpec::Stereo { w, h, q } => format!("stereo{w}x{h}_{q}"),
         }
+    }
+
+    /// True when the spec generates into the arity-exact CSR layout
+    /// (streaming loader) rather than a padded class envelope — such
+    /// graphs have no artifact config and cannot be persisted as
+    /// `BPMRF1` or run on the pjrt engine stub.
+    pub fn is_csr(&self) -> bool {
+        matches!(self, DatasetSpec::Ldpc { .. } | DatasetSpec::Stereo { .. })
     }
 
     /// Human-readable label matching the paper's dataset naming.
@@ -62,6 +89,8 @@ impl DatasetSpec {
             DatasetSpec::Chain { n, c } => format!("Chain {n}, C={c}"),
             DatasetSpec::Protein => "Protein-folding (synthetic)".to_string(),
             DatasetSpec::Potts { n, q, c } => format!("Potts {n}x{n} q={q}, C={c}"),
+            DatasetSpec::Ldpc { n, dv, dc } => format!("LDPC n~{n} ({dv},{dc})-regular"),
+            DatasetSpec::Stereo { w, h, q } => format!("Stereo {w}x{h}, q={q}"),
         }
     }
 
@@ -79,6 +108,12 @@ impl DatasetSpec {
             }
             DatasetSpec::Potts { n, q, c } => {
                 potts::generate(&self.class_name(), n, q, c, rng)
+            }
+            DatasetSpec::Ldpc { n, dv, dc } => {
+                ldpc::generate(&self.class_name(), n, dv, dc, rng)
+            }
+            DatasetSpec::Stereo { w, h, q } => {
+                stereo::generate(&self.class_name(), w, h, q, rng)
             }
         }
     }
@@ -122,6 +157,20 @@ mod tests {
         }
         let c = spec.generate_many(3, 43).unwrap();
         assert_ne!(a.graphs[0].log_unary, c.graphs[0].log_unary);
+    }
+
+    #[test]
+    fn csr_specs_generate_csr_graphs() {
+        let mut rng = crate::util::Rng::new(5);
+        let spec = DatasetSpec::Ldpc { n: 60, dv: 3, dc: 6 };
+        assert!(spec.is_csr());
+        let g = spec.generate(&mut rng).unwrap();
+        assert!(!g.is_envelope());
+        let spec = DatasetSpec::Stereo { w: 6, h: 5, q: 8 };
+        assert!(spec.is_csr());
+        let g = spec.generate(&mut rng).unwrap();
+        assert!(!g.is_envelope());
+        assert!(!DatasetSpec::Protein.is_csr());
     }
 
     #[test]

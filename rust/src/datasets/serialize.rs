@@ -79,8 +79,18 @@ fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
-/// Serialize an MRF to a writer.
+/// Serialize an MRF to a writer. `BPMRF1` is an envelope-shaped format
+/// (its tensor extents are `V*A`, `M*A*A`, `V*D`), so CSR-layout graphs
+/// are rejected — convert large CSR workloads through the streaming
+/// loader instead of persisting them padded.
 pub fn write(mrf: &Mrf, w: &mut impl Write) -> Result<()> {
+    if !mrf.is_envelope() {
+        bail!(
+            "BPMRF1 stores the padded envelope layout; this graph uses the \
+             arity-exact CSR layout (regenerate it with a streaming source \
+             rather than persisting it padded)"
+        );
+    }
     w.write_all(MAGIC)?;
     write_u32(w, mrf.class_name.len() as u32)?;
     w.write_all(mrf.class_name.as_bytes())?;
@@ -127,8 +137,17 @@ pub fn read(r: &mut impl Read) -> Result<Mrf> {
     if num_vertices > 1 << 28 || num_edges > 1 << 28 || max_arity > 1 << 12 {
         bail!("implausible header sizes");
     }
-    let mrf = Mrf {
-        instance_id: crate::graph::next_instance_id(),
+    let arity = read_i32s(r, num_vertices)?;
+    let src = read_i32s(r, num_edges)?;
+    let dst = read_i32s(r, num_edges)?;
+    let rev = read_i32s(r, num_edges)?;
+    let in_edges = read_i32s(r, num_vertices * max_in_degree)?;
+    let log_unary = read_f32s(r, num_vertices * max_arity)?;
+    let log_pair = read_f32s(r, num_edges * max_arity * max_arity)?;
+    // assemble_envelope derives the CSR incoming adjacency and the
+    // uniform row layouts from the padded tensors read above
+    let mrf = crate::graph::assemble_envelope(
+        crate::graph::next_instance_id(),
         class_name,
         num_vertices,
         num_edges,
@@ -136,14 +155,14 @@ pub fn read(r: &mut impl Read) -> Result<Mrf> {
         live_edges,
         max_arity,
         max_in_degree,
-        arity: read_i32s(r, num_vertices)?,
-        src: read_i32s(r, num_edges)?,
-        dst: read_i32s(r, num_edges)?,
-        rev: read_i32s(r, num_edges)?,
-        in_edges: read_i32s(r, num_vertices * max_in_degree)?,
-        log_unary: read_f32s(r, num_vertices * max_arity)?,
-        log_pair: read_f32s(r, num_edges * max_arity * max_arity)?,
-    };
+        arity,
+        src,
+        dst,
+        rev,
+        in_edges,
+        log_unary,
+        log_pair,
+    );
     validate::validate(&mrf).context("deserialized MRF failed validation")?;
     Ok(mrf)
 }

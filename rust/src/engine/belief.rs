@@ -53,8 +53,8 @@
 //! bitwise in `tests/parallel_parity.rs`.
 
 use super::{Semiring, UpdateOptions};
-use crate::graph::Mrf;
-use crate::util::parallel::par_rows;
+use crate::graph::{Mrf, RowLayout};
+use crate::util::parallel::par_rows_layout;
 use crate::NEG;
 
 /// Default drift-guard cadence: full re-gather every this many committed
@@ -102,14 +102,16 @@ pub(crate) fn normalize(row: &mut [f32]) {
 
 /// Fill one vertex's belief row in place:
 /// `row = log_unary[v] + Σ_{k ∈ in(v)} logm[k]`, accumulated in
-/// `in_edges` order. The single per-vertex body shared by the serial and
-/// parallel gathers — both must produce identical bits.
+/// incoming-adjacency order. The single per-vertex body shared by the
+/// serial and parallel gathers — both must produce identical bits.
+/// `row` is `unary_rows.width(v)` wide; under the envelope layout every
+/// range below reduces to the historical `v * A` arithmetic.
 #[inline]
 fn fill_belief_row(mrf: &Mrf, logm: &[f32], v: usize, row: &mut [f32]) {
-    let a = mrf.max_arity;
-    row.copy_from_slice(&mrf.log_unary[v * a..(v + 1) * a]);
+    let s = mrf.unary_rows.start(v);
+    row.copy_from_slice(&mrf.log_unary[s..s + row.len()]);
     for k in mrf.incoming(v) {
-        let m = &logm[k * a..(k + 1) * a];
+        let m = &logm[mrf.msg_rows.range(k)];
         for (b, r) in row.iter_mut().zip(m) {
             *b += r;
         }
@@ -127,7 +129,8 @@ fn fill_belief_row(mrf: &Mrf, logm: &[f32], v: usize, row: &mut [f32]) {
 #[derive(Debug, Default)]
 pub struct BeliefCache {
     belief: Vec<f32>,
-    arity: usize,
+    /// Row addressing of `belief` (the graph's `unary_rows`).
+    rows: RowLayout,
     /// Graph instance whose beliefs the buffer currently holds.
     held: Option<u64>,
     /// Graph instance [`Self::begin_tracking`] was called for, while
@@ -157,18 +160,27 @@ impl BeliefCache {
         self.commits_since_refresh = 0;
     }
 
+    /// Payload length needed for the live-vertex belief rows.
+    fn live_extent(mrf: &Mrf) -> usize {
+        match mrf.live_vertices {
+            0 => 0,
+            n => mrf.unary_rows.end(n - 1),
+        }
+    }
+
     /// Recompute every live vertex's belief from `logm` in one O(E·A)
-    /// pass. Padded arity lanes come out as `NEG` (log-unary padding)
-    /// plus zeros (message padding), matching the per-row gather.
+    /// pass. Envelope padded arity lanes come out as `NEG` (log-unary
+    /// padding) plus zeros (message padding), matching the per-row
+    /// gather; CSR rows have no pad lanes at all.
     pub fn gather(&mut self, mrf: &Mrf, logm: &[f32]) {
-        let a = mrf.max_arity;
-        self.arity = a;
+        self.rows = mrf.unary_rows.clone();
         // plain resize (no clear): every live row is fully overwritten
         // below, so zero-filling retained capacity would be pure memset
         // waste on the guard-refresh hot path
-        self.belief.resize(mrf.live_vertices * a, 0.0);
+        self.belief.resize(Self::live_extent(mrf), 0.0);
         for v in 0..mrf.live_vertices {
-            fill_belief_row(mrf, logm, v, &mut self.belief[v * a..(v + 1) * a]);
+            let r = self.rows.range(v);
+            fill_belief_row(mrf, logm, v, &mut self.belief[r]);
         }
         self.note_fresh(mrf);
     }
@@ -179,19 +191,18 @@ impl BeliefCache {
     /// and written to its own disjoint slot, so the result is
     /// bit-identical to the serial gather at any thread count.
     pub fn gather_par(&mut self, mrf: &Mrf, logm: &[f32], threads: usize) {
-        let a = mrf.max_arity;
         let n = mrf.live_vertices;
-        self.arity = a;
+        self.rows = mrf.unary_rows.clone();
         // plain resizes, as in `gather`: rows and residual slots are
         // fully overwritten by the fan-out
-        self.belief.resize(n * a, 0.0);
+        self.belief.resize(Self::live_extent(mrf), 0.0);
         self.par_res.resize(n, 0.0);
-        par_rows(
+        par_rows_layout(
             n,
             GATHER_CHUNK_ROWS,
             threads,
             &mut self.belief,
-            a,
+            &mrf.unary_rows,
             &mut self.par_res,
             || (),
             |_, v, row| {
@@ -265,9 +276,9 @@ impl BeliefCache {
         }
         let norm;
         if self.commits_since_refresh < self.refresh_every {
-            let a = self.arity;
             let v = mrf.dst[e] as usize;
-            let row = &mut self.belief[v * a..(v + 1) * a];
+            let r = self.rows.range(v);
+            let row = &mut self.belief[r];
             let mut mx = 0.0f32;
             for ((b, n), o) in row.iter_mut().zip(new_row).zip(old_row) {
                 let d = n - o;
@@ -310,17 +321,20 @@ impl BeliefCache {
         }
     }
 
-    /// Belief row of vertex `v` (full padded width).
+    /// Belief row of vertex `v` (full physical width — padded under the
+    /// envelope layout, arity-exact under CSR).
     #[inline]
     pub fn row(&self, v: usize) -> &[f32] {
-        &self.belief[v * self.arity..(v + 1) * self.arity]
+        &self.belief[self.rows.range(v)]
     }
 
     /// Write normalized vertex marginals (probabilities) for every live
-    /// vertex into `out` (`[>= live_vertices * A]`, row-major). Rows of
-    /// padding vertices are left untouched.
+    /// vertex into `out` (`[>= live_vertices * max_arity]`, row-major at
+    /// the *dense* `max_arity` stride regardless of storage layout —
+    /// the reporting surface stays layout-independent). Rows of padding
+    /// vertices are left untouched.
     pub fn write_marginals(&self, mrf: &Mrf, out: &mut [f32]) {
-        let a = self.arity;
+        let a = mrf.max_arity;
         for v in 0..mrf.live_vertices {
             let av = mrf.arity_of(v);
             let b = self.row(v);
@@ -340,15 +354,15 @@ impl BeliefCache {
 
 /// Gather one vertex's belief into caller-owned scratch:
 /// `belief_v = log_unary[v] + Σ_{k ∈ in(v)} logm[k]`, accumulated in
-/// `in_edges` order — op-for-op the same as [`BeliefCache::gather`]'s
-/// per-vertex body, so both paths produce identical bits.
+/// incoming-adjacency order — op-for-op the same as
+/// [`BeliefCache::gather`]'s per-vertex body, so both paths produce
+/// identical bits.
 #[inline]
 pub(crate) fn gather_vertex(mrf: &Mrf, logm: &[f32], v: usize, belief: &mut Vec<f32>) {
-    let a = mrf.max_arity;
     belief.clear();
-    belief.extend_from_slice(&mrf.log_unary[v * a..v * a + a]);
+    belief.extend_from_slice(&mrf.log_unary[mrf.unary_rows.range(v)]);
     for k in mrf.incoming(v) {
-        let row = &logm[k * a..k * a + a];
+        let row = &logm[mrf.msg_rows.range(k)];
         for (b, r) in belief.iter_mut().zip(row) {
             *b += r;
         }
@@ -358,8 +372,11 @@ pub(crate) fn gather_vertex(mrf: &Mrf, logm: &[f32], v: usize, belief: &mut Vec<
 /// Candidate row for edge `e` given the gathered belief row of `src[e]`.
 ///
 /// `cavity` is caller-owned scratch (per thread in the parallel engine);
-/// `out` is the full-width destination row. Returns the max-norm residual
-/// against the current `logm` row. Must stay op-for-op identical to
+/// `out` is the destination row — at least `arity(dst[e])` wide (the
+/// dense `CandidateBatch` hands the full `max_arity` width; arity-exact
+/// callers hand exactly the valid lanes). Any lanes beyond the valid
+/// ones are zeroed. Returns the max-norm residual against the current
+/// `logm` row. Must stay op-for-op identical to
 /// [`super::native::NativeEngine::candidate_row`] — both call this.
 pub(crate) fn candidate_row_from_belief(
     mrf: &Mrf,
@@ -370,34 +387,35 @@ pub(crate) fn candidate_row_from_belief(
     cavity: &mut Vec<f32>,
     out: &mut [f32],
 ) -> f32 {
-    let a_max = mrf.max_arity;
-    debug_assert_eq!(out.len(), a_max);
     let u = mrf.src[e] as usize;
     let v = mrf.dst[e] as usize;
     let (au, av) = (mrf.arity_of(u), mrf.arity_of(v));
+    debug_assert!(out.len() >= av);
 
-    // cavity = belief_u - logm[rev[e]]
+    // cavity = belief_u - logm[rev[e]] (both rows are arity(u)-shaped:
+    // full padded width under envelope, exactly au lanes under CSR)
     let r = mrf.rev[e] as usize;
-    let rrow = &logm[r * a_max..(r + 1) * a_max];
+    let rrow = &logm[mrf.msg_rows.range(r)];
     cavity.clear();
     cavity.extend(belief_u.iter().zip(rrow).map(|(b, m)| b - m));
 
     // new[b] = contract_a(pair[a, b] + cavity[a]) over valid source
     // lanes: LSE for sum-product, max for max-product (MAP)
-    let pair = &mrf.log_pair[e * a_max * a_max..(e + 1) * a_max * a_max];
+    let pair = &mrf.log_pair[mrf.pair_rows.range(e)];
+    let stride = mrf.pair_stride(e);
     match opts.semiring {
         Semiring::SumProduct => {
             for b in 0..av {
                 let mut mx = NEG;
                 for a in 0..au {
-                    let t = pair[a * a_max + b] + cavity[a];
+                    let t = pair[a * stride + b] + cavity[a];
                     if t > mx {
                         mx = t;
                     }
                 }
                 let mut s = 0.0f32;
                 for a in 0..au {
-                    s += (pair[a * a_max + b] + cavity[a] - mx).exp();
+                    s += (pair[a * stride + b] + cavity[a] - mx).exp();
                 }
                 out[b] = mx + s.ln();
             }
@@ -406,7 +424,7 @@ pub(crate) fn candidate_row_from_belief(
             for b in 0..av {
                 let mut mx = NEG;
                 for a in 0..au {
-                    let t = pair[a * a_max + b] + cavity[a];
+                    let t = pair[a * stride + b] + cavity[a];
                     if t > mx {
                         mx = t;
                     }
@@ -420,7 +438,7 @@ pub(crate) fn candidate_row_from_belief(
     // AOT program in model.py)
     let lam = opts.damping;
     if lam > 0.0 {
-        let old = &logm[e * a_max..(e + 1) * a_max];
+        let old = &logm[mrf.msg_rows.range(e)];
         for (o, &prev) in out[..av].iter_mut().zip(old) {
             *o = (1.0 - lam) * *o + lam * prev;
         }
@@ -430,8 +448,9 @@ pub(crate) fn candidate_row_from_belief(
         *o = 0.0;
     }
 
-    // residual vs current row
-    let old = &logm[e * a_max..(e + 1) * a_max];
+    // residual vs current row (zip truncates to the stored row's width;
+    // envelope pads contribute 0 - 0 = 0 exactly as before)
+    let old = &logm[mrf.msg_rows.range(e)];
     out.iter()
         .zip(old)
         .map(|(n, o)| (n - o).abs())

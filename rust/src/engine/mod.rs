@@ -135,8 +135,10 @@ pub trait MessageEngine {
     }
 
     /// Row-granular recompute: the BP update for the single edge `e`,
-    /// written into `out` (length `max_arity`, padded lanes zeroed);
-    /// returns the max-norm residual against the current `logm` row.
+    /// written into `out` (at least `arity(dst[e])` lanes — envelope
+    /// callers hand `max_arity`, CSR callers exactly the valid lanes;
+    /// lanes beyond the valid ones are zeroed); returns the max-norm
+    /// residual against the current `logm` row.
     ///
     /// This is the row-granular entry point of the coordinator's *lazy*
     /// residual refresh, which resolves deferred dirty edges on
@@ -158,10 +160,16 @@ pub trait MessageEngine {
         e: usize,
         out: &mut [f32],
     ) -> Result<f32> {
-        debug_assert_eq!(out.len(), mrf.max_arity);
+        debug_assert!(out.len() >= mrf.arity_of(mrf.dst[e] as usize));
         let mut batch = CandidateBatch::default();
         self.candidates_into(mrf, logm, &[e as i32], &mut batch)?;
-        out.copy_from_slice(&batch.new_m[..mrf.max_arity]);
+        // the bulk batch row is dense max_arity-wide with zeroed pads;
+        // copy what fits (an arity-exact `out` takes only valid lanes)
+        let n = out.len().min(mrf.max_arity);
+        out[..n].copy_from_slice(&batch.new_m[..n]);
+        for o in out[n..].iter_mut() {
+            *o = 0.0;
+        }
         Ok(batch.residuals[0])
     }
 

@@ -39,13 +39,14 @@ impl NativeEngine {
     }
 
     /// Compute the candidate row for a single directed edge into `out`
-    /// (length A, padded lanes set to 0). Returns the residual.
+    /// (at least `arity(dst[e])` lanes; any extra lanes are zeroed).
+    /// Returns the residual.
     ///
     /// This is the serial hot path (SRBP): belief gather + cavity +
     /// clamped-LSE contraction + normalization, all in f32 like the
     /// artifact programs.
     pub fn candidate_row(&mut self, mrf: &Mrf, logm: &[f32], e: usize, out: &mut [f32]) -> f32 {
-        debug_assert_eq!(out.len(), mrf.max_arity);
+        debug_assert!(out.len() >= mrf.arity_of(mrf.dst[e] as usize));
         // belief_u = log_unary[u] + sum of incoming messages, then
         // cavity + contraction + normalize + damping + residual: the op
         // sequence shared bit-for-bit with the parallel engine.

@@ -17,7 +17,7 @@
 //! constant structure tensors was the dominant per-iteration overhead
 //! (EXPERIMENTS.md §Perf).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::{CandidateBatch, MessageEngine, UpdateOptions};
 use crate::graph::Mrf;
@@ -119,6 +119,12 @@ impl MessageEngine for PjrtEngine {
         frontier: &[i32],
         out: &mut CandidateBatch,
     ) -> Result<()> {
+        if !mrf.is_envelope() {
+            bail!(
+                "pjrt engine requires the envelope layout (AOT artifacts are \
+                 compiled against padded class shapes); use native/parallel for CSR graphs"
+            );
+        }
         let a = mrf.max_arity;
         let n = frontier.len();
         let class = self.rt.class(&mrf.class_name)?;
@@ -174,6 +180,9 @@ impl MessageEngine for PjrtEngine {
     }
 
     fn marginals(&mut self, mrf: &Mrf, logm: &[f32]) -> Result<Vec<f32>> {
+        if !mrf.is_envelope() {
+            bail!("pjrt engine requires the envelope layout; use native/parallel for CSR graphs");
+        }
         self.graph_buffers(mrf)?;
         let client = self.rt.client().clone();
         let logm_buf =

@@ -141,15 +141,15 @@ impl MrfBuilder {
             fill[t] += 1;
         }
 
-        let mrf = Mrf {
-            instance_id: super::next_instance_id(),
-            class_name: name,
-            num_vertices: env_v,
-            num_edges: env_m,
-            live_vertices: live_v,
-            live_edges: live_m,
-            max_arity: env_a,
-            max_in_degree: env_d,
+        let mrf = super::assemble_envelope(
+            super::next_instance_id(),
+            name,
+            env_v,
+            env_m,
+            live_v,
+            live_m,
+            env_a,
+            env_d,
             arity,
             src,
             dst,
@@ -157,7 +157,7 @@ impl MrfBuilder {
             in_edges,
             log_unary,
             log_pair,
-        };
+        );
         super::validate::validate(&mrf).context("builder produced invalid MRF")?;
         Ok(mrf)
     }

@@ -1,0 +1,169 @@
+//! Row-layout abstraction: uniform (envelope) vs prefix-sum (CSR) row
+//! addressing over one flat payload vector.
+//!
+//! Every per-row tensor in the system — message rows `[M]`, unary rows
+//! `[V]`, pairwise tables `[M]` — is a flat `Vec<f32>` addressed through
+//! a [`RowLayout`]. The uniform variant stores no offsets at all:
+//! `start(i) = i * width` is the exact multiplication the envelope code
+//! has always used, so envelope graphs keep bit-identical indexing
+//! arithmetic by construction. The ragged variant holds an `Arc`'d
+//! prefix-sum table (`off[i]..off[i+1]`), sized by *actual* arities —
+//! the CSR layout that makes million-vertex skewed-arity graphs pay
+//! only for the lanes they have.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Addresses `rows` rows inside one flat payload vector: either a
+/// uniform stride (envelope) or prefix-sum offsets (CSR). Cloning is
+/// cheap — ragged offsets are shared behind an [`Arc`].
+#[derive(Clone, Debug, Default)]
+pub struct RowLayout {
+    rows: usize,
+    /// Uniform row width; meaningful only when `off` is `None`.
+    width: usize,
+    /// Prefix sums `[rows + 1]` for ragged rows; `None` = uniform.
+    off: Option<Arc<Vec<u32>>>,
+}
+
+impl RowLayout {
+    /// All rows share one width; `start(i)` is a pure multiplication
+    /// (no offset table is materialized).
+    pub fn uniform(rows: usize, width: usize) -> RowLayout {
+        RowLayout { rows, width, off: None }
+    }
+
+    /// Ragged rows from per-row widths (prefix-summed into offsets).
+    pub fn from_widths(widths: impl IntoIterator<Item = usize>) -> RowLayout {
+        let mut off = Vec::new();
+        off.push(0u32);
+        let mut total = 0u64;
+        for w in widths {
+            total += w as u64;
+            assert!(total <= u32::MAX as u64, "row layout exceeds u32 offsets");
+            off.push(total as u32);
+        }
+        RowLayout {
+            rows: off.len() - 1,
+            width: 0,
+            off: Some(Arc::new(off)),
+        }
+    }
+
+    /// First payload index of row `i`.
+    #[inline]
+    pub fn start(&self, i: usize) -> usize {
+        match &self.off {
+            None => i * self.width,
+            Some(o) => o[i] as usize,
+        }
+    }
+
+    /// One past the last payload index of row `i`.
+    #[inline]
+    pub fn end(&self, i: usize) -> usize {
+        match &self.off {
+            None => (i + 1) * self.width,
+            Some(o) => o[i + 1] as usize,
+        }
+    }
+
+    /// Width (lane count) of row `i`.
+    #[inline]
+    pub fn width(&self, i: usize) -> usize {
+        match &self.off {
+            None => self.width,
+            Some(o) => (o[i + 1] - o[i]) as usize,
+        }
+    }
+
+    /// Payload range of row `i`.
+    #[inline]
+    pub fn range(&self, i: usize) -> Range<usize> {
+        self.start(i)..self.end(i)
+    }
+
+    /// Total payload length addressed by all rows.
+    #[inline]
+    pub fn total(&self) -> usize {
+        match &self.off {
+            None => self.rows * self.width,
+            Some(o) => *o.last().expect("offsets hold rows+1 entries") as usize,
+        }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// True when every row shares one stride (no offset table).
+    #[inline]
+    pub fn is_uniform(&self) -> bool {
+        self.off.is_none()
+    }
+
+    /// The shared width of a uniform layout, `None` when ragged.
+    #[inline]
+    pub fn uniform_width(&self) -> Option<usize> {
+        match &self.off {
+            None => Some(self.width),
+            Some(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_pure_multiplication() {
+        let l = RowLayout::uniform(5, 3);
+        assert!(l.is_uniform());
+        assert_eq!(l.uniform_width(), Some(3));
+        assert_eq!(l.rows(), 5);
+        assert_eq!(l.total(), 15);
+        for i in 0..5 {
+            assert_eq!(l.start(i), i * 3);
+            assert_eq!(l.end(i), (i + 1) * 3);
+            assert_eq!(l.width(i), 3);
+            assert_eq!(l.range(i), i * 3..(i + 1) * 3);
+        }
+    }
+
+    #[test]
+    fn ragged_prefix_sums() {
+        let l = RowLayout::from_widths([2usize, 4, 1, 3]);
+        assert!(!l.is_uniform());
+        assert_eq!(l.uniform_width(), None);
+        assert_eq!(l.rows(), 4);
+        assert_eq!(l.total(), 10);
+        assert_eq!(l.range(0), 0..2);
+        assert_eq!(l.range(1), 2..6);
+        assert_eq!(l.range(2), 6..7);
+        assert_eq!(l.range(3), 7..10);
+        assert_eq!(l.width(1), 4);
+        assert_eq!(l.width(2), 1);
+    }
+
+    #[test]
+    fn empty_layouts() {
+        let u = RowLayout::uniform(0, 7);
+        assert_eq!(u.total(), 0);
+        let r = RowLayout::from_widths(std::iter::empty());
+        assert_eq!(r.rows(), 0);
+        assert_eq!(r.total(), 0);
+    }
+
+    #[test]
+    fn ragged_matching_uniform_addresses_identically() {
+        let u = RowLayout::uniform(6, 4);
+        let r = RowLayout::from_widths(std::iter::repeat(4).take(6));
+        for i in 0..6 {
+            assert_eq!(u.range(i), r.range(i));
+        }
+        assert_eq!(u.total(), r.total());
+    }
+}

@@ -1,38 +1,60 @@
-//! Message state: the `[M, A]` log-message matrix owned by the coordinator.
+//! Message state: the per-edge log-message matrix owned by the coordinator.
 
-use super::Mrf;
+use super::{Mrf, RowLayout};
 
-/// Log-space messages, one row per directed edge. Padded arity lanes are
-/// stored as exactly `0.0` (the convention the L2 model preserves).
+/// Log-space messages, one row per directed edge, addressed through the
+/// graph's [`RowLayout`] (uniform `max_arity` stride under the envelope
+/// layout, arity-exact under CSR). Envelope padded arity lanes are
+/// stored as exactly `0.0` (the convention the L2 model preserves) and
+/// are *inert*: [`set_row`](Messages::set_row) never writes them and
+/// [`row_distance`](Messages::row_distance) never reads them, so
+/// garbage in a candidate's padded lanes cannot reach the stored state
+/// or a residual.
 #[derive(Clone, Debug)]
 pub struct Messages {
     data: Vec<f32>,
-    arity: usize,
+    rows: RowLayout,
+    /// Live lane count per row: `arity(dst[e])` for live edges, 0 for
+    /// envelope padding rows.
+    valid: Vec<u32>,
 }
 
 impl Messages {
     /// Uniform initialization: `m_e(x) = 1/arity(dst[e])` on valid lanes.
     pub fn uniform(mrf: &Mrf) -> Self {
-        let a = mrf.max_arity;
-        let mut data = vec![0.0f32; mrf.num_edges * a];
+        let rows = mrf.msg_rows.clone();
+        let mut data = vec![0.0f32; rows.total()];
+        let mut valid = vec![0u32; rows.rows()];
         for e in 0..mrf.live_edges {
             let av = mrf.arity_of(mrf.dst[e] as usize);
             let val = -(av as f32).ln();
-            for x in 0..av {
-                data[e * a + x] = val;
-            }
+            let s = rows.start(e);
+            data[s..s + av].fill(val);
+            valid[e] = av as u32;
         }
-        Messages { data, arity: a }
+        Messages { data, rows, valid }
     }
 
+    /// Full physical row of edge `e` (including envelope pad lanes).
     #[inline]
     pub fn row(&self, e: usize) -> &[f32] {
-        &self.data[e * self.arity..(e + 1) * self.arity]
+        &self.data[self.rows.range(e)]
     }
 
+    /// Live lane count of edge `e`'s row.
+    #[inline]
+    pub fn valid_lanes(&self, e: usize) -> usize {
+        self.valid[e] as usize
+    }
+
+    /// Overwrite the *valid* lanes of row `e` from `row` (which may be
+    /// any physical width >= the valid lane count — extra lanes are
+    /// ignored, and stored pad lanes keep their `0.0` fill).
     #[inline]
     pub fn set_row(&mut self, e: usize, row: &[f32]) {
-        self.data[e * self.arity..(e + 1) * self.arity].copy_from_slice(row);
+        let n = self.valid[e] as usize;
+        let s = self.rows.start(e);
+        self.data[s..s + n].copy_from_slice(&row[..n]);
     }
 
     #[inline]
@@ -40,19 +62,24 @@ impl Messages {
         &self.data
     }
 
+    /// Row addressing shared with the graph's `msg_rows`.
     #[inline]
-    pub fn arity(&self) -> usize {
-        self.arity
+    pub fn layout(&self) -> &RowLayout {
+        &self.rows
     }
 
     pub fn num_rows(&self) -> usize {
-        self.data.len() / self.arity
+        self.rows.rows()
     }
 
-    /// Max-norm distance between a row and a candidate row.
+    /// Max-norm distance between a row and a candidate row, over valid
+    /// lanes only — a candidate's padded-lane garbage cannot register
+    /// as residual.
     #[inline]
     pub fn row_distance(&self, e: usize, candidate: &[f32]) -> f32 {
-        self.row(e)
+        let n = self.valid[e] as usize;
+        let s = self.rows.start(e);
+        self.data[s..s + n]
             .iter()
             .zip(candidate)
             .map(|(a, b)| (a - b).abs())
@@ -63,6 +90,7 @@ impl Messages {
 #[cfg(test)]
 mod tests {
     use crate::datasets;
+    use crate::graph::MrfBuilder;
     use crate::util::Rng;
 
     #[test]
@@ -85,8 +113,57 @@ mod tests {
         let mut m = g.uniform_messages();
         let new = vec![-0.5, -1.2];
         m.set_row(3, &new);
-        assert_eq!(m.row(3), &new[..]);
+        assert_eq!(m.row(3)[..2], new[..]);
         assert!((m.row_distance(3, &[-0.5, -1.2])).abs() < 1e-9);
         assert!(m.row_distance(3, &[0.0, 0.0]) > 1.0);
+    }
+
+    /// Mixed-arity envelope graph: vertex arities 2/3/2 inside an A=3
+    /// envelope, so edges into the binary vertices have one pad lane.
+    fn mixed() -> crate::Mrf {
+        let mut b = MrfBuilder::new("mixed", 3);
+        b.add_vertex(&[0.1, 0.2]);
+        b.add_vertex(&[0.0, -0.1, 0.1]);
+        b.add_vertex(&[0.3, -0.3]);
+        b.add_edge(0, 1, &[0.2, -0.1, 0.1, -0.2, 0.0, 0.1]);
+        b.add_edge(1, 2, &[0.1, -0.1, 0.0, 0.2, -0.2, 0.3]);
+        b.build(None).unwrap()
+    }
+
+    /// Satellite-2 property: padded-lane garbage can never leak — not
+    /// into stored rows through `set_row`, not into residuals through
+    /// `row_distance`. Checked over every edge of a mixed-arity graph
+    /// with adversarial pad-lane payloads (huge magnitudes and NaN).
+    #[test]
+    fn padded_lane_garbage_never_leaks() {
+        let g = mixed();
+        let mut m = g.uniform_messages();
+        let mut rng = Rng::new(7);
+        for e in 0..g.live_edges {
+            let av = g.arity_of(g.dst[e] as usize);
+            let w = m.row(e).len();
+            // candidate: sane valid lanes, garbage (incl. NaN) beyond
+            let mut cand = vec![0.0f32; w];
+            for x in cand.iter_mut().take(av) {
+                *x = rng.range(-0.5, 0.5) as f32;
+            }
+            for (i, x) in cand.iter_mut().enumerate().skip(av) {
+                *x = if i % 2 == 0 { 1.0e30 } else { f32::NAN };
+            }
+            let d = m.row_distance(e, &cand);
+            assert!(d.is_finite(), "edge {e}: pad-lane garbage reached the residual");
+            let clean = m.row(e)[..av]
+                .iter()
+                .zip(&cand)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert_eq!(d, clean, "edge {e}: residual must be the valid-lane distance");
+            m.set_row(e, &cand);
+            assert!(
+                m.row(e)[av..].iter().all(|&x| x == 0.0),
+                "edge {e}: set_row leaked garbage into pad lanes"
+            );
+            assert_eq!(m.row(e)[..av], cand[..av]);
+        }
     }
 }

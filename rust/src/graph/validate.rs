@@ -1,42 +1,32 @@
-//! Structural validation of envelope-layout MRFs.
+//! Structural validation of MRFs, layout-aware.
 //!
-//! Every generator and the builder funnel through [`validate`]; the
-//! invariants here are exactly the assumptions the L2 model (and therefore
-//! the AOT artifacts) make about their inputs.
+//! Every generator, the builder, and the CSR conversion/streaming
+//! loader funnel through [`validate`]; the envelope invariants here are
+//! exactly the assumptions the L2 model (and therefore the AOT
+//! artifacts) make about their inputs, and the CSR invariants are the
+//! assumptions the offset-based engine/coordinator paths make.
 
 use anyhow::{bail, Result};
 
-use super::Mrf;
+use super::{Layout, Mrf};
 
 /// Check all structural invariants; returns Err with a description of the
 /// first violation.
 pub fn validate(mrf: &Mrf) -> Result<()> {
-    let (v, m, a, d) = (
-        mrf.num_vertices,
-        mrf.num_edges,
-        mrf.max_arity,
-        mrf.max_in_degree,
-    );
+    let (v, m) = (mrf.num_vertices, mrf.num_edges);
     if mrf.live_vertices > v || mrf.live_edges > m {
         bail!("live counts exceed envelope");
     }
     if mrf.live_edges % 2 != 0 {
         bail!("directed edges must come in reverse pairs");
     }
-    if mrf.arity.len() != v
-        || mrf.src.len() != m
-        || mrf.dst.len() != m
-        || mrf.rev.len() != m
-        || mrf.in_edges.len() != v * d
-        || mrf.log_unary.len() != v * a
-        || mrf.log_pair.len() != m * a * a
-    {
-        bail!("tensor shape mismatch with envelope");
+    if mrf.arity.len() != v || mrf.src.len() != m || mrf.dst.len() != m || mrf.rev.len() != m {
+        bail!("index tensor shape mismatch");
     }
 
     for vert in 0..v {
         let ar = mrf.arity[vert];
-        if ar < 0 || ar as usize > a {
+        if ar < 0 || ar as usize > mrf.max_arity {
             bail!("vertex {vert} arity {ar} out of range");
         }
         if vert < mrf.live_vertices && ar == 0 {
@@ -64,35 +54,101 @@ pub fn validate(mrf: &Mrf) -> Result<()> {
         }
     }
 
-    // in_edges: -1-padded suffix per row; live entries must be live edges
-    // into exactly that vertex, and each live edge appears exactly once.
+    // CSR incoming adjacency (both layouts): monotone offsets covering
+    // every live edge exactly once, grouped by destination vertex.
+    if mrf.in_off.len() != v + 1 || mrf.in_off[0] != 0 {
+        bail!("in_off must hold V+1 monotone offsets starting at 0");
+    }
+    if mrf.in_adj.len() != mrf.live_edges {
+        bail!(
+            "in_adj holds {} slots for {} live edges",
+            mrf.in_adj.len(),
+            mrf.live_edges
+        );
+    }
     let mut seen = vec![false; mrf.live_edges];
     for vert in 0..v {
-        let row = &mrf.in_edges[vert * d..(vert + 1) * d];
-        let mut ended = false;
-        for &entry in row {
-            if entry < 0 {
-                ended = true;
-                continue;
-            }
-            if ended {
-                bail!("vertex {vert}: in_edges has live entry after -1 padding");
-            }
+        let (lo, hi) = (mrf.in_off[vert] as usize, mrf.in_off[vert + 1] as usize);
+        if lo > hi || hi > mrf.in_adj.len() {
+            bail!("vertex {vert}: in_off range {lo}..{hi} invalid");
+        }
+        for &entry in &mrf.in_adj[lo..hi] {
             let e = entry as usize;
             if e >= mrf.live_edges {
-                bail!("vertex {vert}: in_edge {e} is a padding edge");
+                bail!("vertex {vert}: in-edge {e} is not a live edge");
             }
             if mrf.dst[e] as usize != vert {
-                bail!("vertex {vert}: in_edge {e} targets {}", mrf.dst[e]);
+                bail!("vertex {vert}: in-edge {e} targets {}", mrf.dst[e]);
             }
             if seen[e] {
-                bail!("edge {e} appears twice in in_edges");
+                bail!("edge {e} appears twice in incoming adjacency");
             }
             seen[e] = true;
         }
     }
     if let Some(missing) = seen.iter().position(|&s| !s) {
-        bail!("live edge {missing} missing from in_edges");
+        bail!("live edge {missing} missing from incoming adjacency");
+    }
+
+    // Row layouts must address the payload vectors they describe.
+    if mrf.unary_rows.rows() != v
+        || mrf.msg_rows.rows() != m
+        || mrf.pair_rows.rows() != m
+        || mrf.unary_rows.total() != mrf.log_unary.len()
+        || mrf.pair_rows.total() != mrf.log_pair.len()
+    {
+        bail!("row layout / payload shape mismatch");
+    }
+
+    match mrf.layout {
+        Layout::Envelope => validate_envelope(mrf),
+        Layout::Csr => validate_csr(mrf),
+    }
+}
+
+/// Envelope-specific invariants: uniform layouts at the declared
+/// strides, `in_edges` padding discipline (and agreement with the
+/// derived CSR adjacency), NEG-filled pad lanes.
+fn validate_envelope(mrf: &Mrf) -> Result<()> {
+    let (v, m, a, d) = (
+        mrf.num_vertices,
+        mrf.num_edges,
+        mrf.max_arity,
+        mrf.max_in_degree,
+    );
+    if mrf.unary_rows.uniform_width() != Some(a)
+        || mrf.msg_rows.uniform_width() != Some(a)
+        || mrf.pair_rows.uniform_width() != Some(a * a)
+    {
+        bail!("envelope layouts must be uniform at the declared strides");
+    }
+    if mrf.in_edges.len() != v * d || mrf.log_unary.len() != v * a || mrf.log_pair.len() != m * a * a
+    {
+        bail!("tensor shape mismatch with envelope");
+    }
+
+    // in_edges: -1-padded suffix per row, agreeing entry-for-entry with
+    // the derived in_off/in_adj adjacency (the structural cross-check —
+    // uniqueness/coverage ran on the CSR side already).
+    for vert in 0..v {
+        let row = &mrf.in_edges[vert * d..(vert + 1) * d];
+        let (lo, hi) = (mrf.in_off[vert] as usize, mrf.in_off[vert + 1] as usize);
+        let deg = hi - lo;
+        if deg > d {
+            bail!("vertex {vert}: in-degree {deg} exceeds envelope D={d}");
+        }
+        for (i, &entry) in row.iter().enumerate() {
+            if i < deg {
+                if entry < 0 {
+                    bail!("vertex {vert}: in_edges has -1 before {deg} live entries");
+                }
+                if entry as u32 != mrf.in_adj[lo + i] {
+                    bail!("vertex {vert}: in_edges[{i}] disagrees with in_adj");
+                }
+            } else if entry >= 0 {
+                bail!("vertex {vert}: in_edges has live entry after -1 padding");
+            }
+        }
     }
 
     // Potentials: live lanes finite, padded lanes <= NEG-ish.
@@ -130,6 +186,48 @@ pub fn validate(mrf: &Mrf) -> Result<()> {
     Ok(())
 }
 
+/// CSR-specific invariants: no padding anywhere, arity-exact row
+/// widths, every lane live and finite.
+fn validate_csr(mrf: &Mrf) -> Result<()> {
+    if mrf.live_vertices != mrf.num_vertices || mrf.live_edges != mrf.num_edges {
+        bail!("CSR graphs carry no padding vertices/edges");
+    }
+    if !mrf.in_edges.is_empty() {
+        bail!("CSR graphs keep adjacency in in_off/in_adj, not in_edges");
+    }
+    for vert in 0..mrf.num_vertices {
+        if mrf.unary_rows.width(vert) != mrf.arity_of(vert) {
+            bail!(
+                "vertex {vert}: unary row width {} != arity {}",
+                mrf.unary_rows.width(vert),
+                mrf.arity_of(vert)
+            );
+        }
+        if mrf.in_degree(vert) > mrf.max_in_degree {
+            bail!("vertex {vert}: in-degree exceeds recorded max_in_degree");
+        }
+    }
+    for e in 0..mrf.num_edges {
+        let (au, av) = (
+            mrf.arity_of(mrf.src[e] as usize),
+            mrf.arity_of(mrf.dst[e] as usize),
+        );
+        if mrf.msg_rows.width(e) != av {
+            bail!("edge {e}: message row width {} != arity(dst) {av}", mrf.msg_rows.width(e));
+        }
+        if mrf.pair_rows.width(e) != au * av {
+            bail!("edge {e}: pair table width {} != {au}x{av}", mrf.pair_rows.width(e));
+        }
+    }
+    if let Some(bad) = mrf.log_unary.iter().position(|x| !x.is_finite()) {
+        bail!("CSR unary lane {bad} not finite");
+    }
+    if let Some(bad) = mrf.log_pair.iter().position(|x| !x.is_finite()) {
+        bail!("CSR pair lane {bad} not finite");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use crate::datasets;
@@ -144,6 +242,7 @@ mod tests {
             datasets::protein::generate("p", &Default::default(), &mut rng).unwrap(),
         ] {
             super::validate(&g).unwrap();
+            super::validate(&g.to_csr()).unwrap();
         }
     }
 
@@ -165,6 +264,22 @@ mod tests {
         // pad *vertex* lane instead if the envelope has padding; when it
         // doesn't (tight), corrupt in_edges ordering.
         g.in_edges[1] = -1; // make a hole before a live entry (deg>=2 at v0)
+        assert!(super::validate(&g).is_err());
+    }
+
+    #[test]
+    fn csr_corruption_detected() {
+        let mut rng = Rng::new(8);
+        let base = datasets::ising::generate("i", 5, 2.0, &mut rng).unwrap();
+        let mut g = base.to_csr();
+        g.log_unary[0] = f32::NAN;
+        assert!(super::validate(&g).is_err(), "NaN lane must be rejected");
+        let mut g = base.to_csr();
+        let last = *g.in_adj.last().unwrap();
+        g.in_adj[0] = last; // duplicate one in-edge, drop another
+        assert!(super::validate(&g).is_err());
+        let mut g = base.to_csr();
+        g.in_edges = vec![-1; 4]; // CSR must not carry in_edges
         assert!(super::validate(&g).is_err());
     }
 }

@@ -12,7 +12,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use bp_sched::config::HarnessConfig;
+use bp_sched::config::{EngineKind, HarnessConfig};
 use bp_sched::coordinator::campaign::{serve_stream, EvidenceStream, ServeStats};
 use bp_sched::coordinator::SessionBuilder;
 use bp_sched::datasets::{serialize, DatasetSpec};
@@ -81,8 +81,15 @@ COMMON FLAGS (also settable via --config file.toml):
   --out-dir DIR         JSON report directory (default results/)
 
 RUN FLAGS:
-  --dataset ising|chain|protein   (default ising)
-  --n N --c X                     dataset shape/difficulty
+  --dataset ising|chain|protein|potts|ldpc|stereo   (default ising)
+  --n N --c X                     dataset shape/difficulty (ldpc: ~variable
+                                  count; stereo: grid width)
+  --q N                 labels per variable (potts/stereo; default 8)
+  --rows N              stereo grid height (default: --n, i.e. square)
+  --dv N --dc N         ldpc variable/check degrees (default 3/6)
+                        ldpc and stereo build arity-exact CSR graphs via
+                        the streaming loader: no class envelope, native or
+                        parallel engine only, no .bpmrf persistence
   --scheduler lbp|rbp|rs|rnbp|mq|srbp   (--sched is an alias)
   --p X --lowp X --highp X --h N  scheduler parameters (X may be 1/16)
   --threads N           mq only: relaxed selection workers (>= 1; a
@@ -134,6 +141,14 @@ struct RunFlags {
     lowp: f64,
     highp: f64,
     h: usize,
+    /// Labels per variable (potts / stereo).
+    q: usize,
+    /// Stereo grid height (`None` = square, reuse `n`).
+    rows: Option<usize>,
+    /// LDPC variable degree.
+    dv: usize,
+    /// LDPC check degree.
+    dc: usize,
     out: Option<String>,
     /// serve: evidence queries per graph.
     queries: usize,
@@ -156,6 +171,10 @@ impl Default for RunFlags {
             lowp: 0.7,
             highp: 1.0,
             h: 2,
+            q: 8,
+            rows: None,
+            dv: 3,
+            dc: 6,
             out: None,
             queries: 16,
             flips: 1,
@@ -184,6 +203,10 @@ fn split_flags(args: &[String], flags: &mut RunFlags) -> Result<Vec<String>> {
             "--lowp" => flags.lowp = parse_ratio(&take(&mut i)?)?,
             "--highp" => flags.highp = parse_ratio(&take(&mut i)?)?,
             "--h" => flags.h = take(&mut i)?.parse()?,
+            "--q" => flags.q = take(&mut i)?.parse()?,
+            "--rows" => flags.rows = Some(take(&mut i)?.parse()?),
+            "--dv" => flags.dv = take(&mut i)?.parse()?,
+            "--dc" => flags.dc = take(&mut i)?.parse()?,
             "--out" => flags.out = Some(take(&mut i)?),
             "--queries" => flags.queries = take(&mut i)?.parse()?,
             "--flips" => flags.flips = take(&mut i)?.parse()?,
@@ -210,8 +233,30 @@ fn spec_of(flags: &RunFlags) -> Result<DatasetSpec> {
         "ising" => DatasetSpec::Ising { n: flags.n, c: flags.c },
         "chain" => DatasetSpec::Chain { n: flags.n, c: flags.c },
         "protein" => DatasetSpec::Protein,
+        "potts" => DatasetSpec::Potts { n: flags.n, q: flags.q, c: flags.c },
+        "ldpc" => DatasetSpec::Ldpc { n: flags.n, dv: flags.dv, dc: flags.dc },
+        "stereo" => DatasetSpec::Stereo {
+            w: flags.n,
+            h: flags.rows.unwrap_or(flags.n),
+            q: flags.q,
+        },
         other => bail!("unknown dataset {other:?}"),
     })
+}
+
+/// CSR datasets have no artifact envelope, so the pjrt stub (which
+/// uploads padded class tensors) cannot run them; fail with a hint
+/// instead of a deep engine error.
+fn check_engine_supports(spec: &DatasetSpec, cfg: &HarnessConfig) -> Result<()> {
+    if spec.is_csr() && cfg.engine == EngineKind::Pjrt {
+        bail!(
+            "dataset {:?} builds an arity-exact CSR graph; the pjrt engine \
+             only runs padded envelope classes — pass --engine native or \
+             --engine parallel",
+            spec.label()
+        );
+    }
+    Ok(())
 }
 
 /// Coordinator (GPU) scheduler from run flags; `srbp` is the serial
@@ -243,6 +288,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     cfg.apply_args(&rest)?;
 
     let spec = spec_of(&flags)?;
+    check_engine_supports(&spec, &cfg)?;
     let mut rng = Rng::new(cfg.seed);
     let graph = spec.generate(&mut rng)?;
     println!(
@@ -337,6 +383,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     make_gpu_sched(&flags, &cfg)?; // fail fast so the factory below cannot
 
     let spec = spec_of(&flags)?;
+    check_engine_supports(&spec, &cfg)?;
     let ds = spec.generate_many(cfg.graphs, cfg.seed)?;
     let params = harness::gpu_params(&cfg);
     println!(
@@ -439,6 +486,14 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         bail!("generate needs --out FILE");
     };
     let spec = spec_of(&flags)?;
+    if spec.is_csr() {
+        bail!(
+            "the .bpmrf format stores padded envelope tensors; {} is an \
+             arity-exact CSR dataset built in memory by the streaming \
+             loader — use `run`/`serve` directly",
+            spec.label()
+        );
+    }
     let mut rng = Rng::new(cfg.seed);
     let graph = spec.generate(&mut rng)?;
     serialize::save(&graph, &out)?;

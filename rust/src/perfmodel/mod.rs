@@ -33,6 +33,38 @@
 //! [`CostModel::reduce_cost`] (on a device the filter fuses into the
 //! update kernel's predicate).
 
+use crate::graph::Mrf;
+
+/// Mean bytes moved per message update over the *live* edges of a
+/// graph, arity-exact: edge `e = (u → v)` gathers `d_u` incoming rows
+/// plus the unary plus the reverse message (all `arity(u)` floats
+/// each), reads the `arity(u) × arity(v)` pairwise table, and writes
+/// the new `arity(v)`-wide row plus one residual.
+///
+/// The envelope-era accounting fed [`CostModel::update_cost`] the
+/// *padded* shape — `max_arity` lanes and `max_in_degree` rows for
+/// every edge — so mixed-arity and skewed-degree graphs billed device
+/// bandwidth for lanes no update ever touches (on the
+/// protein-vs-binary mixes that inflates modeled update time by the
+/// padding ratio). This mean reflects the bytes the arity-exact row
+/// layouts actually move; it is layout-independent (an envelope graph
+/// and its [`Mrf::to_csr`] twin bill identically) because padded lanes
+/// were never real work on either layout.
+pub fn mean_bytes_per_msg(mrf: &Mrf) -> f64 {
+    if mrf.live_edges == 0 {
+        return 0.0;
+    }
+    let mut floats = 0.0f64;
+    for e in 0..mrf.live_edges {
+        let u = mrf.src[e] as usize;
+        let au = mrf.arity_of(u) as f64;
+        let av = mrf.arity_of(mrf.dst[e] as usize) as f64;
+        let du = mrf.in_degree(u) as f64;
+        floats += (du + 2.0) * au + au * av + av + 1.0;
+    }
+    4.0 * floats / mrf.live_edges as f64
+}
+
 /// How a scheduler builds its frontier — determines selection cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SelectKind {
@@ -101,21 +133,32 @@ impl CostModel {
         }
     }
 
-    /// Bytes moved per message update: gather D incoming rows + unary +
-    /// reverse message (A floats each), read the A x A pairwise table,
-    /// write the new row + residual.
+    /// Bytes moved per message update at a *uniform* shape: gather D
+    /// incoming rows + unary + reverse message (A floats each), read
+    /// the A x A pairwise table, write the new row + residual. The
+    /// worst-case (padded-envelope) figure; the coordinator bills with
+    /// the graph's arity-exact [`mean_bytes_per_msg`] instead.
     fn bytes_per_msg(&self, arity: usize, degree: usize) -> f64 {
         let a = arity as f64;
         let d = degree as f64;
         4.0 * ((d + 2.0) * a + a * a + a + 1.0)
     }
 
-    /// One bulk message-update (or residual-refresh) kernel over n edges.
+    /// One bulk message-update (or residual-refresh) kernel over n
+    /// edges at a uniform (arity, degree) shape — wrapper over
+    /// [`update_cost_bytes`](Self::update_cost_bytes) for callers
+    /// without a graph at hand.
     pub fn update_cost(&self, n: usize, arity: usize, degree: usize) -> f64 {
+        self.update_cost_bytes(n, self.bytes_per_msg(arity, degree))
+    }
+
+    /// One bulk message-update kernel over n edges moving
+    /// `bytes_per_msg` bytes each (typically [`mean_bytes_per_msg`]).
+    pub fn update_cost_bytes(&self, n: usize, bytes_per_msg: f64) -> f64 {
         if n == 0 {
             return 0.0;
         }
-        self.launch_s + n as f64 * self.bytes_per_msg(arity, degree) / self.mem_bw
+        self.launch_s + n as f64 * bytes_per_msg / self.mem_bw
     }
 
     /// One selection's worth of the lazy oracle's row-granular
@@ -133,10 +176,18 @@ impl CostModel {
     ///
     /// [`update_cost`]: Self::update_cost
     pub fn resolve_cost(&self, rows: usize, arity: usize, degree: usize) -> f64 {
+        self.resolve_cost_bytes(rows, self.bytes_per_msg(arity, degree))
+    }
+
+    /// [`resolve_cost`](Self::resolve_cost) with an explicit per-row
+    /// byte figure (typically [`mean_bytes_per_msg`]); identical to
+    /// [`update_cost_bytes`](Self::update_cost_bytes) — one fused
+    /// launch over the stream's rows.
+    pub fn resolve_cost_bytes(&self, rows: usize, bytes_per_msg: f64) -> f64 {
         if rows == 0 {
             return 0.0;
         }
-        self.launch_s + rows as f64 * self.bytes_per_msg(arity, degree) / self.mem_bw
+        self.launch_s + rows as f64 * bytes_per_msg / self.mem_bw
     }
 
     /// Key-value radix sort of m residuals.
@@ -256,6 +307,59 @@ mod tests {
             m.resolve_cost(64, 2, 4) < 64.0 * m.update_cost(1, 2, 4) / 10.0,
             "a 64-row stream must amortize far below 64 single-row launches"
         );
+    }
+
+    #[test]
+    fn mean_bytes_per_msg_is_arity_exact() {
+        use crate::graph::MrfBuilder;
+        // Uniform pin: triangle, all arity 2, every vertex in-degree 2 —
+        // the arity-exact mean must equal the closed-form uniform figure
+        // exactly (nothing is padded, so nothing to save).
+        let mut b = MrfBuilder::new("tri", 2);
+        let v: Vec<usize> = (0..3).map(|_| b.add_vertex(&[0.0, 0.1])).collect();
+        b.add_edge(v[0], v[1], &[0.0; 4]);
+        b.add_edge(v[1], v[2], &[0.0; 4]);
+        b.add_edge(v[0], v[2], &[0.0; 4]);
+        let tri = b.build(None).unwrap();
+        let m = CostModel::v100();
+        assert_eq!(mean_bytes_per_msg(&tri), m.bytes_per_msg(2, 2));
+
+        // Mixed-arity pin: one arity-2 / arity-3 edge. The padded
+        // envelope bill charges every row at (max_arity, max_in_degree);
+        // the arity-exact mean is the average of the two directed edges'
+        // true byte counts — hand-computed:
+        //   e0 (u:2 → v:3): (1+2)·2 + 2·3 + 3 + 1 = 16 floats
+        //   e1 (v:3 → u:2): (1+2)·3 + 3·2 + 2 + 1 = 18 floats
+        let mut b = MrfBuilder::new("mix", 3);
+        let u = b.add_vertex(&[0.0, 0.1]);
+        let w = b.add_vertex(&[0.0, 0.1, 0.2]);
+        b.add_edge(u, w, &[0.0; 6]);
+        let mix = b.build(None).unwrap();
+        let exact = mean_bytes_per_msg(&mix);
+        assert_eq!(exact, 4.0 * (16.0 + 18.0) / 2.0);
+        assert!(
+            exact < m.bytes_per_msg(mix.max_arity, mix.max_in_degree),
+            "arity-exact mean must undercut the padded envelope bill"
+        );
+        // Layout-independent: the CSR twin moves the same bytes (padding
+        // was never real work on either layout).
+        assert_eq!(mean_bytes_per_msg(&mix.to_csr()), exact);
+        assert_eq!(mean_bytes_per_msg(&tri.to_csr()), mean_bytes_per_msg(&tri));
+    }
+
+    #[test]
+    fn update_cost_bytes_wrappers_agree() {
+        let m = CostModel::v100();
+        for n in [0usize, 1, 100, 10_000] {
+            assert_eq!(
+                m.update_cost(n, 2, 4),
+                m.update_cost_bytes(n, m.bytes_per_msg(2, 4))
+            );
+            assert_eq!(
+                m.resolve_cost(n, 2, 4),
+                m.resolve_cost_bytes(n, m.bytes_per_msg(2, 4))
+            );
+        }
     }
 
     #[test]

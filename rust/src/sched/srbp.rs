@@ -41,14 +41,17 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
     let mut phases = PhaseTimer::new();
     let clock = Stopwatch::start();
 
-    // initialize residuals + heap
+    // initialize residuals + heap; candidate rows live at the graph's
+    // msg_rows offsets (uniform stride on envelope, arity-exact on CSR),
+    // with one dense max_arity scratch row for the engine to fill
+    let rows = &mrf.msg_rows;
     let mut heap = IndexedHeap::with_capacity(live);
     let mut row = vec![0.0f32; a];
-    let mut cand = vec![0.0f32; live * a];
+    let mut cand = vec![0.0f32; rows.total()];
     phases.time("refresh", || {
         for e in 0..live {
             let r = engine.candidate_row(mrf, &logm, e, &mut row);
-            cand[e * a..(e + 1) * a].copy_from_slice(&row);
+            cand[rows.range(e)].copy_from_slice(&row[..rows.width(e)]);
             // NaN residuals (divergent run) stay in the queue: dropping
             // them would let the run drain the heap and report Converged
             if r >= params.eps || r.is_nan() {
@@ -96,7 +99,8 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         digest.push_edge(e as i32);
         digest.push_wave_end();
         phases.time("commit", || {
-            logm[e * a..(e + 1) * a].copy_from_slice(&cand[e * a..(e + 1) * a]);
+            let rg = rows.range(e);
+            logm[rg.clone()].copy_from_slice(&cand[rg]);
         });
         message_updates += 1;
 
@@ -104,7 +108,7 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         phases.time("refresh", || {
             for d in mrf.dependents(e) {
                 let r = engine.candidate_row(mrf, &logm, d, &mut row);
-                cand[d * a..(d + 1) * a].copy_from_slice(&row);
+                cand[rows.range(d)].copy_from_slice(&row[..rows.width(d)]);
                 // NaN stays queued (see the initialization pass)
                 if r >= params.eps || r.is_nan() {
                     heap.set(d, r);

@@ -70,19 +70,8 @@ where
 
 /// Chunked parallel fill of per-item output rows with per-worker scratch
 /// — the engine-side fan-out behind
-/// [`crate::engine::parallel::ParallelEngine`].
-///
-/// Items `0..n` are split into chunks of `chunk` consecutive items;
-/// workers claim whole chunks from an atomic counter (amortizing the
-/// claim over `chunk` items while still balancing uneven row costs).
-/// Item `i` exclusively owns `rows[i*width..(i+1)*width]` and
-/// `residuals[i]`; `f(scratch, i, row) -> residual` fills them. Each
-/// worker gets its own scratch from `mk_scratch`, so `f` needs no
-/// interior mutability.
-///
-/// Deterministic by construction: every item is computed independently
-/// and written to its own disjoint slot, so the output is bit-identical
-/// for any `threads` / `chunk` / schedule.
+/// [`crate::engine::parallel::ParallelEngine`]. Uniform-width wrapper
+/// over [`par_rows_layout`].
 #[allow(clippy::too_many_arguments)]
 pub fn par_rows<S, Mk, F>(
     n: usize,
@@ -98,17 +87,55 @@ pub fn par_rows<S, Mk, F>(
     F: Fn(&mut S, usize, &mut [f32]) -> f32 + Sync,
 {
     assert_eq!(rows.len(), n * width, "rows buffer sized n * width");
+    let layout = crate::graph::RowLayout::uniform(n, width);
+    par_rows_layout(n, chunk, threads, rows, &layout, residuals, mk_scratch, f);
+}
+
+/// Chunked parallel fill of per-item output rows addressed through a
+/// [`crate::graph::RowLayout`] (uniform envelope stride or arity-exact
+/// CSR offsets), with per-worker scratch.
+///
+/// Items `0..n` are split into chunks of `chunk` consecutive items;
+/// workers claim whole chunks from an atomic counter (amortizing the
+/// claim over `chunk` items while still balancing uneven row costs).
+/// Item `i` exclusively owns `rows[layout.range(i)]` and
+/// `residuals[i]`; `f(scratch, i, row) -> residual` fills them. Each
+/// worker gets its own scratch from `mk_scratch`, so `f` needs no
+/// interior mutability.
+///
+/// Deterministic by construction: every item is computed independently
+/// and written to its own disjoint slot, so the output is bit-identical
+/// for any `threads` / `chunk` / schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn par_rows_layout<S, Mk, F>(
+    n: usize,
+    chunk: usize,
+    threads: usize,
+    rows: &mut [f32],
+    layout: &crate::graph::RowLayout,
+    residuals: &mut [f32],
+    mk_scratch: Mk,
+    f: F,
+) where
+    Mk: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [f32]) -> f32 + Sync,
+{
     assert_eq!(residuals.len(), n, "residuals buffer sized n");
     if n == 0 {
         return;
     }
+    assert!(n <= layout.rows(), "{n} items exceed {} layout rows", layout.rows());
+    assert!(
+        rows.len() >= layout.end(n - 1),
+        "rows buffer shorter than layout extent"
+    );
     let chunk = chunk.max(1);
     let nchunks = n.div_ceil(chunk);
     let threads = threads.clamp(1, nchunks);
     if threads == 1 {
         let mut scratch = mk_scratch();
         for i in 0..n {
-            residuals[i] = f(&mut scratch, i, &mut rows[i * width..(i + 1) * width]);
+            residuals[i] = f(&mut scratch, i, &mut rows[layout.range(i)]);
         }
         return;
     }
@@ -140,12 +167,16 @@ pub fn par_rows<S, Mk, F>(
                     let end = (start + chunk).min(n);
                     for i in start..end {
                         // SAFETY: each chunk id is claimed exactly once,
-                        // chunks cover disjoint item ranges, and item i's
-                        // row slice / residual slot are touched only by
-                        // the worker owning its chunk; the scope joins
-                        // all workers before the buffers are read again.
+                        // chunks cover disjoint item ranges, rows of a
+                        // layout never overlap, and item i's row slice /
+                        // residual slot are touched only by the worker
+                        // owning its chunk; the scope joins all workers
+                        // before the buffers are read again.
                         let row = unsafe {
-                            std::slice::from_raw_parts_mut(rows_ptr.0.add(i * width), width)
+                            std::slice::from_raw_parts_mut(
+                                rows_ptr.0.add(layout.start(i)),
+                                layout.width(i),
+                            )
                         };
                         let r = f(&mut scratch, i, row);
                         unsafe {
@@ -275,6 +306,41 @@ mod tests {
         for t in [2, 3, 8] {
             let (rt, st) = fill(t);
             assert_eq!(r1, rt, "rows differ at {t} threads");
+            assert_eq!(s1, st, "residuals differ at {t} threads");
+        }
+    }
+
+    #[test]
+    fn par_rows_layout_ragged_matches_serial_bitwise() {
+        use crate::graph::RowLayout;
+        let n = 257;
+        let layout = RowLayout::from_widths((0..n).map(|i| 1 + i % 5));
+        let fill = |threads: usize| {
+            let mut rows = vec![0.0f32; layout.total()];
+            let mut res = vec![0.0f32; n];
+            par_rows_layout(
+                n,
+                32,
+                threads,
+                &mut rows,
+                &layout,
+                &mut res,
+                || (),
+                |_, i, row| {
+                    assert_eq!(row.len(), 1 + i % 5, "row {i} width");
+                    let x = (i as f32 + 1.0).ln();
+                    for (k, o) in row.iter_mut().enumerate() {
+                        *o = x + k as f32;
+                    }
+                    x
+                },
+            );
+            (rows, res)
+        };
+        let (r1, s1) = fill(1);
+        for t in [2, 5, 8] {
+            let (rt, st) = fill(t);
+            assert_eq!(r1, rt, "ragged rows differ at {t} threads");
             assert_eq!(s1, st, "residuals differ at {t} threads");
         }
     }

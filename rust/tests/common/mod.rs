@@ -10,6 +10,7 @@
 use bp_sched::coordinator::{ResidualAudit, RunObserver, SLACK_CUSHION};
 use bp_sched::datasets::DatasetSpec;
 use bp_sched::engine::{native::NativeEngine, CandidateBatch, MessageEngine};
+use bp_sched::graph::MrfBuilder;
 use bp_sched::util::Rng;
 use bp_sched::Mrf;
 
@@ -38,6 +39,43 @@ pub fn random_mrf(rng: &mut Rng) -> (String, Mrf) {
     };
     let graph = spec.generate(rng).unwrap();
     (glabel, graph)
+}
+
+/// One random small MRF with *randomized per-vertex arities* (2..=5)
+/// over a random connected structure (spanning tree + extra chords) —
+/// the sampler the layout-parity fuzz legs use to exercise ragged
+/// (CSR) rows against the padded envelope. Built through the envelope
+/// builder so callers can diff `g` against `g.to_csr()`.
+pub fn random_mixed_arity_mrf(rng: &mut Rng) -> (String, Mrf) {
+    let nv = 6 + rng.below(8); // 6..13
+    let arities: Vec<usize> = (0..nv).map(|_| 2 + rng.below(4)).collect(); // 2..5
+    let max_a = arities.iter().copied().max().unwrap();
+    let mut b = MrfBuilder::new("fuzzmix", max_a);
+    for &a in &arities {
+        let row: Vec<f32> = (0..a).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        b.add_vertex(&row);
+    }
+    // spanning tree keeps it connected; chords add loops
+    let mut edges = std::collections::BTreeSet::new();
+    for v in 1..nv {
+        edges.insert((rng.below(v), v));
+    }
+    for _ in 0..rng.below(nv) {
+        let (u, v) = (rng.below(nv), rng.below(nv));
+        if u != v {
+            edges.insert((u.min(v), u.max(v)));
+        }
+    }
+    for &(u, v) in &edges {
+        let table: Vec<f32> = (0..arities[u] * arities[v])
+            .map(|_| rng.range(-0.8, 0.8) as f32)
+            .collect();
+        b.add_edge(u, v, &table);
+    }
+    (
+        format!("mix{nv}a{max_a}e{}", edges.len()),
+        b.build(None).unwrap(),
+    )
 }
 
 /// Engine matrix honoring `BP_TEST_ENGINE` (`native` / `parallel`),

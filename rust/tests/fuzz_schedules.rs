@@ -544,6 +544,77 @@ fn estimate_mode_differentials() {
 }
 
 #[test]
+fn randomized_arity_layout_differentials() {
+    // Storage-layout fuzz leg (a separate fn with its own seed stream,
+    // so the load-bearing `gen_case` draw sequence above is untouched):
+    // random graphs with randomized per-vertex arities run in both the
+    // padded envelope and their arity-exact CSR twin. Ragged rows
+    // change reduction shapes, so the contract is the layout_parity
+    // one — honesty in both layouts plus fixed-point marginal
+    // agreement on converged runs; the bitwise uniform-arity contract
+    // lives in tests/layout_parity.rs.
+    let mut compared = 0usize;
+    for root in root_seeds() {
+        let mut rng = Rng::new(root ^ 0xc5_1a_70_07);
+        for id in 0..8 {
+            let (glabel, env) = common::random_mixed_arity_mrf(&mut rng);
+            let csr = env.to_csr();
+            let eps = [1e-3f32, 1e-4][rng.below(2)];
+            let p = RunParams {
+                eps,
+                max_iterations: 400,
+                timeout: 1e9,
+                cost_model: None,
+                want_marginals: true,
+                belief_refresh_every: 0,
+                ..Default::default()
+            };
+            for sched in ["lbp", "rbp", "rs", "rnbp"] {
+                for &engine in &engines_under_test() {
+                    let what = format!("case{id}:{glabel}/{sched}/{engine}/layout");
+                    let mk = |g: &Mrf| {
+                        let mut eng = match engine {
+                            "native" => Box::new(NativeEngine::new()) as Box<dyn MessageEngine>,
+                            _ => Box::new(ParallelEngine::with_threads(2)),
+                        };
+                        let mut s: Box<dyn Scheduler> = match sched {
+                            "lbp" => Box::new(Lbp::new()),
+                            "rbp" => Box::new(Rbp::new(0.25)),
+                            "rs" => Box::new(ResidualSplash::new(0.25, 2)),
+                            _ => Box::new(Rnbp::new(0.7, 1.0, root)),
+                        };
+                        run(g, eng.as_mut(), s.as_mut(), &p).unwrap()
+                    };
+                    let a = mk(&env);
+                    let b = mk(&csr);
+                    assert_honest_eps(&a, eps, &format!("{what}/envelope"));
+                    assert_honest_eps(&b, eps, &format!("{what}/csr"));
+                    if a.converged() && b.converged() {
+                        compared += 1;
+                        // marginal reporting is dense `v * max_arity`
+                        // rows under both layouts; only the live lanes
+                        // of each row carry meaning
+                        let (am, bm) =
+                            (a.marginals.as_ref().unwrap(), b.marginals.as_ref().unwrap());
+                        let stride = env.max_arity;
+                        for v in 0..env.live_vertices {
+                            for x in 0..env.arity_of(v) {
+                                let (ma, mb) = (am[v * stride + x], bm[v * stride + x]);
+                                assert!(
+                                    (ma - mb).abs() < 1e-3,
+                                    "{what}: vertex {v} lane {x}: {ma} vs {mb}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(compared > 0, "no layout case converged in both layouts — vacuous");
+}
+
+#[test]
 fn sampled_lazy_runs_keep_bounds_sound() {
     // The full-recompute audit is O(M·A·deg) per refresh point, so it
     // runs on a deterministic sample of cases rather than all of them.
