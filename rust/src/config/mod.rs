@@ -1,10 +1,13 @@
 //! Run configuration: TOML-subset files + CLI overrides.
 //!
 //! The launcher (`bp-sched`) and every harness binary share one
-//! [`HarnessConfig`]. Values resolve in order: defaults, then a config
-//! file (`--config path.toml`), then individual CLI flags. The file
-//! format is the flat `key = value` subset of TOML (strings, numbers,
-//! booleans, comments) — parsed by [`toml_lite`], no external crates.
+//! [`HarnessConfig`]; the multi-tenant serving runtime
+//! ([`crate::runtime::server`]) has its own [`ServerConfig`]. Both
+//! resolve values through one layering mechanism ([`ConfigLayer`]):
+//! defaults, then a config file (`--config path.toml`), then individual
+//! CLI flags — last writer wins. The file format is the flat
+//! `key = value` subset of TOML (strings, numbers, booleans, comments)
+//! — parsed by [`toml_lite`], no external crates.
 
 pub mod toml_lite;
 
@@ -16,6 +19,80 @@ use toml_lite::Value;
 
 use crate::coordinator::ResidualRefresh;
 use crate::engine::{Semiring, UpdateOptions};
+
+/// The shared layered-resolution mechanism: a config type provides
+/// [`set`](Self::set) (one key/value, with validation) and gets file
+/// loading and CLI parsing for free. Layers apply in call order —
+/// defaults (the type's `Default`), then `--config file.toml`
+/// (expanded in place where the flag appears), then later flags — so
+/// the last writer wins.
+pub trait ConfigLayer {
+    /// Apply one key/value pair (file key or CLI flag name, dashes
+    /// already mapped to underscores).
+    fn set(&mut self, key: &str, value: &Value) -> Result<()>;
+
+    /// Flags that may appear on the CLI without a value (implied
+    /// `true`), e.g. `--full`.
+    fn valueless(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Load from a TOML-subset file.
+    fn apply_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let table = toml_lite::parse(&text).with_context(|| format!("parse {path}"))?;
+        for (k, v) in &table {
+            self.set(k, v).with_context(|| format!("{path}: key {k}"))?;
+        }
+        Ok(())
+    }
+
+    /// Parse CLI flags: `--key value` / `--key=value` / valueless
+    /// booleans / `--config file.toml`. Returns the positional
+    /// (non-flag) args.
+    fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if let Some(flag) = arg.strip_prefix("--") {
+                let (key, inline_val) = match flag.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (flag.to_string(), None),
+                };
+                let key = key.replace('-', "_");
+                if key == "config" {
+                    let path = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).context("--config needs a path")?.clone()
+                        }
+                    };
+                    self.apply_file(&path)?;
+                } else if inline_val.is_none() && self.valueless().contains(&key.as_str()) {
+                    self.set(&key, &Value::Bool(true))?;
+                } else {
+                    let raw = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .with_context(|| format!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    let value = toml_lite::parse_value(&raw)?;
+                    self.set(&key, &value)?;
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+}
 
 /// Which engine executes message updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,7 +206,46 @@ impl HarnessConfig {
         }
     }
 
-    /// Apply one key/value pair (file key or CLI flag name).
+    /// Load from a TOML-subset file (see [`ConfigLayer`]).
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        ConfigLayer::apply_file(self, path)
+    }
+
+    /// Parse CLI flags (see [`ConfigLayer`]); returns positional args.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>> {
+        ConfigLayer::apply_args(self, args)
+    }
+
+    /// Reject thread settings a scheduler cannot run under. `mq` reads
+    /// `threads` as its selection-worker count, so a literal
+    /// `--threads 0` is an error there (everywhere else 0 has always
+    /// silently meant "clamp to 1 campaign worker"). Call sites pass
+    /// the resolved scheduler name from the CLI/experiment table.
+    pub fn validate_scheduler_threads(&self, scheduler: &str) -> Result<()> {
+        if scheduler == "mq" && self.threads_zero {
+            bail!(
+                "--sched mq needs at least one selection worker: \
+                 --threads 0 is invalid (use --threads N for N workers; \
+                 engine fan-out is --engine-threads, set independently)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse `std::env::args()` after the binary name.
+    pub fn from_env() -> Result<(HarnessConfig, Vec<String>)> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut cfg = HarnessConfig::default();
+        let positional = cfg.apply_args(&args)?;
+        Ok((cfg, positional))
+    }
+}
+
+impl ConfigLayer for HarnessConfig {
+    fn valueless(&self) -> &'static [&'static str] {
+        &["full"]
+    }
+
     fn set(&mut self, key: &str, value: &Value) -> Result<()> {
         match key {
             "full" => self.full = value.as_bool().context("full: want bool")?,
@@ -193,84 +309,233 @@ impl HarnessConfig {
         }
         Ok(())
     }
+}
 
-    /// Load from a TOML-subset file.
+/// Configuration for the multi-tenant serving runtime (`bp-sched
+/// server`, [`crate::runtime::server`]). Same layering as
+/// [`HarnessConfig`]: defaults < `--config file.toml` < CLI flags.
+///
+/// All *reported* quantities downstream of this config are virtual-time
+/// (seeded arrivals + simulated service clocks), so a fixed seed yields
+/// a bitwise-identical SLO report — see the server module docs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Resident tenant sessions (each holds one warm graph).
+    pub tenants: usize,
+    /// Worker threads; tenants shard across workers by `id % workers`.
+    pub workers: usize,
+    /// Admission bound: a request arriving while this many earlier
+    /// requests are still queued or in service on its worker is
+    /// rejected (`queue_full`) instead of enqueued.
+    pub queue_depth: usize,
+    /// Total offered requests in the load-generator trace.
+    pub requests: usize,
+    /// Open-loop arrival rate, requests per (virtual) second.
+    pub arrival_rate: f64,
+    /// Root seed: graphs, arrival process, and evidence streams all
+    /// derive child streams from it.
+    pub seed: u64,
+    /// Per-query convergence threshold ε.
+    pub eps: f32,
+    /// Per-query iteration budget.
+    pub max_iterations: usize,
+    /// Per-query simulated-device budget, seconds. This is the budget
+    /// that actually degrades a query (staleness label on the
+    /// response); it is deterministic, unlike wallclock.
+    pub sim_budget: f64,
+    /// Per-query wallclock safety net, seconds. Generous by default:
+    /// it exists to bound a pathological solve, not to do SLO
+    /// accounting (measured wallclock never enters the report).
+    pub timeout: f64,
+    /// Update engine. `pjrt` is rejected: the serving runtime builds
+    /// engines inside worker threads and the stub's artifacts are not
+    /// thread-portable.
+    pub engine: EngineKind,
+    /// Threads inside each parallel engine (bit-identical at any
+    /// count; engine fan-out is orthogonal to `workers`).
+    pub engine_threads: usize,
+    /// Scheduler: `lbp|rbp|rs|rnbp`. `srbp` (no session) and `mq`
+    /// (relaxed selection breaks the report-determinism contract) are
+    /// rejected with pointed errors by the server.
+    pub scheduler: String,
+    /// Scheduler parameters (as the `run` flags of the same names).
+    pub p: f64,
+    pub lowp: f64,
+    pub highp: f64,
+    pub h: usize,
+    pub residual_refresh: ResidualRefresh,
+    pub belief_refresh_every: usize,
+    /// Tenant graph family: `ising|potts|chain|mixed` (mixed cycles
+    /// all three across tenants).
+    pub workload: String,
+    /// Graph shape knobs shared by the workload specs.
+    pub n: usize,
+    pub c: f64,
+    pub q: usize,
+    /// Minor-mix evidence: flips per query, amplitude of patched rows.
+    pub flips: usize,
+    pub amplitude: f64,
+    /// Major-mix evidence (drawn with probability `major_frac`).
+    pub major_flips: usize,
+    pub major_amplitude: f64,
+    pub major_frac: f64,
+    /// Prime every session at install time (before the trace starts).
+    /// `false` leaves sessions cold: each tenant's first admitted
+    /// request pays the priming solve and counts as a warm miss.
+    pub prewarm: bool,
+    /// JSON SLO report directory.
+    pub out_dir: PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            tenants: 4,
+            workers: 2,
+            queue_depth: 8,
+            requests: 64,
+            arrival_rate: 200.0,
+            seed: 20_190_624,
+            eps: crate::DEFAULT_EPS,
+            max_iterations: 20_000,
+            sim_budget: 0.05,
+            timeout: 30.0,
+            engine: EngineKind::Native,
+            engine_threads: 1,
+            scheduler: "rbp".into(),
+            p: 1.0 / 16.0,
+            lowp: 0.7,
+            highp: 1.0,
+            h: 2,
+            residual_refresh: ResidualRefresh::Exact,
+            belief_refresh_every: crate::engine::belief::DEFAULT_REFRESH_EVERY,
+            workload: "mixed".into(),
+            n: 8,
+            c: 1.5,
+            q: 4,
+            flips: 1,
+            amplitude: 1.0,
+            major_flips: 4,
+            major_amplitude: 2.0,
+            major_frac: 0.25,
+            prewarm: true,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Load from a TOML-subset file (see [`ConfigLayer`]).
     pub fn apply_file(&mut self, path: &str) -> Result<()> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
-        let table = toml_lite::parse(&text).with_context(|| format!("parse {path}"))?;
-        for (k, v) in &table {
-            self.set(k, v).with_context(|| format!("{path}: key {k}"))?;
-        }
-        Ok(())
+        ConfigLayer::apply_file(self, path)
     }
 
-    /// Parse CLI flags: `--key value` / `--key=value` / `--full` /
-    /// `--config file.toml`. Returns the positional (non-flag) args.
+    /// Parse CLI flags (see [`ConfigLayer`]); returns positional args.
     pub fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>> {
-        let mut positional = Vec::new();
-        let mut i = 0;
-        while i < args.len() {
-            let arg = &args[i];
-            if let Some(flag) = arg.strip_prefix("--") {
-                let (key, inline_val) = match flag.split_once('=') {
-                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
-                    None => (flag.to_string(), None),
-                };
-                let key = key.replace('-', "_");
-                if key == "config" {
-                    let path = match inline_val {
-                        Some(v) => v,
-                        None => {
-                            i += 1;
-                            args.get(i).context("--config needs a path")?.clone()
-                        }
-                    };
-                    self.apply_file(&path)?;
-                } else if key == "full" && inline_val.is_none() {
-                    self.full = true;
-                } else {
-                    let raw = match inline_val {
-                        Some(v) => v,
-                        None => {
-                            i += 1;
-                            args.get(i)
-                                .with_context(|| format!("--{key} needs a value"))?
-                                .clone()
-                        }
-                    };
-                    let value = toml_lite::parse_value(&raw)?;
-                    self.set(&key, &value)?;
-                }
-            } else {
-                positional.push(arg.clone());
-            }
-            i += 1;
-        }
-        Ok(positional)
+        ConfigLayer::apply_args(self, args)
     }
 
-    /// Reject thread settings a scheduler cannot run under. `mq` reads
-    /// `threads` as its selection-worker count, so a literal
-    /// `--threads 0` is an error there (everywhere else 0 has always
-    /// silently meant "clamp to 1 campaign worker"). Call sites pass
-    /// the resolved scheduler name from the CLI/experiment table.
-    pub fn validate_scheduler_threads(&self, scheduler: &str) -> Result<()> {
-        if scheduler == "mq" && self.threads_zero {
-            bail!(
-                "--sched mq needs at least one selection worker: \
-                 --threads 0 is invalid (use --threads N for N workers; \
-                 engine fan-out is --engine-threads, set independently)"
-            );
+    /// Cross-field validation the per-key setters cannot see. The
+    /// scheduler/engine compatibility gate lives with the runtime
+    /// ([`crate::runtime::server`]), which owns those semantics.
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants == 0 {
+            bail!("server needs at least one tenant");
+        }
+        if self.requests == 0 {
+            bail!("server needs at least one offered request");
+        }
+        if !(self.arrival_rate > 0.0) {
+            bail!("arrival_rate must be positive, got {}", self.arrival_rate);
+        }
+        if self.flips == 0 || self.major_flips == 0 {
+            bail!("flips and major_flips must be >= 1 (an evidence batch needs a flip)");
+        }
+        if !(self.amplitude > 0.0) || !(self.major_amplitude > 0.0) {
+            bail!("amplitude and major_amplitude must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.major_frac) {
+            bail!("major_frac must be in [0, 1], got {}", self.major_frac);
+        }
+        if !(self.sim_budget > 0.0) {
+            bail!("sim_budget must be positive (it is the per-query degradation budget)");
+        }
+        match self.workload.as_str() {
+            "ising" | "potts" | "chain" | "mixed" => {}
+            other => bail!("workload must be ising|potts|chain|mixed, got {other:?}"),
         }
         Ok(())
     }
+}
 
-    /// Parse `std::env::args()` after the binary name.
-    pub fn from_env() -> Result<(HarnessConfig, Vec<String>)> {
-        let args: Vec<String> = std::env::args().skip(1).collect();
-        let mut cfg = HarnessConfig::default();
-        let positional = cfg.apply_args(&args)?;
-        Ok((cfg, positional))
+impl ConfigLayer for ServerConfig {
+    fn set(&mut self, key: &str, value: &Value) -> Result<()> {
+        match key {
+            "tenants" => self.tenants = value.as_usize().context("tenants")?,
+            "workers" => self.workers = value.as_usize().context("workers")?.max(1),
+            "queue_depth" => {
+                self.queue_depth = value.as_usize().context("queue_depth")?.max(1)
+            }
+            "requests" => self.requests = value.as_usize().context("requests")?,
+            "arrival_rate" => self.arrival_rate = value.as_f64().context("arrival_rate")?,
+            "seed" => self.seed = value.as_usize().context("seed: want int")? as u64,
+            "eps" => self.eps = value.as_f64().context("eps: want number")? as f32,
+            "max_iterations" => {
+                self.max_iterations = value.as_usize().context("max_iterations")?
+            }
+            "sim_budget" => self.sim_budget = value.as_f64().context("sim_budget")?,
+            "timeout" => self.timeout = value.as_f64().context("timeout")?,
+            "engine" => {
+                self.engine = match value.as_str().context("engine")? {
+                    "native" => EngineKind::Native,
+                    "parallel" => EngineKind::Parallel,
+                    "pjrt" => bail!(
+                        "the server builds engines inside worker threads; the pjrt \
+                         stub cannot cross them — use native or parallel"
+                    ),
+                    other => bail!("engine must be native|parallel, got {other:?}"),
+                }
+            }
+            "engine_threads" => {
+                self.engine_threads = value.as_usize().context("engine_threads")?.max(1)
+            }
+            "scheduler" | "sched" => {
+                self.scheduler = value.as_str().context("scheduler")?.to_string()
+            }
+            "p" => self.p = value.as_f64().context("p")?,
+            "lowp" => self.lowp = value.as_f64().context("lowp")?,
+            "highp" => self.highp = value.as_f64().context("highp")?,
+            "h" => self.h = value.as_usize().context("h")?,
+            "residual_refresh" => {
+                self.residual_refresh = match value.as_str().context("residual_refresh")? {
+                    "exact" => ResidualRefresh::Exact,
+                    "bounded" => ResidualRefresh::Bounded,
+                    "lazy" => ResidualRefresh::Lazy,
+                    "estimate" => ResidualRefresh::Estimate,
+                    other => {
+                        bail!("residual_refresh must be exact|bounded|lazy|estimate, got {other:?}")
+                    }
+                }
+            }
+            "belief_refresh_every" => {
+                self.belief_refresh_every = value.as_usize().context("belief_refresh_every")?
+            }
+            "workload" => self.workload = value.as_str().context("workload")?.to_string(),
+            "n" => self.n = value.as_usize().context("n")?,
+            "c" => self.c = value.as_f64().context("c")?,
+            "q" => self.q = value.as_usize().context("q")?,
+            "flips" => self.flips = value.as_usize().context("flips")?,
+            "amplitude" => self.amplitude = value.as_f64().context("amplitude")?,
+            "major_flips" => self.major_flips = value.as_usize().context("major_flips")?,
+            "major_amplitude" => {
+                self.major_amplitude = value.as_f64().context("major_amplitude")?
+            }
+            "major_frac" => self.major_frac = value.as_f64().context("major_frac")?,
+            "prewarm" => self.prewarm = value.as_bool().context("prewarm: want bool")?,
+            "out_dir" => self.out_dir = PathBuf::from(value.as_str().context("out_dir")?),
+            other => bail!("unknown server config key {other:?}"),
+        }
+        Ok(())
     }
 }
 
@@ -433,5 +698,67 @@ mod tests {
         .unwrap();
         assert_eq!(c.graphs, 3);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn server_defaults_validate() {
+        let c = ServerConfig::default();
+        c.validate().unwrap();
+        assert!(c.tenants >= 2, "default must exercise multi-tenancy");
+        assert_eq!(c.engine, EngineKind::Native);
+        assert!(c.prewarm);
+    }
+
+    #[test]
+    fn server_cli_and_file_layering() {
+        let dir = std::env::temp_dir().join(format!("bpsrv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("server.toml");
+        std::fs::write(
+            &path,
+            "# serving campaign\ntenants = 6\nworkers = 3\nqueue_depth = 2\n\
+             scheduler = \"lbp\"\nsim_budget = 0.01\nprewarm = false\n",
+        )
+        .unwrap();
+        let mut c = ServerConfig::default();
+        // file layers over defaults, flags layer over the file
+        c.apply_args(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--workers",
+            "1",
+            "--major-frac",
+            "0.5",
+        ]))
+        .unwrap();
+        assert_eq!(c.tenants, 6);
+        assert_eq!(c.workers, 1, "CLI must override the file");
+        assert_eq!(c.queue_depth, 2);
+        assert_eq!(c.scheduler, "lbp");
+        assert!(!c.prewarm);
+        assert!((c.sim_budget - 0.01).abs() < 1e-12);
+        assert!((c.major_frac - 0.5).abs() < 1e-12);
+        c.validate().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn server_rejects_bad_knobs() {
+        let mut c = ServerConfig::default();
+        assert!(c.apply_args(&args(&["--engine", "pjrt"])).is_err());
+        assert!(c.apply_args(&args(&["--bogus", "1"])).is_err());
+        c.apply_args(&args(&["--tenants", "0"])).unwrap();
+        assert!(c.validate().is_err(), "zero tenants must fail validation");
+        let mut c = ServerConfig::default();
+        c.apply_args(&args(&["--major-frac", "1.5"])).unwrap();
+        assert!(c.validate().is_err());
+        let mut c = ServerConfig::default();
+        c.apply_args(&args(&["--workload", "protein"])).unwrap();
+        assert!(c.validate().is_err(), "protein has no shape knobs; not a server workload");
+        // clamps mirror HarnessConfig's: 0 workers/queue slots make no sense
+        let mut c = ServerConfig::default();
+        c.apply_args(&args(&["--workers", "0", "--queue-depth", "0"])).unwrap();
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.queue_depth, 1);
     }
 }

@@ -104,12 +104,16 @@ impl Campaign {
 
     /// Mean time over all runs, counting unconverged runs at their full
     /// (timeout) duration — the conservative accounting behind the
-    /// paper's `>` lower-bound speedups.
+    /// paper's `>` lower-bound speedups. Uses
+    /// [`RunResult::charged_time`]: before PR 9, `r.time(basis)` charged
+    /// Stalled/IterationCap runs their short *actual* duration, so a
+    /// policy that failed fast looked cheap and its speedup factor was
+    /// inflated.
     pub fn mean_time_lower_bound(&self, basis: TimeBasis) -> f64 {
         if self.outcomes.is_empty() {
             return 0.0;
         }
-        self.outcomes.iter().map(|r| r.time(basis)).sum::<f64>()
+        self.outcomes.iter().map(|r| r.charged_time(basis)).sum::<f64>()
             / self.outcomes.len() as f64
     }
 
@@ -250,13 +254,37 @@ impl EvidenceStream {
         }
     }
 
-    /// The next evidence batch for `mrf` (vertex, full unary row).
+    /// The next evidence batch for `mrf` (vertex, full unary row) at the
+    /// stream's configured flip/amplitude mix. Vertices are drawn
+    /// *without replacement* ([`Rng::sample_indices`]): before PR 9 they
+    /// were drawn with replacement, so duplicate flips in one batch
+    /// collapsed last-write-wins and the effective flip count silently
+    /// fell below `flips`.
     pub fn next_batch(&mut self, mrf: &Mrf) -> Vec<(usize, Vec<f32>)> {
-        (0..self.flips)
-            .map(|_| {
-                let v = self.rng.below(mrf.live_vertices);
+        let (flips, amplitude) = (self.flips, self.amplitude);
+        self.next_batch_with(mrf, flips, amplitude)
+    }
+
+    /// A batch at an explicit flip/amplitude mix, sharing this stream's
+    /// random state — the serving runtime's load generator draws
+    /// per-request minor/major mixes from one tenant stream (see
+    /// [`crate::runtime::server`]). `flips` is clamped to the graph's
+    /// live vertex count (distinct draws cannot exceed it).
+    pub fn next_batch_with(
+        &mut self,
+        mrf: &Mrf,
+        flips: usize,
+        amplitude: f64,
+    ) -> Vec<(usize, Vec<f32>)> {
+        assert!(flips >= 1, "an evidence batch needs at least one flip");
+        assert!(amplitude > 0.0, "amplitude must be positive");
+        let k = flips.min(mrf.live_vertices);
+        self.rng
+            .sample_indices(mrf.live_vertices, k)
+            .into_iter()
+            .map(|v| {
                 let row = (0..mrf.arity_of(v))
-                    .map(|_| self.rng.range(-self.amplitude, self.amplitude) as f32)
+                    .map(|_| self.rng.range(-amplitude, amplitude) as f32)
                     .collect();
                 (v, row)
             })
@@ -310,12 +338,18 @@ impl ServeStats {
     }
 
     /// Cold-to-warm update-row ratio (> 1 means warm serving saved
-    /// engine work); `None` without the cold comparison.
+    /// engine work); `None` without the cold comparison. A warm stream
+    /// that paid *zero* update rows (every re-solve was already
+    /// converged) reports a labeled `+inf`: before PR 9 the
+    /// `warm_rows.max(1)` denominator fabricated a finite — and
+    /// understated — ratio for exactly the serving scenario's best case.
     pub fn row_ratio(&self) -> Option<f64> {
         if self.cold_rows == 0 {
             None
+        } else if self.warm_rows == 0 {
+            Some(f64::INFINITY)
         } else {
-            Some(self.cold_rows as f64 / self.warm_rows.max(1) as f64)
+            Some(self.cold_rows as f64 / self.warm_rows as f64)
         }
     }
 
@@ -520,6 +554,91 @@ mod tests {
         }
         let mut c = EvidenceStream::new(12, 2, 0.75);
         assert_ne!(a.next_batch(g), c.next_batch(g), "different seeds must diverge");
+    }
+
+    #[test]
+    fn unconverged_runs_charged_full_timeout_in_mean_time() {
+        let mut c = mini_campaign();
+        let honest = c.mean_time_lower_bound(TimeBasis::Wallclock);
+        // all runs converged: charged time == actual time, so the mean
+        // is the plain average and far below the 60 s default budget
+        assert!(honest < 1.0, "tiny converged campaign took {honest}s?");
+        // wedge one run early: a stall after 1 ms of a 5 s budget must
+        // be charged the full 5 s, not its short actual time (the
+        // pre-fix bug inflated speedups for fast-failing policies)
+        c.outcomes[0].stop = StopReason::Stalled;
+        c.outcomes[0].wall = 0.001;
+        c.outcomes[0].timeout = 5.0;
+        let n = c.outcomes.len() as f64;
+        let charged = c.mean_time_lower_bound(TimeBasis::Wallclock);
+        assert!(
+            charged >= 5.0 / n,
+            "stalled run charged {charged} mean over {n}: the 5 s budget was not applied"
+        );
+        // simulated basis: the simulated budget applies when finite...
+        c.outcomes[0].sim_wall = Some(1e-6);
+        c.outcomes[0].sim_timeout = 2.0;
+        let sim = c.mean_time_lower_bound(TimeBasis::Simulated);
+        assert!(sim >= 2.0 / n, "sim budget not charged: mean {sim}");
+        // ...and an infinite sim budget must not poison the mean — the
+        // run falls back to its wallclock budget
+        c.outcomes[0].sim_timeout = f64::INFINITY;
+        let sim = c.mean_time_lower_bound(TimeBasis::Simulated);
+        assert!(sim.is_finite());
+        assert!(sim >= 5.0 / n, "wallclock-budget fallback not applied: mean {sim}");
+        // a converged run is never budget-charged, even if it ran long
+        let r = &c.outcomes[1];
+        assert_eq!(r.charged_time(TimeBasis::Wallclock), r.time(TimeBasis::Wallclock));
+    }
+
+    #[test]
+    fn evidence_batches_draw_distinct_vertices() {
+        let ds = DatasetSpec::Ising { n: 4, c: 1.0 }.generate_many(1, 13).unwrap();
+        let g = &ds.graphs[0]; // 16 live vertices
+        // flips == live vertices: with-replacement sampling would
+        // collide with probability ~1; distinct draws must cover all
+        let mut s = EvidenceStream::new(5, g.live_vertices, 0.5);
+        for _ in 0..8 {
+            let batch = s.next_batch(g);
+            assert_eq!(batch.len(), g.live_vertices);
+            let mut seen: Vec<usize> = batch.iter().map(|(v, _)| *v).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), g.live_vertices, "duplicate flips in one batch");
+        }
+        // flips beyond the vertex count clamp instead of panicking
+        let mut s = EvidenceStream::new(5, g.live_vertices * 3, 0.5);
+        assert_eq!(s.next_batch(g).len(), g.live_vertices);
+        // the explicit-mix path replays deterministically and stays
+        // in range, like the ctor-mix path
+        let (mut a, mut b) = (EvidenceStream::new(7, 1, 1.0), EvidenceStream::new(7, 1, 1.0));
+        for _ in 0..4 {
+            let (ba, bb) = (a.next_batch_with(g, 3, 0.25), b.next_batch_with(g, 3, 0.25));
+            assert_eq!(ba, bb, "same seed must replay the same mixed stream");
+            assert_eq!(ba.len(), 3);
+            for (v, row) in &ba {
+                assert!(*v < g.live_vertices);
+                assert_eq!(row.len(), g.arity_of(*v));
+                assert!(row.iter().all(|x| x.abs() <= 0.25 && x.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn row_ratio_zero_warm_rows_is_labeled_infinity() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.row_ratio(), None, "no cold comparison: no ratio");
+        s.cold_rows = 250;
+        s.warm_rows = 0;
+        let r = s.row_ratio().unwrap();
+        assert!(
+            r.is_infinite() && r > 0.0,
+            "zero warm rows must report +inf, not a fabricated finite ratio (got {r})"
+        );
+        // Json renders non-finite as null, so reports stay valid JSON
+        assert!(s.to_json().render().contains("\"cold_rows\":250"));
+        s.warm_rows = 50;
+        assert!((s.row_ratio().unwrap() - 5.0).abs() < 1e-12);
     }
 
     #[test]

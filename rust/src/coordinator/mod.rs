@@ -331,6 +331,19 @@
 //! construction path, no duplicated loop. They are kept (deprecated in
 //! favor of `Session`) so one-shot callers get a release of warning.
 //!
+//! **Serving many sessions.** [`crate::runtime::server`] stacks a
+//! multi-tenant runtime on this surface: resident warm `Session`s
+//! sharded across worker threads, each answering an open-loop evidence
+//! trace under per-tenant budgets ([`RunParams::sim_timeout`] as the
+//! deterministic degradation budget; unconverged serves return the
+//! anytime marginals labeled stale with [`RunResult::final_residual`]).
+//! Its admission control is sound precisely because of the session
+//! contract above — rejection is decided from the virtual finish times
+//! of *earlier* solves only, and evidence is drawn per admitted request
+//! in arrival order, so an admitted subsequence replays bitwise on a
+//! serial `Session`. The full soundness and determinism arguments live
+//! in that module's docs.
+//!
 //! ## Stop reasons
 //!
 //! A run that ends because a scheduler returned an *empty frontier while
@@ -594,6 +607,14 @@ pub struct RunResult {
     pub iterations: usize,
     /// Total wallclock seconds.
     pub wall: f64,
+    /// The wallclock budget this run was given ([`RunParams::timeout`]).
+    /// Carried so campaign statistics can charge unconverged runs their
+    /// full budget ([`charged_time`](Self::charged_time)) instead of the
+    /// short actual time a fast-failing run measured.
+    pub timeout: f64,
+    /// The simulated-device budget ([`RunParams::sim_timeout`]); infinite
+    /// when no simulated budget was set.
+    pub sim_timeout: f64,
     /// Total message updates committed (the paper's work measure).
     pub message_updates: u64,
     /// Engine invocations (bulk kernel launches).
@@ -700,6 +721,41 @@ impl RunResult {
         match basis {
             TimeBasis::Wallclock => self.wall,
             TimeBasis::Simulated => self.sim_wall.unwrap_or(self.wall),
+        }
+    }
+
+    /// [`time`](Self::time) for conservative campaign accounting: a run
+    /// that converged is charged its actual duration; an unconverged run
+    /// (timeout, iteration cap, stall) is charged at least its full
+    /// budget, `max(time, budget)` — a fast-failing policy must not look
+    /// cheap because it gave up early. The budget is the wallclock
+    /// timeout; under [`TimeBasis::Simulated`] the simulated budget is
+    /// used instead when one was actually set (finite `sim_timeout` on a
+    /// run that carries a simulated clock). Non-finite budgets charge
+    /// the measured time unchanged — `max` with infinity would poison
+    /// means.
+    pub fn charged_time(&self, basis: TimeBasis) -> f64 {
+        let t = self.time(basis);
+        if self.converged() {
+            return t;
+        }
+        let budget = match basis {
+            TimeBasis::Wallclock => self.timeout,
+            TimeBasis::Simulated => {
+                if self.sim_wall.is_some() && self.sim_timeout.is_finite() {
+                    self.sim_timeout
+                } else {
+                    // serial runs (no simulated clock) and runs without a
+                    // simulated budget fall back to the wallclock budget,
+                    // mirroring time()'s fallback
+                    self.timeout
+                }
+            }
+        };
+        if budget.is_finite() {
+            t.max(budget)
+        } else {
+            t
         }
     }
 }
@@ -2072,6 +2128,8 @@ impl<'a> Session<'a> {
             stop,
             iterations,
             wall: clock.seconds(),
+            timeout: params.timeout,
+            sim_timeout: params.sim_timeout,
             message_updates: c.message_updates,
             engine_calls: c.engine_calls,
             refresh_rows: c.refresh_rows,

@@ -62,13 +62,20 @@ impl Table {
 
 /// Write a JSON report under `out_dir/<name>.json`.
 pub fn write_json(out_dir: &Path, name: &str, json: &Json) -> Result<()> {
+    write_json_at(out_dir, name, json).map(|_| ())
+}
+
+/// [`write_json`], returning the written path — callers that chain a
+/// schema check or post-process step (the server smoke job diffs two
+/// same-seed reports) get the exact file back instead of re-deriving it.
+pub fn write_json_at(out_dir: &Path, name: &str, json: &Json) -> Result<std::path::PathBuf> {
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("create {}", out_dir.display()))?;
     let path = out_dir.join(format!("{name}.json"));
     std::fs::write(&path, json.render())
         .with_context(|| format!("write {}", path.display()))?;
     println!("wrote {}", path.display());
-    Ok(())
+    Ok(path)
 }
 
 #[cfg(test)]

@@ -3,6 +3,7 @@
 //! ```text
 //! bp-sched run --dataset ising --n 40 --c 2.5 --scheduler rnbp ...
 //! bp-sched serve --queries 16 --flips 1   # warm-session evidence stream
+//! bp-sched server --tenants 4 --workers 2 # multi-tenant serving runtime
 //! bp-sched table table1|table2|table3|table4 [--full] [--graphs N]
 //! bp-sched figure fig2|fig4|fig5 [--full]
 //! bp-sched generate --dataset ising --n 10 --c 2 --out g.bpmrf
@@ -12,12 +13,13 @@
 
 use anyhow::{bail, Context, Result};
 
-use bp_sched::config::{EngineKind, HarnessConfig};
+use bp_sched::config::{EngineKind, HarnessConfig, ServerConfig};
 use bp_sched::coordinator::campaign::{serve_stream, EvidenceStream, ServeStats};
 use bp_sched::coordinator::SessionBuilder;
 use bp_sched::datasets::{serialize, DatasetSpec};
 use bp_sched::harness;
-use bp_sched::runtime::{default_artifacts_dir, Manifest};
+use bp_sched::harness::report::Table;
+use bp_sched::runtime::{default_artifacts_dir, server, Manifest};
 use bp_sched::sched::{srbp, Lbp, Multiqueue, Rbp, ResidualSplash, Rnbp, Scheduler};
 use bp_sched::util::stats::fmt_duration;
 use bp_sched::util::Rng;
@@ -40,6 +42,11 @@ USAGE:
                                         warm-starting each re-solve from the
                                         previous fixed point (vs per-query cold
                                         re-solves for comparison)
+  bp-sched server [flags]               multi-tenant serving runtime: resident
+                                        warm sessions sharded across worker
+                                        threads, bounded-queue admission
+                                        control, and a deterministic JSON SLO
+                                        report (virtual-time accounting)
   bp-sched table  <table1|table2|table3|table4|mq> [flags]
                                         (mq: relaxed Multiqueue speedup rows,
                                         post-paper extension; --threads =
@@ -106,6 +113,36 @@ SERVE FLAGS (plus run flags; srbp has no session and is rejected):
   --flips K             random unary patches per query (default 1)
   --amplitude X         patch rows drawn uniform from [-X, X] (default 1.0)
   --no-cold             skip the per-query cold re-solve comparison
+
+SERVER FLAGS (its own flag set; also settable via --config file.toml):
+  --tenants N           resident warm sessions (default 4)
+  --workers N           worker threads; tenants shard by id % workers
+                        (default 2)
+  --queue-depth N       per-worker admission bound: an arrival finding this
+                        many requests queued or in service is rejected as
+                        queue_full (default 8)
+  --requests N          offered requests in the seeded open-loop trace
+                        (default 64)
+  --arrival-rate X      requests per virtual second (default 200)
+  --workload ising|potts|chain|mixed   tenant graph family (default mixed)
+  --n N --c X --q N     tenant graph shape knobs (chain uses n*n vertices)
+  --sim-budget S        per-query simulated-device budget; exhausting it
+                        still serves the anytime marginals, labeled stale
+                        with the residual upper bound (default 0.05)
+  --eps X --max-iterations N --timeout S   per-query convergence budgets
+                        (timeout is a wallclock safety net; the report is
+                        virtual-time only)
+  --scheduler lbp|rbp|rs|rnbp   srbp (no session) and mq (breaks report
+                        determinism) are rejected; --p/--lowp/--highp/--h
+                        as in run
+  --engine native|parallel      pjrt is rejected (artifacts are not
+                        thread-portable); --engine-threads as above
+  --flips K --amplitude X       minor evidence mix per query
+  --major-flips K --major-amplitude X --major-frac F   major mix, drawn
+                        with probability F per request (defaults 4/2.0/0.25)
+  --prewarm true|false  prime every session before the trace (default true)
+  --seed N --out-dir DIR   report written to <out-dir>/server_slo.json;
+                        same seed => byte-identical report
 ";
 
 fn dispatch() -> Result<()> {
@@ -119,6 +156,7 @@ fn dispatch() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "serve" => cmd_serve(rest),
+        "server" => cmd_server(rest),
         "table" | "figure" => cmd_experiment(rest),
         "bench-all" => {
             let mut cfg = HarnessConfig::default();
@@ -425,13 +463,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     print_serve_line("total", &total);
     if let Some(ratio) = total.row_ratio() {
-        println!(
-            "  warm serving paid {:.2}x fewer update rows than per-query cold re-solves \
-             (wall speedup {:.2}x, max |warm - cold| marginal {:.2e})",
-            ratio,
-            total.cold_wall / total.warm_wall.max(1e-12),
-            total.max_marginal_diff,
-        );
+        if ratio.is_finite() {
+            println!(
+                "  warm serving paid {:.2}x fewer update rows than per-query cold re-solves \
+                 (wall speedup {:.2}x, max |warm - cold| marginal {:.2e})",
+                ratio,
+                total.cold_wall / total.warm_wall.max(1e-12),
+                total.max_marginal_diff,
+            );
+        } else {
+            println!(
+                "  warm serving paid zero update rows against {} cold rows \
+                 (every warm re-solve was already converged)",
+                total.cold_rows,
+            );
+        }
     }
     let json = bp_sched::util::json::Json::obj()
         .str("dataset", spec.label())
@@ -466,6 +512,95 @@ fn print_serve_line(label: &str, s: &ServeStats) {
         s.queries,
         fmt_duration(s.cold_wall),
     );
+}
+
+/// Multi-tenant serving runtime (`bp_sched::runtime::server` module
+/// docs): resident warm sessions sharded across worker threads,
+/// bounded-queue admission, deterministic virtual-time SLO report.
+/// Measured wallclock goes to stdout only — never into the report.
+fn cmd_server(args: &[String]) -> Result<()> {
+    let mut cfg = ServerConfig::default();
+    let leftover = cfg.apply_args(args)?;
+    if !leftover.is_empty() {
+        bail!("unexpected positional arguments {leftover:?}; try --help");
+    }
+    cfg.validate()?;
+    println!(
+        "serving {} tenant(s) ({} workload, n={}) on {} worker(s): \
+         {} requests at {}/s virtual, queue depth {}, scheduler {}, \
+         engine {:?}, sim budget {}",
+        cfg.tenants,
+        cfg.workload,
+        cfg.n,
+        cfg.workers,
+        cfg.requests,
+        cfg.arrival_rate,
+        cfg.queue_depth,
+        cfg.scheduler,
+        cfg.engine,
+        fmt_duration(cfg.sim_budget),
+    );
+    let wall_start = std::time::Instant::now();
+    let report = server::run_server(&cfg)?;
+    println!(
+        "trace replayed in {} measured wallclock (stdout only; the report \
+         is virtual-time)",
+        fmt_duration(wall_start.elapsed().as_secs_f64()),
+    );
+    anyhow::ensure!(
+        report.conserves(cfg.requests),
+        "request conservation violated: {} responses for {} offered",
+        report.responses.len(),
+        cfg.requests,
+    );
+
+    let fmt_pct = |x: f64| {
+        if x.is_nan() {
+            "n/a".to_string()
+        } else {
+            format!("{:.0}%", x * 100.0)
+        }
+    };
+    let fmt_rows = |s: &bp_sched::util::stats::Summary| {
+        if s.is_empty() {
+            "n/a".to_string()
+        } else {
+            format!("{:.0}", s.mean())
+        }
+    };
+    let row_of = |label: String, s: &server::SloStats| -> Vec<String> {
+        vec![
+            label,
+            s.offered.to_string(),
+            s.served.to_string(),
+            s.rejected.to_string(),
+            s.stale_served.to_string(),
+            fmt_pct(s.warm_hit_ratio()),
+            fmt_duration(s.latency.percentile(50.0)),
+            fmt_duration(s.latency.percentile(99.0)),
+            fmt_duration(s.queue_wait.percentile(99.0)),
+            fmt_rows(&s.rows_per_query),
+        ]
+    };
+    let mut t = Table::new(&[
+        "tenant",
+        "offered",
+        "served",
+        "rejected",
+        "stale",
+        "warm%",
+        "p50 lat",
+        "p99 lat",
+        "p99 wait",
+        "rows/q",
+    ]);
+    for (tenant, s) in &report.per_tenant {
+        t.row(&row_of(tenant.to_string(), s));
+    }
+    t.row(&row_of("all".into(), &report.global));
+    t.print("server SLO (virtual time)");
+    harness::report::write_json(&cfg.out_dir, "server_slo", &report.to_json())?;
+    Ok(())
 }
 
 fn cmd_experiment(args: &[String]) -> Result<()> {

@@ -1,10 +1,17 @@
-//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//! Runtimes: the PJRT executor for AOT artifacts, and the multi-tenant
+//! serving runtime.
 //!
-//! This is the only module that touches the `xla` crate. The rest of the
-//! system sees [`crate::engine::MessageEngine`].
+//! [`artifacts`]/[`manifest`] load AOT artifacts (HLO text) and execute
+//! them — the only code that touches the `xla` crate; the rest of the
+//! system sees [`crate::engine::MessageEngine`]. [`server`] is the
+//! multi-tenant serving runtime (ROADMAP D4): resident warm sessions
+//! sharded across worker threads with admission control and
+//! deterministic SLO accounting (see its module docs for the
+//! admission-soundness and determinism arguments).
 
 pub mod artifacts;
 pub mod manifest;
+pub mod server;
 
 pub use artifacts::Runtime;
 pub use manifest::{GraphClass, Manifest};

@@ -1,0 +1,901 @@
+//! Multi-tenant serving runtime (ROADMAP D4): resident warm
+//! [`Session`]s sharded across worker threads, bounded-queue admission
+//! control, and deterministic per-tenant SLO accounting.
+//!
+//! # Architecture
+//!
+//! A server hosts `tenants` resident sessions, each holding one warm
+//! graph ([`TenantSpec`]). Sessions shard across `workers` OS threads
+//! by `tenant_id % workers`; each worker owns its shard exclusively, so
+//! no session is ever shared or locked. The driver replays an
+//! arrival-ordered request trace ([`Request`], usually from
+//! [`generate_trace`]) into per-worker bounded channels; each worker
+//! runs admission control, draws the request's evidence batch from the
+//! tenant's own [`EvidenceStream`], warm-solves, and emits a
+//! [`Response`]. [`SloReport::build`] folds the merged responses into
+//! global and per-tenant [`SloStats`] (p50/p99 latency and queue wait
+//! via [`Summary`], rows/query, warm-hit ratio, shed load).
+//!
+//! Engines and schedulers are constructed *inside* the worker threads
+//! (`Box<dyn MessageEngine>` / `Box<dyn Scheduler>` are not `Send`);
+//! workers receive only plain owned data: the graph, [`QueryBudget`],
+//! evidence seed, and the `Copy` scheduler recipe [`SchedSpec`]. The
+//! pjrt stub is rejected up front — its artifacts are not
+//! thread-portable — and so are `srbp` (no session to keep resident)
+//! and `mq` (see [`SchedSpec::parse`]).
+//!
+//! # Determinism contract
+//!
+//! The SLO report is a pure function of the [`crate::config::ServerConfig`]
+//! seed: two same-seed runs render byte-identical JSON, at any worker
+//! count. Real threads provide the parallelism; *virtual* time provides
+//! every number in the report:
+//!
+//! * arrivals are a seeded Poisson process (`t += -ln(1-u)/rate`),
+//!   fixed at trace-generation time;
+//! * service time is the solve's **simulated device** clock
+//!   ([`crate::coordinator::RunResult::sim_wall`], the deterministic
+//!   V100 cost model) — never measured wallclock, which only ever goes
+//!   to stdout;
+//! * each worker serves its queue FIFO in virtual time:
+//!   `start = max(arrival, previous finish)`, `finish = start +
+//!   service`, so latency and queue wait are exact recurrences, not
+//!   measurements.
+//!
+//! Evidence is drawn from the tenant stream **only for admitted
+//! requests**, in arrival order. Hence a tenant's admitted evidence
+//! sequence is independent of thread interleaving, and equals a serial
+//! [`crate::coordinator::campaign::serve_stream`]-style replay of the
+//! same admitted subsequence — `tests/server_slo.rs` asserts the
+//! resulting marginals bitwise-equal.
+//!
+//! # Admission-control soundness
+//!
+//! Admission must be decidable *before* solving (a rejected request
+//! must cost nothing and draw no evidence), yet depend only on
+//! information that is already exact at that point. The worker keeps a
+//! deque of virtual finish times of admitted-but-unfinished requests.
+//! At arrival `a` it first retires every front entry `<= a`; if the
+//! deque still holds `queue_depth` entries, the request is rejected
+//! with [`RejectReason::QueueFull`]. All retained finish times belong
+//! to *earlier* admitted requests, whose services were already solved —
+//! so the decision never peeks at the candidate's own (unknown) service
+//! time, and the occupancy it sees is exactly the queued-or-in-service
+//! population of the virtual single-server queue. Rejections therefore
+//! bound queue depth by construction, deterministically, and the
+//! offered = served + rejected conservation law holds per tenant and
+//! globally ([`SloReport::conserves`]).
+//!
+//! # Graceful degradation
+//!
+//! Each query runs under its tenant's [`QueryBudget`]: ε, an iteration
+//! cap, and a *simulated-device* budget (`sim_budget` →
+//! [`crate::coordinator::RunParams::sim_timeout`]). A query that
+//! exhausts its budget is still served — the session's current
+//! (anytime) marginals are the answer — but the response is labeled
+//! [`Staleness::Stale`] carrying the residual upper bound at stop, so
+//! callers can distinguish a converged fixed point from a truncated
+//! one. Converged responses are labeled [`Staleness::Converged`];
+//! staleness never appears on rejected requests.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{EngineKind, ServerConfig};
+use crate::coordinator::campaign::EvidenceStream;
+use crate::coordinator::{ResidualRefresh, RunParams, Session, SessionBuilder};
+use crate::datasets::DatasetSpec;
+use crate::engine::native::NativeEngine;
+use crate::engine::parallel::ParallelEngine;
+use crate::engine::{MessageEngine, UpdateOptions};
+use crate::graph::Mrf;
+use crate::sched::{Lbp, Rbp, ResidualSplash, Rnbp, Scheduler};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Per-query convergence/work budget a tenant's requests run under.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryBudget {
+    /// Convergence threshold ε.
+    pub eps: f32,
+    /// Hard iteration cap per query.
+    pub max_iterations: usize,
+    /// Simulated-device budget per query, seconds — the deterministic
+    /// budget that actually degrades a query (staleness label).
+    pub sim_budget: f64,
+    /// Wallclock safety net per query, seconds (bounds a pathological
+    /// solve; never enters the report).
+    pub timeout: f64,
+}
+
+/// One resident tenant: an owned graph, the budget its queries run
+/// under, and the seed of its private evidence stream.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub id: usize,
+    pub graph: Mrf,
+    pub budget: QueryBudget,
+    pub evidence_seed: u64,
+}
+
+/// One offered request in the open-loop trace. Arrival is virtual
+/// seconds since trace start; the flip/amplitude mix is fixed at trace
+/// generation so admission decisions cannot perturb the workload of
+/// later requests.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub tenant: usize,
+    pub arrival: f64,
+    pub flips: usize,
+    pub amplitude: f64,
+}
+
+/// Convergence label on a served response (module docs: graceful
+/// degradation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Staleness {
+    /// The solve reached its fixed point (every residual bound < ε).
+    Converged,
+    /// The budget ran out first; the marginals are the anytime state,
+    /// `residual_ub` the max residual upper bound at stop.
+    Stale { residual_ub: f32 },
+}
+
+impl Staleness {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Staleness::Converged => "converged",
+            Staleness::Stale { .. } => "stale",
+        }
+    }
+}
+
+/// Why an offered request was not served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The tenant's worker already had `queue_depth` requests queued or
+    /// in service at this arrival (module docs: admission soundness).
+    QueueFull,
+}
+
+impl RejectReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+        }
+    }
+}
+
+/// What happened to one offered request.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Served {
+        /// Virtual service start (>= arrival; the gap is queue wait).
+        start: f64,
+        /// Virtual completion time.
+        finish: f64,
+        /// Whether the session was warm when this query landed (false
+        /// only for a tenant's first query under `prewarm = false`).
+        warm: bool,
+        staleness: Staleness,
+        iterations: usize,
+        /// Engine update rows this query paid
+        /// ([`crate::coordinator::RunResult::update_rows`]).
+        rows: u64,
+        /// Post-solve marginals, kept only under
+        /// [`ServeOptions::keep_marginals`] (excluded from JSON).
+        marginals: Option<Vec<f32>>,
+    },
+    Rejected(RejectReason),
+}
+
+/// Terminal record for one offered request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: usize,
+    pub tenant: usize,
+    pub arrival: f64,
+    pub outcome: Outcome,
+}
+
+impl Response {
+    pub fn served(&self) -> bool {
+        matches!(self.outcome, Outcome::Served { .. })
+    }
+
+    /// arrival → finish, served responses only.
+    pub fn latency(&self) -> Option<f64> {
+        match &self.outcome {
+            Outcome::Served { finish, .. } => Some(finish - self.arrival),
+            Outcome::Rejected(_) => None,
+        }
+    }
+
+    /// arrival → service start, served responses only.
+    pub fn wait(&self) -> Option<f64> {
+        match &self.outcome {
+            Outcome::Served { start, .. } => Some(start - self.arrival),
+            Outcome::Rejected(_) => None,
+        }
+    }
+
+    /// Compact per-request log entry (marginals deliberately excluded:
+    /// the report must stay diffable and size-bounded).
+    pub fn to_json(&self) -> Json {
+        let b = Json::obj()
+            .num("id", self.id as f64)
+            .num("tenant", self.tenant as f64)
+            .num("arrival_s", self.arrival);
+        match &self.outcome {
+            Outcome::Rejected(reason) => b
+                .str("outcome", "rejected")
+                .str("reason", reason.label())
+                .build(),
+            Outcome::Served { start, finish, warm, staleness, iterations, rows, .. } => {
+                let b = b
+                    .str("outcome", "served")
+                    .str("staleness", staleness.label())
+                    .num("wait_s", start - self.arrival)
+                    .num("latency_s", finish - self.arrival)
+                    .num("iterations", *iterations as f64)
+                    .num("rows", *rows as f64)
+                    .field("warm", Json::Bool(*warm));
+                match staleness {
+                    Staleness::Stale { residual_ub } => {
+                        b.num("residual_ub", *residual_ub as f64).build()
+                    }
+                    Staleness::Converged => b.build(),
+                }
+            }
+        }
+    }
+}
+
+/// A `Copy` scheduler recipe workers can rebuild in-thread (trait
+/// objects are not `Send`).
+#[derive(Clone, Copy, Debug)]
+pub enum SchedSpec {
+    Lbp,
+    Rbp { p: f64 },
+    Rs { p: f64, h: usize },
+    Rnbp { lowp: f64, highp: f64, seed: u64 },
+}
+
+impl SchedSpec {
+    /// Parse a scheduler name plus its knobs. `srbp` and `mq` are
+    /// rejected with pointed errors: the serial baseline has no warm
+    /// [`Session`] for the server to keep resident, and mq's relaxed
+    /// selection couples the frontier to selection-worker interleaving,
+    /// which would break the report-determinism contract (module docs;
+    /// a seeded-replay harness for mq is a ROADMAP follow-up).
+    pub fn parse(
+        name: &str,
+        p: f64,
+        lowp: f64,
+        highp: f64,
+        h: usize,
+        seed: u64,
+    ) -> Result<SchedSpec> {
+        Ok(match name {
+            "lbp" => SchedSpec::Lbp,
+            "rbp" => SchedSpec::Rbp { p },
+            "rs" => SchedSpec::Rs { p, h },
+            "rnbp" => SchedSpec::Rnbp { lowp, highp, seed },
+            "srbp" => bail!(
+                "srbp is the serial baseline with its own runner — it has no \
+                 warm Session for the server to keep resident (pick lbp|rbp|rs|rnbp)"
+            ),
+            "mq" => bail!(
+                "mq's relaxed selection depends on selection-worker interleaving, \
+                 which breaks the server's report-determinism contract \
+                 (pick lbp|rbp|rs|rnbp)"
+            ),
+            other => bail!("unknown scheduler {other:?} (pick lbp|rbp|rs|rnbp)"),
+        })
+    }
+
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match *self {
+            SchedSpec::Lbp => Box::new(Lbp::new()),
+            SchedSpec::Rbp { p } => Box::new(Rbp::new(p)),
+            SchedSpec::Rs { p, h } => Box::new(ResidualSplash::new(p, h)),
+            SchedSpec::Rnbp { lowp, highp, seed } => Box::new(Rnbp::new(lowp, highp, seed)),
+        }
+    }
+}
+
+/// Runtime knobs for [`serve`] (tenant-independent; per-tenant budgets
+/// live on [`TenantSpec`]).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub engine: EngineKind,
+    pub engine_threads: usize,
+    pub update: UpdateOptions,
+    pub sched: SchedSpec,
+    pub residual_refresh: ResidualRefresh,
+    pub belief_refresh_every: usize,
+    /// Prime every session at install time (before the trace starts);
+    /// `false` leaves sessions cold — each tenant's first admitted
+    /// request pays the prime and counts as a warm miss.
+    pub prewarm: bool,
+    /// Retain post-solve marginals on served responses (tests use this
+    /// for the bitwise replay check; the JSON report never includes
+    /// them).
+    pub keep_marginals: bool,
+}
+
+impl ServeOptions {
+    pub fn from_config(cfg: &ServerConfig) -> Result<ServeOptions> {
+        if cfg.engine == EngineKind::Pjrt {
+            bail!(
+                "the serving runtime builds engines inside worker threads and \
+                 the pjrt stub's artifacts are not thread-portable — pick \
+                 --engine native or --engine parallel"
+            );
+        }
+        let sched = SchedSpec::parse(&cfg.scheduler, cfg.p, cfg.lowp, cfg.highp, cfg.h, cfg.seed)?;
+        Ok(ServeOptions {
+            workers: cfg.workers.max(1),
+            queue_depth: cfg.queue_depth.max(1),
+            engine: cfg.engine,
+            engine_threads: cfg.engine_threads.max(1),
+            update: UpdateOptions::default(),
+            sched,
+            residual_refresh: cfg.residual_refresh,
+            belief_refresh_every: cfg.belief_refresh_every,
+            prewarm: cfg.prewarm,
+            keep_marginals: false,
+        })
+    }
+}
+
+/// Seeded open-loop load generator: Poisson arrivals at
+/// `cfg.arrival_rate`, tenant drawn uniformly, flip/amplitude mix drawn
+/// per request (`major_frac` chance of the major mix). Pure function of
+/// the config — same seed, same trace, bitwise.
+pub fn generate_trace(cfg: &ServerConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed ^ 0xa221_1a15_0a4d);
+    let mut t = 0.0f64;
+    (0..cfg.requests)
+        .map(|id| {
+            // u in [0,1) so 1-u in (0,1]: the log is finite and <= 0.
+            t += -(1.0 - rng.uniform()).ln() / cfg.arrival_rate;
+            let tenant = rng.below(cfg.tenants.max(1));
+            let (flips, amplitude) = if rng.coin(cfg.major_frac) {
+                (cfg.major_flips, cfg.major_amplitude)
+            } else {
+                (cfg.flips, cfg.amplitude)
+            };
+            Request { id, tenant, arrival: t, flips, amplitude }
+        })
+        .collect()
+}
+
+fn workload_spec(workload: &str, tenant: usize, n: usize, c: f64, q: usize) -> Result<DatasetSpec> {
+    Ok(match workload {
+        "ising" => DatasetSpec::Ising { n, c },
+        "potts" => DatasetSpec::Potts { n, q, c },
+        // n*n vertices, matching the grid workloads' variable count.
+        "chain" => DatasetSpec::Chain { n: n * n, c },
+        "mixed" => match tenant % 3 {
+            0 => DatasetSpec::Ising { n, c },
+            1 => DatasetSpec::Potts { n, q, c },
+            _ => DatasetSpec::Chain { n: n * n, c },
+        },
+        other => bail!("unknown server workload {other:?} (ising|potts|chain|mixed)"),
+    })
+}
+
+/// Materialize the config's tenant population: per-tenant graphs from
+/// independent seeded child streams, one shared [`QueryBudget`], and
+/// per-tenant evidence seeds (the same derivation `bp-sched serve` uses
+/// per graph, so single-tenant server traces are comparable).
+pub fn build_tenants(cfg: &ServerConfig) -> Result<Vec<TenantSpec>> {
+    let budget = QueryBudget {
+        eps: cfg.eps,
+        max_iterations: cfg.max_iterations,
+        sim_budget: cfg.sim_budget,
+        timeout: cfg.timeout,
+    };
+    (0..cfg.tenants)
+        .map(|t| {
+            let spec = workload_spec(&cfg.workload, t, cfg.n, cfg.c, cfg.q)?;
+            let mut rng =
+                Rng::new(cfg.seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x7e4a_4e75);
+            let graph = spec.generate(&mut rng)?;
+            Ok(TenantSpec {
+                id: t,
+                graph,
+                budget,
+                evidence_seed: cfg.seed ^ (t as u64).wrapping_mul(0x9E37_79B9),
+            })
+        })
+        .collect()
+}
+
+fn build_engine(
+    kind: EngineKind,
+    update: UpdateOptions,
+    threads: usize,
+) -> Result<Box<dyn MessageEngine>> {
+    Ok(match kind {
+        EngineKind::Native => Box::new(NativeEngine::with_options(update)),
+        EngineKind::Parallel => {
+            Box::new(ParallelEngine::with_options_threads(update, threads.max(1)))
+        }
+        EngineKind::Pjrt => bail!("pjrt engines cannot be built inside server workers"),
+    })
+}
+
+/// One worker's resident state for one tenant.
+struct Resident {
+    tenant: usize,
+    session: Session<'static>,
+    stream: EvidenceStream,
+}
+
+fn worker_loop(
+    specs: Vec<TenantSpec>,
+    rx: mpsc::Receiver<Request>,
+    opts: &ServeOptions,
+) -> Result<Vec<Response>> {
+    let mut residents: Vec<Resident> = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let engine = build_engine(opts.engine, opts.update, opts.engine_threads)?;
+        let params = RunParams {
+            eps: spec.budget.eps,
+            max_iterations: spec.budget.max_iterations,
+            timeout: spec.budget.timeout,
+            sim_timeout: spec.budget.sim_budget,
+            want_marginals: opts.keep_marginals,
+            belief_refresh_every: opts.belief_refresh_every,
+            residual_refresh: opts.residual_refresh,
+            ..RunParams::default()
+        };
+        let mut session = SessionBuilder::new(spec.graph, engine, opts.sched.build())
+            .with_params(params)
+            .build()?;
+        if opts.prewarm {
+            session.solve()?;
+        }
+        residents.push(Resident {
+            tenant: spec.id,
+            session,
+            // flips/amplitude placeholders: every draw goes through
+            // next_batch_with with the request's own mix.
+            stream: EvidenceStream::new(spec.evidence_seed, 1, 1.0),
+        });
+    }
+
+    // Virtual single-server FIFO queue (module docs): `clock` is the
+    // finish time of the last admitted request, `inflight` the finish
+    // times of admitted requests not yet retired at the current arrival.
+    let mut clock = 0.0f64;
+    let mut inflight: VecDeque<f64> = VecDeque::new();
+    let mut responses = Vec::new();
+    while let Ok(req) = rx.recv() {
+        while inflight.front().is_some_and(|&f| f <= req.arrival) {
+            inflight.pop_front();
+        }
+        if inflight.len() >= opts.queue_depth {
+            responses.push(Response {
+                id: req.id,
+                tenant: req.tenant,
+                arrival: req.arrival,
+                outcome: Outcome::Rejected(RejectReason::QueueFull),
+            });
+            continue;
+        }
+        let resident = residents
+            .iter_mut()
+            .find(|r| r.tenant == req.tenant)
+            .ok_or_else(|| {
+                anyhow!(
+                    "request {} routed to a worker that does not host tenant {}",
+                    req.id,
+                    req.tenant
+                )
+            })?;
+        let Resident { session, stream, .. } = resident;
+        let warm = session.is_warm();
+        let batch = stream.next_batch_with(session.graph(), req.flips, req.amplitude);
+        let refs: Vec<(usize, &[f32])> =
+            batch.iter().map(|(v, row)| (*v, row.as_slice())).collect();
+        session.apply_evidence(&refs)?;
+        let res = session.solve()?;
+        let service = res.sim_wall.ok_or_else(|| {
+            anyhow!("server accounting needs the simulated device clock (RunParams::cost_model)")
+        })?;
+        let staleness = if res.converged() {
+            Staleness::Converged
+        } else {
+            Staleness::Stale { residual_ub: res.final_residual }
+        };
+        let iterations = res.iterations;
+        let rows = res.update_rows();
+        let marginals = if opts.keep_marginals { res.marginals.clone() } else { None };
+
+        let start = clock.max(req.arrival);
+        let finish = start + service;
+        clock = finish;
+        inflight.push_back(finish);
+        responses.push(Response {
+            id: req.id,
+            tenant: req.tenant,
+            arrival: req.arrival,
+            outcome: Outcome::Served {
+                start,
+                finish,
+                warm,
+                staleness,
+                iterations,
+                rows,
+                marginals,
+            },
+        });
+    }
+    Ok(responses)
+}
+
+/// Run the serving runtime: install `tenants` across `opts.workers`
+/// worker threads, replay `requests` (arrival-ordered) through
+/// bounded per-worker channels, and fold every [`Response`] into an
+/// [`SloReport`]. Validates the whole trace before spawning anything,
+/// so a bad request rejects the call instead of killing a worker
+/// mid-trace.
+pub fn serve(
+    tenants: Vec<TenantSpec>,
+    requests: &[Request],
+    opts: &ServeOptions,
+) -> Result<SloReport> {
+    if opts.engine == EngineKind::Pjrt {
+        bail!(
+            "the serving runtime builds engines inside worker threads and the \
+             pjrt stub's artifacts are not thread-portable — pick native or parallel"
+        );
+    }
+    let workers = opts.workers.max(1);
+    let queue_depth = opts.queue_depth.max(1);
+
+    let tenant_ids: Vec<usize> = tenants.iter().map(|t| t.id).collect();
+    let mut sorted_ids = tenant_ids.clone();
+    sorted_ids.sort_unstable();
+    if sorted_ids.windows(2).any(|w| w[0] == w[1]) {
+        bail!("duplicate tenant id in the server's tenant population");
+    }
+    for spec in &tenants {
+        if spec.graph.live_vertices == 0 {
+            bail!("tenant {} has an empty graph", spec.id);
+        }
+        if !(spec.budget.sim_budget > 0.0) {
+            bail!("tenant {} has a non-positive sim budget", spec.id);
+        }
+    }
+    let mut prev = 0.0f64;
+    for r in requests {
+        if !(r.arrival.is_finite() && r.arrival >= 0.0) {
+            bail!("request {} has a non-finite or negative arrival time", r.id);
+        }
+        if r.arrival < prev {
+            bail!(
+                "request trace must be sorted by arrival time (request {} is out of order)",
+                r.id
+            );
+        }
+        prev = r.arrival;
+        if r.flips == 0 {
+            bail!("request {} asks for zero evidence flips", r.id);
+        }
+        if !(r.amplitude > 0.0) {
+            bail!("request {} has a non-positive evidence amplitude", r.id);
+        }
+        if sorted_ids.binary_search(&r.tenant).is_err() {
+            bail!("request {} targets unknown tenant {}", r.id, r.tenant);
+        }
+    }
+
+    let mut shards: Vec<Vec<TenantSpec>> = (0..workers).map(|_| Vec::new()).collect();
+    for spec in tenants {
+        shards[spec.id % workers].push(spec);
+    }
+
+    let mut senders = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for shard in shards {
+        // The channel bound gives physical backpressure only; admission
+        // is decided by the worker's virtual queue, so the report does
+        // not depend on how fast the driver feeds requests.
+        let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
+        let w_opts = opts.clone();
+        handles.push(thread::spawn(move || worker_loop(shard, rx, &w_opts)));
+        senders.push(tx);
+    }
+    let mut send_failed = false;
+    for req in requests {
+        if senders[req.tenant % workers].send(*req).is_err() {
+            // The worker hung up early (it errored); stop feeding and
+            // surface its error from the join below.
+            send_failed = true;
+            break;
+        }
+    }
+    drop(senders);
+
+    let offered = requests.len();
+    let mut responses = Vec::with_capacity(offered);
+    let mut first_err: Option<anyhow::Error> = None;
+    for handle in handles {
+        match handle.join() {
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("a server worker panicked"));
+                }
+            }
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Ok(Ok(mut rs)) => responses.append(&mut rs),
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e.context("server worker failed"));
+    }
+    if send_failed {
+        bail!("a server worker hung up before the trace finished (no error reported)");
+    }
+    responses.sort_by_key(|r| r.id);
+    Ok(SloReport::build(responses, &tenant_ids))
+}
+
+/// End-to-end entry point behind `bp-sched server`: build tenants and
+/// trace from the config, serve, return the report.
+pub fn run_server(cfg: &ServerConfig) -> Result<SloReport> {
+    cfg.validate()?;
+    let opts = ServeOptions::from_config(cfg)?;
+    let tenants = build_tenants(cfg)?;
+    let trace = generate_trace(cfg);
+    serve(tenants, &trace, &opts)
+}
+
+/// SLO accumulator over a response population (global or one tenant).
+#[derive(Clone, Debug, Default)]
+pub struct SloStats {
+    pub offered: usize,
+    pub served: usize,
+    pub rejected: usize,
+    /// Served under an exhausted budget ([`Staleness::Stale`]).
+    pub stale_served: usize,
+    /// Served by an already-warm session.
+    pub warm_served: usize,
+    /// arrival → finish, seconds (virtual), served only.
+    pub latency: Summary,
+    /// arrival → service start, seconds (virtual), served only.
+    pub queue_wait: Summary,
+    /// Engine update rows per served query.
+    pub rows_per_query: Summary,
+    /// Latest virtual finish time (0 when nothing was served).
+    pub makespan: f64,
+}
+
+impl SloStats {
+    pub fn absorb(&mut self, r: &Response) {
+        self.offered += 1;
+        match &r.outcome {
+            Outcome::Rejected(_) => self.rejected += 1,
+            Outcome::Served { start, finish, warm, staleness, rows, .. } => {
+                self.served += 1;
+                if *warm {
+                    self.warm_served += 1;
+                }
+                if matches!(staleness, Staleness::Stale { .. }) {
+                    self.stale_served += 1;
+                }
+                self.latency.push(finish - r.arrival);
+                self.queue_wait.push(start - r.arrival);
+                self.rows_per_query.push(*rows as f64);
+                self.makespan = self.makespan.max(*finish);
+            }
+        }
+    }
+
+    /// Fraction of served queries answered by a warm session (NaN →
+    /// JSON null when nothing was served).
+    pub fn warm_hit_ratio(&self) -> f64 {
+        if self.served == 0 {
+            f64::NAN
+        } else {
+            self.warm_served as f64 / self.served as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .num("offered", self.offered as f64)
+            .num("served", self.served as f64)
+            .num("rejected", self.rejected as f64)
+            .num("stale_served", self.stale_served as f64)
+            .num("warm_served", self.warm_served as f64)
+            .num("warm_hit_ratio", self.warm_hit_ratio())
+            .field("latency", self.latency.to_json())
+            .field("queue_wait", self.queue_wait.to_json())
+            .field("rows_per_query", self.rows_per_query.to_json())
+            .num("makespan_s", self.makespan)
+            .build()
+    }
+}
+
+/// The server's terminal artifact: every response plus global and
+/// per-tenant [`SloStats`]. Deterministic (module docs), so two
+/// same-seed runs render byte-identical [`to_json`](Self::to_json).
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    /// All responses, sorted by request id (dense 0..offered).
+    pub responses: Vec<Response>,
+    pub global: SloStats,
+    /// Sorted by tenant id; tenants the trace never targeted still
+    /// appear (all-zero rows).
+    pub per_tenant: Vec<(usize, SloStats)>,
+}
+
+impl SloReport {
+    pub fn build(responses: Vec<Response>, tenant_ids: &[usize]) -> SloReport {
+        let mut ids = tenant_ids.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        let mut per_tenant: Vec<(usize, SloStats)> =
+            ids.into_iter().map(|t| (t, SloStats::default())).collect();
+        let mut global = SloStats::default();
+        for r in &responses {
+            global.absorb(r);
+            if let Some(slot) = per_tenant.iter_mut().find(|(t, _)| *t == r.tenant) {
+                slot.1.absorb(r);
+            }
+        }
+        SloReport { responses, global, per_tenant }
+    }
+
+    /// Request conservation: exactly one response per offered request
+    /// (ids dense 0..offered) and served + rejected == offered.
+    pub fn conserves(&self, offered: usize) -> bool {
+        self.responses.len() == offered
+            && self.responses.iter().enumerate().all(|(i, r)| r.id == i)
+            && self.global.served + self.global.rejected == offered
+    }
+
+    pub fn to_json(&self) -> Json {
+        let per_tenant = self.per_tenant.iter().map(|(t, s)| match s.to_json() {
+            Json::Obj(mut fields) => {
+                fields.insert(0, ("tenant".to_string(), Json::Num(*t as f64)));
+                Json::Obj(fields)
+            }
+            other => other,
+        });
+        Json::obj()
+            .num("offered", self.global.offered as f64)
+            .field("global", self.global.to_json())
+            .field("per_tenant", Json::arr(per_tenant))
+            .field("responses", Json::arr(self.responses.iter().map(Response::to_json)))
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerConfig;
+
+    fn tiny_cfg() -> ServerConfig {
+        ServerConfig {
+            tenants: 2,
+            workers: 2,
+            queue_depth: 2,
+            requests: 10,
+            arrival_rate: 2_000.0,
+            seed: 7,
+            n: 4,
+            max_iterations: 2_000,
+            sim_budget: 5e-4,
+            workload: "mixed".into(),
+            ..ServerConfig::default()
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_monotone() {
+        let cfg = tiny_cfg();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.len(), cfg.requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.flips, y.flips);
+            assert_eq!(x.amplitude.to_bits(), y.amplitude.to_bits());
+        }
+        let mut prev = 0.0;
+        for r in &a {
+            assert!(r.arrival.is_finite() && r.arrival >= prev);
+            prev = r.arrival;
+            assert!(r.tenant < cfg.tenants);
+        }
+        // the mix knobs reach the trace
+        let all_major = ServerConfig { major_frac: 1.0, ..tiny_cfg() };
+        let trace = generate_trace(&all_major);
+        assert!(trace.iter().all(|r| r.flips == all_major.major_flips));
+        let no_major = ServerConfig { major_frac: 0.0, ..tiny_cfg() };
+        let trace = generate_trace(&no_major);
+        assert!(trace.iter().all(|r| r.flips == no_major.flips));
+    }
+
+    #[test]
+    fn sched_spec_gates_serial_and_relaxed() {
+        assert!(SchedSpec::parse("rbp", 0.25, 0.7, 1.0, 2, 1).is_ok());
+        assert!(SchedSpec::parse("lbp", 0.25, 0.7, 1.0, 2, 1).is_ok());
+        let e = SchedSpec::parse("srbp", 0.25, 0.7, 1.0, 2, 1).unwrap_err();
+        assert!(e.to_string().contains("Session"), "{e}");
+        let e = SchedSpec::parse("mq", 0.25, 0.7, 1.0, 2, 1).unwrap_err();
+        assert!(e.to_string().contains("determinism"), "{e}");
+        let e = SchedSpec::parse("bogus", 0.25, 0.7, 1.0, 2, 1).unwrap_err();
+        assert!(e.to_string().contains("unknown"), "{e}");
+    }
+
+    #[test]
+    fn tiny_server_is_conservative_and_deterministic() {
+        let cfg = tiny_cfg();
+        let a = run_server(&cfg).unwrap();
+        assert!(a.conserves(cfg.requests));
+        let b = run_server(&cfg).unwrap();
+        assert_eq!(a.to_json().render(), b.to_json().render());
+        let json = a.to_json().render();
+        for key in [
+            "\"p99\"",
+            "\"rejected\"",
+            "\"queue_wait\"",
+            "\"stale_served\"",
+            "\"per_tenant\"",
+            "\"rows_per_query\"",
+            "\"warm_hit_ratio\"",
+        ] {
+            assert!(json.contains(key), "missing {key}");
+        }
+        // labels are total: a staleness label on every served response,
+        // a reason on every rejection; prewarmed sessions always warm.
+        for r in &a.responses {
+            match &r.outcome {
+                Outcome::Served { staleness, warm, .. } => {
+                    assert!(matches!(staleness.label(), "converged" | "stale"));
+                    assert!(*warm, "prewarm = true leaves no cold first query");
+                }
+                Outcome::Rejected(reason) => assert_eq!(reason.label(), "queue_full"),
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_worker_rejects_instead_of_queueing_unboundedly() {
+        let cfg = ServerConfig {
+            arrival_rate: 1e9,
+            queue_depth: 1,
+            workers: 1,
+            requests: 12,
+            ..tiny_cfg()
+        };
+        let report = run_server(&cfg).unwrap();
+        assert!(report.conserves(cfg.requests));
+        assert!(
+            report.global.rejected > 0,
+            "a 1-deep queue under ~simultaneous arrivals must shed load"
+        );
+        assert_eq!(report.global.served + report.global.rejected, cfg.requests);
+    }
+}

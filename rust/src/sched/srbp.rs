@@ -132,6 +132,8 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         stop,
         iterations: message_updates as usize,
         wall: clock.seconds(),
+        timeout: params.timeout,
+        sim_timeout: params.sim_timeout,
         message_updates,
         engine_calls: message_updates,
         // serial RBP has no bulk dirty-list refresh: dependents are

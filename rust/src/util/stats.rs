@@ -83,6 +83,21 @@ impl Summary {
     pub fn values(&self) -> &[f64] {
         &self.values
     }
+
+    /// Standard SLO percentile digest (`n`, `mean`, `p50`, `p99`,
+    /// `max`) as a JSON object — the shape every latency/queue-wait/
+    /// rows-per-query field of the server's SLO report uses. An empty
+    /// sample renders its statistics as `null` (NaN through
+    /// [`crate::util::json::Json`]), deterministically.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .num("n", self.len() as f64)
+            .num("mean", self.mean())
+            .num("p50", self.percentile(50.0))
+            .num("p99", self.percentile(99.0))
+            .num("max", if self.is_empty() { f64::NAN } else { self.max() })
+            .build()
+    }
 }
 
 /// Format seconds human-readably (ns/us/ms/s) for harness tables.
@@ -148,6 +163,20 @@ mod tests {
         assert_eq!(s.percentile(150.0), 4.0);
         assert_eq!(s.percentile(-25.0), 1.0);
         assert!(s.percentile(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn summary_json_digest() {
+        let s = Summary::from_values((1..=100).map(|i| i as f64).collect());
+        let j = s.to_json().render();
+        assert!(j.contains("\"n\":100"));
+        assert!(j.contains("\"p50\":50.5"));
+        assert!(j.contains("\"max\":100"));
+        // empty samples render null, not -inf from a fold over nothing
+        let j = Summary::new().to_json().render();
+        assert!(j.contains("\"n\":0"));
+        assert!(j.contains("\"max\":null"));
+        assert!(j.contains("\"p99\":null"));
     }
 
     #[test]

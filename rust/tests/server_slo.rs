@@ -1,0 +1,299 @@
+//! Integration harness for the multi-tenant serving runtime
+//! (`bp_sched::runtime::server`), over the `BP_TEST_ENGINE` matrix:
+//!
+//! * **request conservation** — every offered request gets exactly one
+//!   response, ids dense, served + rejected == offered, globally and
+//!   per tenant;
+//! * **per-tenant budget enforcement** — a starved simulated-device
+//!   budget and a 1-iteration cap each degrade *their* tenant's
+//!   responses (stale labels, capped iteration counts) while a generous
+//!   tenant converges, inside one shared trace;
+//! * **staleness honesty** — stale labels appear exactly on
+//!   unconverged serves and carry a residual bound at or above the
+//!   tenant's ε;
+//! * **bitwise replay parity** — at one worker and a deep queue, every
+//!   served response's marginals/iterations/rows bitwise-match a serial
+//!   warm [`bp_sched::coordinator::Session`] replaying the same
+//!   admitted evidence sequence;
+//! * **report determinism** — two same-seed runs render byte-identical
+//!   JSON even at several workers.
+
+mod common;
+
+use bp_sched::config::{EngineKind, ServerConfig};
+use bp_sched::coordinator::campaign::EvidenceStream;
+use bp_sched::coordinator::{RunParams, SessionBuilder};
+use bp_sched::datasets::DatasetSpec;
+use bp_sched::engine::belief::DEFAULT_REFRESH_EVERY;
+use bp_sched::engine::native::NativeEngine;
+use bp_sched::engine::parallel::ParallelEngine;
+use bp_sched::engine::{MessageEngine, UpdateOptions};
+use bp_sched::runtime::server::{
+    self, Outcome, QueryBudget, Request, SchedSpec, ServeOptions, Staleness, TenantSpec,
+};
+use bp_sched::util::Rng;
+
+use common::{assert_bits_equal, engines_under_test};
+
+fn kind_of(name: &str) -> EngineKind {
+    match name {
+        "native" => EngineKind::Native,
+        "parallel" => EngineKind::Parallel,
+        other => panic!("unexpected engine under test {other:?}"),
+    }
+}
+
+fn opts(engine: EngineKind) -> ServeOptions {
+    ServeOptions {
+        workers: 2,
+        queue_depth: 4,
+        engine,
+        engine_threads: 2,
+        update: UpdateOptions::default(),
+        sched: SchedSpec::Rbp { p: 0.25 },
+        residual_refresh: Default::default(),
+        belief_refresh_every: DEFAULT_REFRESH_EVERY,
+        prewarm: true,
+        keep_marginals: false,
+    }
+}
+
+fn make_tenants(budgets: &[QueryBudget], seed: u64) -> Vec<TenantSpec> {
+    budgets
+        .iter()
+        .enumerate()
+        .map(|(t, &budget)| {
+            let spec = match t % 3 {
+                0 => DatasetSpec::Ising { n: 4, c: 1.5 },
+                1 => DatasetSpec::Potts { n: 4, q: 3, c: 1.0 },
+                _ => DatasetSpec::Ising { n: 5, c: 1.0 },
+            };
+            let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9));
+            TenantSpec {
+                id: t,
+                graph: spec.generate(&mut rng).unwrap(),
+                budget,
+                evidence_seed: seed.wrapping_add(100 + t as u64),
+            }
+        })
+        .collect()
+}
+
+fn make_engine(kind: EngineKind, threads: usize) -> Box<dyn MessageEngine> {
+    match kind {
+        EngineKind::Native => Box::new(NativeEngine::with_options(UpdateOptions::default())),
+        EngineKind::Parallel => {
+            Box::new(ParallelEngine::with_options_threads(UpdateOptions::default(), threads))
+        }
+        EngineKind::Pjrt => unreachable!("the server rejects pjrt"),
+    }
+}
+
+#[test]
+fn conserves_requests_globally_and_per_tenant() {
+    for eng in engines_under_test() {
+        let cfg = ServerConfig {
+            tenants: 3,
+            workers: 2,
+            queue_depth: 2,
+            requests: 24,
+            arrival_rate: 3_000.0,
+            seed: 11,
+            n: 4,
+            engine: kind_of(eng),
+            engine_threads: 2,
+            sim_budget: 1e-3,
+            workload: "mixed".into(),
+            ..ServerConfig::default()
+        };
+        let report = server::run_server(&cfg).unwrap();
+        assert!(report.conserves(cfg.requests), "{eng}: conservation");
+        let sum_offered: usize = report.per_tenant.iter().map(|(_, s)| s.offered).sum();
+        assert_eq!(sum_offered, cfg.requests, "{eng}: tenants partition the trace");
+        for (t, s) in &report.per_tenant {
+            assert_eq!(s.served + s.rejected, s.offered, "{eng}: tenant {t} conservation");
+            assert!(s.stale_served <= s.served, "{eng}: tenant {t} staleness bound");
+        }
+    }
+}
+
+#[test]
+fn per_tenant_budgets_enforced_with_honest_staleness_labels() {
+    for eng in engines_under_test() {
+        // Three tenants under one trace, three budget regimes.
+        let starved = QueryBudget {
+            eps: 1e-7,
+            max_iterations: 50_000,
+            sim_budget: 1e-12,
+            timeout: 30.0,
+        };
+        let generous = QueryBudget {
+            eps: 1e-4,
+            max_iterations: 200_000,
+            sim_budget: 10.0,
+            timeout: 30.0,
+        };
+        let capped = QueryBudget {
+            eps: 1e-7,
+            max_iterations: 1,
+            sim_budget: 10.0,
+            timeout: 30.0,
+        };
+        let tenants = make_tenants(&[starved, generous, capped], 5);
+        // Arrivals 0.1 virtual seconds apart: far beyond any service
+        // time here, so admission never interferes with this test.
+        let requests: Vec<Request> = (0..12)
+            .map(|id| Request {
+                id,
+                tenant: id % 3,
+                arrival: 0.1 * id as f64,
+                flips: 2,
+                amplitude: 2.5,
+            })
+            .collect();
+        let report = server::serve(tenants, &requests, &opts(kind_of(eng))).unwrap();
+        assert!(report.conserves(requests.len()));
+        assert_eq!(report.global.rejected, 0, "{eng}: spaced arrivals must all admit");
+        for r in &report.responses {
+            match &r.outcome {
+                Outcome::Served { staleness, iterations, .. } => match r.tenant {
+                    0 => match staleness {
+                        Staleness::Stale { residual_ub } => assert!(
+                            *residual_ub >= starved.eps,
+                            "{eng}: request {} stopped stale but sub-eps ({residual_ub})",
+                            r.id
+                        ),
+                        Staleness::Converged => panic!(
+                            "{eng}: request {} converged under a ~zero device budget",
+                            r.id
+                        ),
+                    },
+                    1 => assert_eq!(
+                        *staleness,
+                        Staleness::Converged,
+                        "{eng}: generous tenant must converge (request {})",
+                        r.id
+                    ),
+                    _ => {
+                        assert!(
+                            *iterations <= capped.max_iterations,
+                            "{eng}: request {} ran {iterations} iterations past its cap",
+                            r.id
+                        );
+                        assert!(
+                            matches!(staleness, Staleness::Stale { .. }),
+                            "{eng}: a 1-iteration cap at eps=1e-7 cannot converge (request {})",
+                            r.id
+                        );
+                    }
+                },
+                Outcome::Rejected(_) => panic!("{eng}: request {} rejected", r.id),
+            }
+        }
+        // Degradation shows up in the right per-tenant rows.
+        assert_eq!(report.per_tenant[0].1.stale_served, report.per_tenant[0].1.served);
+        assert_eq!(report.per_tenant[1].1.stale_served, 0);
+        assert_eq!(report.per_tenant[2].1.stale_served, report.per_tenant[2].1.served);
+    }
+}
+
+#[test]
+fn one_worker_serving_matches_serial_session_replay_bitwise() {
+    for eng in engines_under_test() {
+        let kind = kind_of(eng);
+        let budget = QueryBudget {
+            eps: 1e-4,
+            max_iterations: 100_000,
+            sim_budget: 10.0,
+            timeout: 30.0,
+        };
+        let tenants = make_tenants(&[budget, budget], 42);
+        // Mixed minor/major evidence, interleaved tenants, sorted
+        // arrivals; deep queue so every request is admitted and the
+        // tenant's admitted sequence is the full per-tenant trace.
+        let requests: Vec<Request> = (0..10)
+            .map(|id| {
+                let (flips, amplitude) = if id % 3 == 0 { (3, 2.0) } else { (1, 1.0) };
+                Request { id, tenant: id % 2, arrival: 0.05 * id as f64, flips, amplitude }
+            })
+            .collect();
+        let serve_opts = ServeOptions {
+            workers: 1,
+            queue_depth: requests.len(),
+            keep_marginals: true,
+            ..opts(kind)
+        };
+        let report = server::serve(tenants.clone(), &requests, &serve_opts).unwrap();
+        assert!(report.conserves(requests.len()));
+        assert_eq!(report.global.rejected, 0, "{eng}: deep queue must admit everything");
+
+        for spec in &tenants {
+            let params = RunParams {
+                eps: spec.budget.eps,
+                max_iterations: spec.budget.max_iterations,
+                timeout: spec.budget.timeout,
+                sim_timeout: spec.budget.sim_budget,
+                want_marginals: true,
+                ..RunParams::default()
+            };
+            let mut session = SessionBuilder::new(
+                spec.graph.clone(),
+                make_engine(kind, serve_opts.engine_threads),
+                serve_opts.sched.build(),
+            )
+            .with_params(params)
+            .build()
+            .unwrap();
+            session.solve().unwrap(); // prewarm, as the worker does
+            let mut stream = EvidenceStream::new(spec.evidence_seed, 1, 1.0);
+            for req in requests.iter().filter(|r| r.tenant == spec.id) {
+                let batch = stream.next_batch_with(session.graph(), req.flips, req.amplitude);
+                let refs: Vec<(usize, &[f32])> =
+                    batch.iter().map(|(v, row)| (*v, row.as_slice())).collect();
+                session.apply_evidence(&refs).unwrap();
+                let res = session.solve().unwrap();
+                let what = format!("{eng}: tenant {} request {}", spec.id, req.id);
+                match &report.responses[req.id].outcome {
+                    Outcome::Served { staleness, iterations, rows, marginals, .. } => {
+                        assert_eq!(*iterations, res.iterations, "{what}: iterations");
+                        assert_eq!(*rows, res.update_rows(), "{what}: rows");
+                        assert_eq!(
+                            matches!(staleness, Staleness::Converged),
+                            res.converged(),
+                            "{what}: staleness label vs replay convergence"
+                        );
+                        assert_bits_equal(
+                            marginals.as_ref().expect("keep_marginals retains them"),
+                            res.marginals.as_ref().expect("want_marginals computes them"),
+                            &what,
+                        );
+                    }
+                    Outcome::Rejected(_) => panic!("{what}: rejected under a deep queue"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn slo_report_json_is_deterministic_across_runs() {
+    for eng in engines_under_test() {
+        let cfg = ServerConfig {
+            tenants: 4,
+            workers: 3,
+            queue_depth: 2,
+            requests: 32,
+            arrival_rate: 5_000.0,
+            seed: 99,
+            n: 4,
+            engine: kind_of(eng),
+            engine_threads: 2,
+            sim_budget: 2e-3,
+            workload: "mixed".into(),
+            ..ServerConfig::default()
+        };
+        let a = server::run_server(&cfg).unwrap().to_json().render();
+        let b = server::run_server(&cfg).unwrap().to_json().render();
+        assert_eq!(a, b, "{eng}: same seed must render byte-identical SLO reports");
+    }
+}
