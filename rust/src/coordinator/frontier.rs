@@ -147,32 +147,55 @@ impl ConcurrentFrontier {
     /// spawning workers.
     pub fn reset_claims(&self) {
         for c in &self.claimed {
+            // ordering: single-threaded reset between rounds; workers
+            // are joined before and spawned after, and thread::scope
+            // spawn/join provide the happens-before edges.
             c.store(false, Ordering::Relaxed);
         }
     }
 
     /// Claim edge `e` for the current frontier. Exactly one caller
     /// wins between resets, no matter how many workers race.
+    ///
+    /// Memory-ordering verdict (audited for this crate's use): the
+    /// claim CAS publishes nothing — it is a membership token only.
+    /// The winning worker goes on to read `residuals`, which were
+    /// written before `thread::scope` spawned the workers (spawn is a
+    /// release/acquire edge) and are immutable for the round; its
+    /// output lands in a worker-local buffer that the coordinator
+    /// reads only after scope join (another release/acquire edge).
+    /// RMWs on a single atomic location are totally ordered at every
+    /// memory ordering, so exactly-once claiming holds under
+    /// `Relaxed`. Acquire/release here would add fence traffic on the
+    /// hottest selection path and protect nothing.
     #[inline]
     pub fn try_claim(&self, e: usize) -> bool {
         self.claimed[e]
+            // ordering: membership token only; see the audit verdict
+            // above — no data is published through this CAS.
             .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
             .is_ok()
     }
 
     /// Whether edge `e` is claimed in the current round.
     pub fn is_claimed(&self, e: usize) -> bool {
+        // ordering: advisory read of the membership token; callers
+        // tolerate stale views (they retry or skip, never trust data
+        // through this flag).
         self.claimed[e].load(Ordering::Relaxed)
     }
 
     /// Count one committed row for edge `e` (coordinator commit path).
     #[inline]
     pub fn record_commit(&self, e: usize) {
+        // ordering: statistics counter; summed after workers join, so
+        // the scope join supplies the synchronization.
         self.commits[e].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Lifetime committed-row count for edge `e`.
     pub fn commit_count(&self, e: usize) -> u64 {
+        // ordering: statistics read after join; no payload guarded.
         self.commits[e].load(Ordering::Relaxed) as u64
     }
 
@@ -180,6 +203,7 @@ impl ConcurrentFrontier {
     pub fn edge_commits(&self) -> Vec<u64> {
         self.commits
             .iter()
+            // ordering: statistics snapshot after join; no payload.
             .map(|c| c.load(Ordering::Relaxed) as u64)
             .collect()
     }
@@ -188,6 +212,7 @@ impl ConcurrentFrontier {
     pub fn total_commits(&self) -> u64 {
         self.commits
             .iter()
+            // ordering: statistics sum after join; no payload.
             .map(|c| c.load(Ordering::Relaxed) as u64)
             .sum()
     }

@@ -263,6 +263,20 @@
 //! worker, one queue) still gets the strong contract: bitwise-equal
 //! marginals and digests across identical runs.
 //!
+//! **Claim-CAS memory-ordering verdict (audited, PR 10).** The
+//! per-edge claim CAS in [`ConcurrentFrontier::try_claim`] stays
+//! `Relaxed`: it is a membership token, not a publication point. The
+//! data a claiming worker reads (`residuals`) is written before
+//! `thread::scope` spawns the workers and is immutable for the round;
+//! the data it writes goes to a worker-local buffer read only after
+//! the scope joins. Spawn and join supply the release/acquire edges,
+//! and RMWs on a single atomic location are totally ordered at every
+//! memory ordering, so exactly-once claiming needs nothing stronger.
+//! The argument is recorded at the CAS site itself, every `Relaxed`
+//! in the crate carries an `// ordering:` rationale enforced by
+//! `bp-lint` (`util::lint`), and the nightly ThreadSanitizer CI job
+//! runs `mq_stress`/`mq_envelope` against this protocol.
+//!
 //! ## Storage layouts
 //!
 //! The coordinator addresses every message/candidate row through the
@@ -546,6 +560,7 @@ impl FrontierDigest {
 
     #[inline]
     pub fn push_edge(&mut self, e: i32) {
+        // lint:allow(narrowing-cast): same-width i32->u32 bit reinterpretation feeding an FNV fold, no range narrowed
         self.0 = (self.0 ^ (e as u32 as u64)).wrapping_mul(0x100_0000_01b3);
     }
 
@@ -849,7 +864,7 @@ impl State {
     fn mark_dirty(&mut self, e: usize) {
         if !self.f.dirty[e] {
             self.f.dirty[e] = true;
-            self.f.dirty_list.push(e as i32);
+            self.f.dirty_list.push(crate::util::ids::edge_id(e));
         }
     }
 
@@ -1164,14 +1179,14 @@ impl ResidualOracle for LazyOracle<'_> {
         let mut edges = std::mem::take(&mut self.st.lookahead);
         edges.clear();
         self.st.heap.remove(top);
-        edges.push(top as i32);
+        edges.push(crate::util::ids::edge_id(top));
         while edges.len() < RESOLVE_LOOKAHEAD {
             let Some((b, e)) = self.st.heap.peek() else { break };
             if !b.is_nan() && b < self.eps {
                 break;
             }
             self.st.heap.remove(e);
-            edges.push(e as i32);
+            edges.push(crate::util::ids::edge_id(e));
         }
         let r = if edges.len() == 1 {
             self.resolve_now(top)
@@ -1199,7 +1214,9 @@ impl ResidualOracle for LazyOracle<'_> {
         // this IS the eager exact refresh of the deferred set, just
         // executed at selection time
         let mut frontier = Vec::with_capacity(self.st.heap.len());
-        self.st.heap.drain_unordered(|_, e| frontier.push(e as i32));
+        self.st
+            .heap
+            .drain_unordered(|_, e| frontier.push(crate::util::ids::edge_id(e)));
         let t = Stopwatch::start();
         let res = self
             .engine
@@ -1845,7 +1862,7 @@ impl<'a> Session<'a> {
             // Priming refresh: all live edges, from uniform messages —
             // the cold-start contract `run` has always had. Not counted
             // into refresh_rows (those tally dirty-list work only).
-            let init_frontier: Vec<i32> = (0..live as i32).collect();
+            let init_frontier: Vec<i32> = (0..crate::util::ids::edge_id(live)).collect();
             phases.time("refresh", || {
                 engine.candidates_into(mrf, &st.logm, &init_frontier, batch)
             })?;

@@ -92,7 +92,7 @@ pub fn write(mrf: &Mrf, w: &mut impl Write) -> Result<()> {
         );
     }
     w.write_all(MAGIC)?;
-    write_u32(w, mrf.class_name.len() as u32)?;
+    write_u32(w, crate::util::ids::narrow_u32(mrf.class_name.len(), "class name length"))?;
     w.write_all(mrf.class_name.as_bytes())?;
     for v in [
         mrf.num_vertices,

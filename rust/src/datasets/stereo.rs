@@ -76,7 +76,7 @@ impl StereoGrid {
                 let lo = (d_obs.round() as isize - (k as isize) / 2)
                     .clamp(0, (q - k) as isize) as usize;
                 win.push(k as u8);
-                off.push(lo as u16);
+                off.push(crate::util::ids::narrow_u16(lo, "label-window offset"));
                 obs.push(d_obs as f32);
             }
         }

@@ -83,7 +83,7 @@ pub fn build_csr(source: &dyn GraphSource) -> Result<Mrf> {
                 log_unary.len() - before
             );
         }
-        arity.push(a as i32);
+        arity.push(crate::util::ids::narrow_i32(a, "vertex arity"));
     }
     let ar = |v: usize| arity[v] as usize;
 
@@ -146,15 +146,16 @@ pub fn build_csr(source: &dyn GraphSource) -> Result<Mrf> {
             first_err = Some("edge stream grew between passes".to_string());
             return;
         }
-        src.push(u as i32);
-        dst.push(v as i32);
-        rev.push((e + 1) as i32);
-        src.push(v as i32);
-        dst.push(u as i32);
-        rev.push(e as i32);
-        in_adj[cursor[v] as usize] = e as u32;
+        use crate::util::ids::{edge_id, edge_id_u32, vertex_id};
+        src.push(vertex_id(u));
+        dst.push(vertex_id(v));
+        rev.push(edge_id(e + 1));
+        src.push(vertex_id(v));
+        dst.push(vertex_id(u));
+        rev.push(edge_id(e));
+        in_adj[cursor[v] as usize] = edge_id_u32(e);
         cursor[v] += 1;
-        in_adj[cursor[u] as usize] = (e + 1) as u32;
+        in_adj[cursor[u] as usize] = edge_id_u32(e + 1);
         cursor[u] += 1;
         let (au, av) = (ar(u), ar(v));
         table.clear();

@@ -162,7 +162,7 @@ pub trait MessageEngine {
     ) -> Result<f32> {
         debug_assert!(out.len() >= mrf.arity_of(mrf.dst[e] as usize));
         let mut batch = CandidateBatch::default();
-        self.candidates_into(mrf, logm, &[e as i32], &mut batch)?;
+        self.candidates_into(mrf, logm, &[crate::util::ids::edge_id(e)], &mut batch)?;
         // the bulk batch row is dense max_arity-wide with zeroed pads;
         // copy what fits (an arity-exact `out` takes only valid lanes)
         let n = out.len().min(mrf.max_arity);

@@ -106,7 +106,7 @@ impl MrfBuilder {
         let mut arity = vec![0i32; env_v];
         let mut log_unary = vec![NEG; env_v * env_a];
         for v in 0..live_v {
-            arity[v] = self.arity[v] as i32;
+            arity[v] = crate::util::ids::narrow_i32(self.arity[v], "vertex arity");
             log_unary[v * env_a..v * env_a + env_a]
                 .copy_from_slice(&padded_row(&self.unary[v], env_a));
         }
@@ -116,13 +116,14 @@ impl MrfBuilder {
         let mut rev = vec![0i32; env_m];
         let mut log_pair = vec![NEG; env_m * env_a * env_a];
         for (i, (u, v, table)) in self.edges.iter().enumerate() {
+            use crate::util::ids::{edge_id, vertex_id};
             let (e_uv, e_vu) = (2 * i, 2 * i + 1);
-            src[e_uv] = *u as i32;
-            dst[e_uv] = *v as i32;
-            rev[e_uv] = e_vu as i32;
-            src[e_vu] = *v as i32;
-            dst[e_vu] = *u as i32;
-            rev[e_vu] = e_uv as i32;
+            src[e_uv] = vertex_id(*u);
+            dst[e_uv] = vertex_id(*v);
+            rev[e_uv] = edge_id(e_vu);
+            src[e_vu] = vertex_id(*v);
+            dst[e_vu] = vertex_id(*u);
+            rev[e_vu] = edge_id(e_uv);
             let (au, av) = (self.arity[*u], self.arity[*v]);
             for a in 0..au {
                 for b in 0..av {
@@ -137,7 +138,7 @@ impl MrfBuilder {
         let mut fill = vec![0usize; env_v];
         for e in 0..live_m {
             let t = dst[e] as usize;
-            in_edges[t * env_d + fill[t]] = e as i32;
+            in_edges[t * env_d + fill[t]] = crate::util::ids::edge_id(e);
             fill[t] += 1;
         }
 

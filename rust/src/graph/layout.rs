@@ -41,6 +41,7 @@ impl RowLayout {
         for w in widths {
             total += w as u64;
             assert!(total <= u32::MAX as u64, "row layout exceeds u32 offsets");
+            // lint:allow(narrowing-cast): bounded by the assert directly above
             off.push(total as u32);
         }
         RowLayout {

@@ -30,7 +30,7 @@ impl Messages {
             let val = -(av as f32).ln();
             let s = rows.start(e);
             data[s..s + av].fill(val);
-            valid[e] = av as u32;
+            valid[e] = crate::util::ids::narrow_u32(av, "message arity");
         }
         Messages { data, rows, valid }
     }

@@ -307,9 +307,9 @@ impl Mrf {
         let mut in_adj = Vec::with_capacity(lm);
         for v in 0..lv {
             for e in self.incoming(v) {
-                in_adj.push(e as u32);
+                in_adj.push(crate::util::ids::edge_id_u32(e));
             }
-            in_off.push(in_adj.len() as u32);
+            in_off.push(crate::util::ids::narrow_u32(in_adj.len(), "in_off entry"));
         }
         assemble_csr(
             self.class_name.clone(),
@@ -413,9 +413,10 @@ pub(crate) fn assemble_envelope(
     let mut in_adj = Vec::new();
     for v in 0..num_vertices {
         for &e in in_edges[v * d..(v + 1) * d].iter().take_while(|&&e| e >= 0) {
-            in_adj.push(e as u32);
+            // e is a live edge id (>= 0 by the take_while filter).
+            in_adj.push(u32::try_from(e).expect("edge id fits u32 adjacency"));
         }
-        in_off.push(in_adj.len() as u32);
+        in_off.push(crate::util::ids::narrow_u32(in_adj.len(), "in_off entry"));
     }
     Mrf {
         instance_id,
@@ -453,6 +454,8 @@ pub(crate) fn padded_row(vals: &[f32], width: usize) -> Vec<f32> {
 pub(crate) fn next_instance_id() -> u64 {
     use std::sync::atomic::{AtomicU64, Ordering};
     static NEXT: AtomicU64 = AtomicU64::new(1);
+    // ordering: uniqueness is the only contract; a lone RMW location
+    // serializes at any ordering and publishes no other state.
     NEXT.fetch_add(1, Ordering::Relaxed)
 }
 

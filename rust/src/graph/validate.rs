@@ -142,7 +142,7 @@ fn validate_envelope(mrf: &Mrf) -> Result<()> {
                 if entry < 0 {
                     bail!("vertex {vert}: in_edges has -1 before {deg} live entries");
                 }
-                if entry as u32 != mrf.in_adj[lo + i] {
+                if i64::from(entry) != i64::from(mrf.in_adj[lo + i]) {
                     bail!("vertex {vert}: in_edges[{i}] disagrees with in_adj");
                 }
             } else if entry >= 0 {

@@ -55,6 +55,9 @@ USAGE:
   bp-sched bench-all [flags]            every table and figure
   bp-sched generate [flags] --out FILE  sample a graph to a .bpmrf file
   bp-sched inspect <artifacts|graph PATH>
+  bp-sched lint   [dir]                 run the repo's static-analysis pass
+                                        (bp-lint) over rust/src and rust/tests;
+                                        exits nonzero on unwaived violations
 
 COMMON FLAGS (also settable via --config file.toml):
   --full                paper-scale datasets (ising100/200, chain100k)
@@ -165,8 +168,31 @@ fn dispatch() -> Result<()> {
         }
         "generate" => cmd_generate(rest),
         "inspect" => cmd_inspect(rest),
+        "lint" => cmd_lint(rest),
         other => bail!("unknown command {other:?}; try --help"),
     }
+}
+
+/// `bp-sched lint [dir]` — run the bp-lint static-analysis pass over
+/// the crate sources. `dir` may be the repo root (containing `rust/`)
+/// or the crate dir itself; defaults to the current directory.
+fn cmd_lint(rest: &[String]) -> Result<()> {
+    let root = rest.first().map(String::as_str).unwrap_or(".");
+    let root = std::path::Path::new(root);
+    let crate_dir = if root.join("rust").join("src").is_dir() {
+        root.join("rust")
+    } else {
+        root.to_path_buf()
+    };
+    if !crate_dir.join("src").is_dir() {
+        bail!("no src/ under {}; pass the repo root or crate dir", crate_dir.display());
+    }
+    let report = bp_sched::util::lint::lint_crate(&crate_dir)?;
+    print!("{}", report.render());
+    if !report.ok() {
+        bail!("bp-lint: {} unwaived violation(s)", report.violations.len());
+    }
+    Ok(())
 }
 
 /// Flags not consumed by HarnessConfig, for `run`/`generate`.

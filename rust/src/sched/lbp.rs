@@ -40,7 +40,7 @@ impl Scheduler for Lbp {
             return vec![];
         }
         if self.frontier.len() != ctx.mrf.live_edges {
-            self.frontier = (0..ctx.mrf.live_edges as i32).collect();
+            self.frontier = (0..crate::util::ids::edge_id(ctx.mrf.live_edges)).collect();
         }
         vec![self.frontier.clone()]
     }

@@ -101,13 +101,9 @@ fn key_of(r: f32) -> u32 {
     }
 }
 
-/// Checked edge-id narrowing for wave construction. Edge counts beyond
-/// `i32::MAX` would previously wrap silently via `e as i32` and emit
-/// negative edge ids into waves; fail loudly instead.
-#[inline]
-fn edge_id(e: usize) -> i32 {
-    i32::try_from(e).expect("edge index exceeds i32 wave ids")
-}
+// Checked edge-id narrowing for wave construction (PR 7 fix) moved to
+// util::ids so every scheduler and the coordinator share one guard.
+use crate::util::ids::edge_id;
 
 impl Ord for QEntry {
     fn cmp(&self, o: &Self) -> std::cmp::Ordering {
@@ -205,6 +201,8 @@ impl Multiqueue {
             // entry placement: restart with empty queues.
             self.qs = (0..nq).map(|_| Mutex::new(BinaryHeap::new())).collect();
             for q in &self.queued {
+                // ordering: &mut self — no concurrent observers, the
+                // exclusive borrow is the synchronization.
                 q.store(false, Ordering::Relaxed);
             }
         }
@@ -353,6 +351,10 @@ fn worker_round(
             continue;
         }
         let r = residuals[e];
+        // ordering: the queued flag IS the datum (a dedup token), not
+        // a guard publishing other state; the heap push behind it is
+        // protected by the queue mutex. Relaxed RMWs on one location
+        // still serialize, so at most one enqueue wins.
         if r >= eps && !queued[e].swap(true, Ordering::Relaxed) {
             let qi = rng.below(qs.len());
             qs[qi].lock().unwrap().push(QEntry { key: key_of(r), edge: edge_id(e) });
@@ -372,6 +374,9 @@ fn worker_round(
         let cur = residuals[e];
         if !(cur >= eps) {
             // Certified converged since enqueue (or NaN): drop.
+            // ordering: dedup-token clear, no payload published; a
+            // racing refill re-enqueueing early is benign (one extra
+            // staleness check next pop).
             queued[e].store(false, Ordering::Relaxed);
             continue;
         }
@@ -382,6 +387,9 @@ fn worker_round(
             qs[qi].lock().unwrap().push(QEntry { key: key_of(cur), edge });
             continue;
         }
+        // ordering: dedup-token clear before claim; both flags are
+        // membership tokens, selected rows flow through WorkerOut and
+        // the scope join, never through these atomics.
         queued[e].store(false, Ordering::Relaxed);
         if f.try_claim(e) {
             out.selected.push((cur, edge));
@@ -489,6 +497,8 @@ impl Scheduler for Multiqueue {
             let bounds = oracle.residuals();
             for e in 0..m {
                 let r = bounds[e];
+                // ordering: lazy path holds &mut self — the dedup
+                // token has no concurrent observers here.
                 if (r >= eps || r.is_nan()) && !self.queued[e].swap(true, Ordering::Relaxed) {
                     let qi = self.rng.below(self.qs.len());
                     self.qs[qi].lock().unwrap().push(QEntry { key: key_of(r), edge: edge_id(e) });
@@ -513,6 +523,7 @@ impl Scheduler for Multiqueue {
                 oracle.resolve(e)
             };
             if !(cur >= eps) {
+                // ordering: &mut self, no concurrent observers.
                 self.queued[e].store(false, Ordering::Relaxed);
                 continue;
             }
@@ -521,6 +532,7 @@ impl Scheduler for Multiqueue {
                 self.qs[qi].lock().unwrap().push(QEntry { key: key_of(cur), edge });
                 continue;
             }
+            // ordering: &mut self, no concurrent observers.
             self.queued[e].store(false, Ordering::Relaxed);
             sel.push((cur, edge));
         }
@@ -559,6 +571,7 @@ impl Scheduler for Multiqueue {
             q.lock().unwrap().clear();
         }
         for q in &self.queued {
+            // ordering: &mut self reseed, no concurrent observers.
             q.store(false, Ordering::Relaxed);
         }
     }

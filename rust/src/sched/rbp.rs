@@ -70,7 +70,7 @@ impl Scheduler for Rbp {
         self.scratch.clear();
         for (e, &r) in ctx.residuals[..m].iter().enumerate() {
             if r >= ctx.eps {
-                self.scratch.push((r, e as i32));
+                self.scratch.push((r, crate::util::ids::edge_id(e)));
             }
         }
         self.take_topk(k)
@@ -158,7 +158,7 @@ impl Scheduler for Rbp {
         self.scratch.clear();
         for (e, &r) in residuals[..m].iter().enumerate() {
             if r >= ctx.eps && oracle.is_exact(e) {
-                self.scratch.push((r, e as i32));
+                self.scratch.push((r, crate::util::ids::edge_id(e)));
             }
         }
         self.take_topk(k_target)

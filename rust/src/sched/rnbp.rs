@@ -78,13 +78,13 @@ impl Rnbp {
             // full update of the ε-filtered frontier — no RNG draws
             for (e, &r) in residuals[..m].iter().enumerate() {
                 if r >= eps {
-                    frontier.push(e as i32);
+                    frontier.push(crate::util::ids::edge_id(e));
                 }
             }
         } else {
             for (e, &r) in residuals[..m].iter().enumerate() {
                 if r >= eps && self.rng.coin(p) {
-                    frontier.push(e as i32);
+                    frontier.push(crate::util::ids::edge_id(e));
                 }
             }
         }
@@ -94,7 +94,7 @@ impl Rnbp {
             // (guarantees progress, negligible cost at this size).
             for (e, &r) in residuals[..m].iter().enumerate() {
                 if r >= eps {
-                    frontier.push(e as i32);
+                    frontier.push(crate::util::ids::edge_id(e));
                 }
             }
         }

@@ -91,7 +91,7 @@ impl ResidualSplash {
                     self.level[u] = self.epoch;
                     // incoming(v) yields e with dst=v, src=u, i.e. e
                     // IS the inward u -> v message of this level.
-                    self.tree_edges[d - 1].push(e as i32);
+                    self.tree_edges[d - 1].push(crate::util::ids::edge_id(e));
                     self.bfs_next.push(u);
                     added += 2; // inward + outward update
                 }
@@ -229,7 +229,7 @@ impl Scheduler for ResidualSplash {
                 r = r.max(ctx.residuals[e]);
             }
             if r >= ctx.eps {
-                self.vertex_res.push((r, v as i32));
+                self.vertex_res.push((r, crate::util::ids::vertex_id(v)));
             }
         }
         if self.vertex_res.is_empty() {
@@ -275,7 +275,7 @@ impl Scheduler for ResidualSplash {
             for &(_, v) in roots.iter().take(16) {
                 for e in mrf.incoming(v as usize) {
                     if ctx.residuals[e] >= ctx.eps {
-                        wave.push(e as i32);
+                        wave.push(crate::util::ids::edge_id(e));
                     }
                 }
             }
@@ -343,7 +343,7 @@ impl Scheduler for ResidualSplash {
         self.begin_epoch(mrf);
         let mut msg_count = 0usize;
         while let Some(root) = next_certified_root(mrf, ctx.eps, oracle, &mut self.root_heap) {
-            emitted.push(root as i32);
+            emitted.push(crate::util::ids::vertex_id(root));
             if self.level[root] == self.epoch {
                 continue; // already absorbed into another splash
             }
@@ -371,7 +371,7 @@ impl Scheduler for ResidualSplash {
             for &v in emitted.iter().take(16) {
                 for e in mrf.incoming(v as usize) {
                     if oracle.resolve(e) >= ctx.eps {
-                        wave.push(e as i32);
+                        wave.push(crate::util::ids::edge_id(e));
                     }
                 }
             }

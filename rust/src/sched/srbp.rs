@@ -96,7 +96,7 @@ pub fn run_serial(mrf: &Mrf, params: &RunParams) -> Result<RunResult> {
         // pop-max and commit its cached candidate (asynchronously)
         phases.time("select", || heap.pop());
         // each pop is its own single-edge wave in the digest's terms
-        digest.push_edge(e as i32);
+        digest.push_edge(crate::util::ids::edge_id(e));
         digest.push_wave_end();
         phases.time("commit", || {
             let rg = rows.range(e);

@@ -1,0 +1,93 @@
+//! Checked integer narrowings for graph ids and packed offsets.
+//!
+//! The id paths in this crate narrow `usize` indices into compact
+//! storage types: `i32` wave/frontier edge ids, `u32` CSR adjacency
+//! entries and offsets, `u16` label-window offsets. A bare `as` cast
+//! wraps silently past the target's range — PR 7 hit exactly that bug
+//! in mq wave construction, where `e as i32` past `i32::MAX` emitted
+//! negative edge ids that aliased the frontier sentinel — so every
+//! such narrowing now routes through these helpers, which panic
+//! loudly at the overflow site instead of corrupting downstream
+//! state. The `narrowing-cast` rule in [`crate::util::lint`] keeps
+//! new bare casts out of non-test code.
+//!
+//! All helpers are single-branch checks; on the paths that use them
+//! (scheduler scratch pushes, CSR fills) the branch is perfectly
+//! predicted and disappears next to the surrounding memory traffic.
+
+/// Checked edge-id narrowing for `i32` wave/frontier storage.
+///
+/// Also usable as an exclusive range bound (`0..edge_id(live)`),
+/// which requires the *count* itself to fit in `i32`.
+#[inline]
+pub fn edge_id(e: usize) -> i32 {
+    i32::try_from(e).expect("edge index exceeds i32 wave ids")
+}
+
+/// Checked edge-id narrowing for `u32` CSR adjacency storage.
+#[inline]
+pub fn edge_id_u32(e: usize) -> u32 {
+    u32::try_from(e).expect("edge index exceeds u32 adjacency ids")
+}
+
+/// Checked vertex-id narrowing for `i32` src/dst/root tables.
+#[inline]
+pub fn vertex_id(v: usize) -> i32 {
+    i32::try_from(v).expect("vertex index exceeds i32 graph ids")
+}
+
+/// Checked `usize -> i32` narrowing for small counts (e.g. arities),
+/// with the caller naming the quantity for the panic message.
+#[inline]
+pub fn narrow_i32(x: usize, what: &str) -> i32 {
+    i32::try_from(x).unwrap_or_else(|_| panic!("{what} {x} exceeds i32"))
+}
+
+/// Checked `usize -> u32` narrowing for offsets and lengths.
+#[inline]
+pub fn narrow_u32(x: usize, what: &str) -> u32 {
+    u32::try_from(x).unwrap_or_else(|_| panic!("{what} {x} exceeds u32"))
+}
+
+/// Checked `usize -> u16` narrowing for packed per-row offsets.
+#[inline]
+pub fn narrow_u16(x: usize, what: &str) -> u16 {
+    u16::try_from(x).unwrap_or_else(|_| panic!("{what} {x} exceeds u16"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn narrowings_roundtrip_in_range() {
+        assert_eq!(edge_id(0), 0);
+        assert_eq!(edge_id(i32::MAX as usize), i32::MAX);
+        assert_eq!(edge_id_u32(u32::MAX as usize), u32::MAX);
+        assert_eq!(vertex_id(17), 17);
+        assert_eq!(narrow_i32(42, "arity"), 42);
+        assert_eq!(narrow_u32(1 << 20, "offset"), 1 << 20);
+        assert_eq!(narrow_u16(u16::MAX as usize, "window"), u16::MAX);
+    }
+
+    // Mirrors the historical mq.rs regression test: the coordinator's
+    // frontier/dirty-list pushes now share this helper, so one
+    // overflow guard covers every i32 edge-id path.
+    #[test]
+    #[should_panic(expected = "exceeds i32")]
+    fn edge_id_narrowing_is_checked() {
+        let _ = edge_id(i32::MAX as usize + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds i32")]
+    fn vertex_id_narrowing_is_checked() {
+        let _ = vertex_id(usize::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "label-window offset 65536 exceeds u16")]
+    fn named_narrowing_reports_quantity() {
+        let _ = narrow_u16(1 << 16, "label-window offset");
+    }
+}

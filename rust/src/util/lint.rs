@@ -1,0 +1,948 @@
+//! `bp-lint`: a zero-dependency static-analysis pass over this
+//! crate's own sources, enforcing invariants derived from the repo's
+//! shipped bug history.
+//!
+//! The scanner is token-level, not type-aware: it strips comments and
+//! string/char literals (preserving byte offsets and line structure),
+//! then pattern-matches the stripped code. Five rules run:
+//!
+//! * `float-ord` — no `partial_cmp` and no relational-operator
+//!   comparators in `sort_by`-family calls; float comparisons must go
+//!   through `total_cmp` (the PR 3 NaN-sort class). `PartialOrd`
+//!   *definitions* that delegate to the derived total order
+//!   (`Some(self.cmp(other))`, the `QEntry` integer-key pattern) are
+//!   allowlisted.
+//! * `narrowing-cast` — no bare `as i32` / `as u32` / `as u16` in
+//!   non-test code; id narrowings route through the checked helpers
+//!   in [`crate::util::ids`] (the PR 7 silent-wrap class).
+//! * `determinism` — in the report-rendering modules
+//!   (`runtime/server.rs`, `harness/report.rs`, `util/stats.rs`):
+//!   no `HashMap`/`HashSet`, no `Instant`/`SystemTime`, no thread
+//!   identity. Reports must be byte-identical across runs (the PR 9
+//!   SLO-report contract).
+//! * `atomic-justify` — every `Ordering::Relaxed` use site needs a
+//!   rationale comment containing the marker `ordering:` on the same
+//!   line or within the six lines above it.
+//! * `safety-comment` — every `unsafe` keyword (block or impl) needs
+//!   a comment containing the marker `SAFETY:` in the same window.
+//!
+//! A violation can be waived with a comment whose text (after the
+//! comment markers) begins with the exact form
+//! `lint:allow(<rule>): <reason>`; the waiver covers violations on
+//! its own line and the line directly below, must name a real rule,
+//! must carry a non-empty reason, and must actually match a
+//! violation — reasonless, unknown-rule, and unused waivers are
+//! themselves reported. Waivers are counted and printed so the
+//! escape hatch stays visible.
+//!
+//! Known limitation: `atomic-justify` matches the fully qualified
+//! `Ordering::Relaxed` form the codebase uses throughout; a bare
+//! `Relaxed` import would evade it (and would collide with
+//! `SelectKind::Relaxed`, which is why the rule is scoped this way).
+//!
+//! Drivers: `rust/tests/repo_lint.rs` gates CI, and `bp-sched lint`
+//! runs the same walk from the command line.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lines above a violation that a `SAFETY:` / `ordering:` marker
+/// comment may occupy and still count as adjacent. Six lines covers
+/// the repo's multi-line CAS call chains and block-style SAFETY
+/// comments without letting a stale header justify a distant site.
+pub const MARKER_WINDOW: usize = 6;
+
+/// Modules covered by the `determinism` rule: everything that renders
+/// report bytes the server diff-tests for byte-identity.
+pub const DETERMINISM_MODULES: [&str; 3] =
+    ["runtime/server.rs", "harness/report.rs", "util/stats.rs"];
+
+/// The five enforced rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    FloatOrd,
+    NarrowingCast,
+    Determinism,
+    AtomicJustify,
+    SafetyComment,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [
+        Rule::FloatOrd,
+        Rule::NarrowingCast,
+        Rule::Determinism,
+        Rule::AtomicJustify,
+        Rule::SafetyComment,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::FloatOrd => "float-ord",
+            Rule::NarrowingCast => "narrowing-cast",
+            Rule::Determinism => "determinism",
+            Rule::AtomicJustify => "atomic-justify",
+            Rule::SafetyComment => "safety-comment",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == name)
+    }
+}
+
+/// Whether a file is crate source or part of the integration-test
+/// tree (`rust/tests`), where `narrowing-cast` and `atomic-justify`
+/// do not apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceKind {
+    Lib,
+    Tests,
+}
+
+/// One finding. `rule` is the rule name, or `"waiver"` for problems
+/// with the waiver syntax itself (which cannot be waived).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A parsed, well-formed waiver.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+}
+
+/// Comment/string-stripped view of one source file. `code` has the
+/// same byte length and newline positions as the input (stripped
+/// spans become spaces; string delimiters are kept). `comments`
+/// holds the comment text present on each line, in line order.
+pub struct Stripped {
+    pub code: String,
+    pub comments: Vec<(usize, String)>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+fn utf8_len(b0: u8) -> usize {
+    if b0 < 0x80 {
+        1
+    } else if b0 >> 5 == 0b110 {
+        2
+    } else if b0 >> 4 == 0b1110 {
+        3
+    } else {
+        4
+    }
+}
+
+fn add_comment(comments: &mut Vec<(usize, String)>, line: usize, text: &str) {
+    match comments.last_mut() {
+        Some((l, s)) if *l == line => s.push_str(text),
+        _ => comments.push((line, text.to_string())),
+    }
+}
+
+/// Strip comments and string/char literals from Rust source. Handles
+/// line and nested block comments, plain/byte/raw strings (any hash
+/// depth), raw identifiers, and char literals vs. lifetimes.
+pub fn strip(source: &str) -> Stripped {
+    let b = source.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        // Line comment: record text, blank to (exclusive) newline.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            add_comment(&mut comments, line, &source[start..i]);
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 0usize;
+            let mut seg = i;
+            while i < n {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if b[i] == b'\n' {
+                    add_comment(&mut comments, line, &source[seg..i]);
+                    out.push(b'\n');
+                    line += 1;
+                    i += 1;
+                    seg = i;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            add_comment(&mut comments, line, &source[seg..i]);
+            continue;
+        }
+        // Raw strings (r"", r#""#, br#""#), byte strings, byte chars.
+        if c == b'r' || c == b'b' {
+            let prev_ident = out.last().is_some_and(|&p| is_ident_byte(p));
+            if !prev_ident {
+                let mut j = i + 1;
+                let raw_candidate = if c == b'r' {
+                    true
+                } else if j < n && b[j] == b'r' {
+                    j += 1;
+                    true
+                } else {
+                    false
+                };
+                if raw_candidate {
+                    let mut hashes = 0usize;
+                    while j + hashes < n && b[j + hashes] == b'#' {
+                        hashes += 1;
+                    }
+                    if j + hashes < n && b[j + hashes] == b'"' {
+                        let body = j + hashes + 1;
+                        out.resize(out.len() + (body - i), b' ');
+                        i = body;
+                        while i < n {
+                            if b[i] == b'"'
+                                && i + hashes < n
+                                && b[i + 1..i + 1 + hashes].iter().all(|&h| h == b'#')
+                            {
+                                out.resize(out.len() + 1 + hashes, b' ');
+                                i += 1 + hashes;
+                                break;
+                            }
+                            if b[i] == b'\n' {
+                                out.push(b'\n');
+                                line += 1;
+                            } else {
+                                out.push(b' ');
+                            }
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    // Not a raw string: raw identifier (r#type) or a
+                    // plain identifier starting with r/b; fall through.
+                }
+                if c == b'b' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'\'') {
+                    // Byte string / byte char: blank the prefix and
+                    // let the quote branches handle the body.
+                    out.push(b' ');
+                    i += 1;
+                    continue;
+                }
+            }
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        // Plain string literal.
+        if c == b'"' {
+            out.push(b'"');
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' && i + 1 < n {
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'"' {
+                    out.push(b'"');
+                    i += 1;
+                    break;
+                } else if b[i] == b'\n' {
+                    out.push(b'\n');
+                    line += 1;
+                    i += 1;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: blank quote, backslash, the
+                // escaped byte, then everything to the closing quote
+                // (covers multi-byte escapes like the unicode form).
+                out.push(b' ');
+                out.push(b' ');
+                i += 2;
+                if i < n {
+                    out.push(b' ');
+                    i += 1;
+                }
+                while i < n && b[i] != b'\'' {
+                    if b[i] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                    } else {
+                        out.push(b' ');
+                    }
+                    i += 1;
+                }
+                if i < n {
+                    out.push(b' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 1 < n {
+                let w = utf8_len(b[i + 1]);
+                let close = i + 1 + w;
+                if close < n && b[close] == b'\'' {
+                    // Unescaped char literal: exactly one code point
+                    // then a closing quote.
+                    out.resize(out.len() + (close + 1 - i), b' ');
+                    i = close + 1;
+                    continue;
+                }
+            }
+            // Lifetime or loop label: keep the quote as code.
+            out.push(b'\'');
+            i += 1;
+            continue;
+        }
+        if c == b'\n' {
+            out.push(b'\n');
+            line += 1;
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    let code = String::from_utf8(out).expect("stripped source stays valid UTF-8");
+    Stripped { code, comments }
+}
+
+fn line_starts(code: &str) -> Vec<usize> {
+    let mut v = vec![0usize];
+    for (i, byte) in code.bytes().enumerate() {
+        if byte == b'\n' {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+fn line_of(starts: &[usize], pos: usize) -> usize {
+    starts.partition_point(|&s| s <= pos)
+}
+
+fn find_from(code: &str, from: usize, pat: &str) -> Option<usize> {
+    code[from..].find(pat).map(|p| p + from)
+}
+
+/// Word-bounded occurrences of `word` in stripped code. `word` may
+/// contain `::`; only its first and last characters are
+/// boundary-checked.
+fn ident_occurrences(code: &str, word: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = find_from(code, from, word) {
+        let before_ok = p == 0 || !is_ident_byte(b[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= b.len() || !is_ident_byte(b[after]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        from = p + word.len();
+    }
+    out
+}
+
+/// Byte ranges of `#[cfg(test)]` items, found by brace-matching the
+/// stripped code (strings and comments are already blanked, so brace
+/// counting is exact).
+fn test_regions(code: &str) -> Vec<(usize, usize)> {
+    const ATTR: &str = "#[cfg(test)]";
+    let b = code.as_bytes();
+    let mut regions = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = find_from(code, from, ATTR) {
+        let mut k = p + ATTR.len();
+        let mut open = None;
+        while k < b.len() {
+            if b[k] == b'{' {
+                open = Some(k);
+                break;
+            }
+            if b[k] == b';' {
+                break;
+            }
+            k += 1;
+        }
+        if let Some(o) = open {
+            let mut depth = 0usize;
+            let mut k2 = o;
+            let mut end = b.len();
+            while k2 < b.len() {
+                if b[k2] == b'{' {
+                    depth += 1;
+                } else if b[k2] == b'}' {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k2 + 1;
+                        break;
+                    }
+                }
+                k2 += 1;
+            }
+            regions.push((p, end));
+            from = end;
+        } else {
+            let end = k.min(b.len());
+            regions.push((p, end));
+            from = end + 1;
+        }
+    }
+    regions
+}
+
+fn in_test_region(regions: &[(usize, usize)], pos: usize) -> bool {
+    regions.iter().any(|&(s, e)| (s..e).contains(&pos))
+}
+
+/// Contents between the paren at `open` and its match (or to EOF).
+fn paren_args(code: &str, open: usize) -> &str {
+    let b = code.as_bytes();
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < b.len() {
+        if b[k] == b'(' {
+            depth += 1;
+        } else if b[k] == b')' {
+            depth -= 1;
+            if depth == 0 {
+                return &code[open + 1..k];
+            }
+        }
+        k += 1;
+    }
+    &code[open + 1..]
+}
+
+struct FileCx<'a> {
+    file: &'a str,
+    code: &'a str,
+    comments: &'a [(usize, String)],
+    starts: Vec<usize>,
+    regions: Vec<(usize, usize)>,
+    kind: SourceKind,
+    out: Vec<Violation>,
+}
+
+impl FileCx<'_> {
+    fn line_of(&self, pos: usize) -> usize {
+        line_of(&self.starts, pos)
+    }
+
+    fn in_tests(&self, pos: usize) -> bool {
+        self.kind == SourceKind::Tests || in_test_region(&self.regions, pos)
+    }
+
+    fn has_marker(&self, line: usize, marker: &str) -> bool {
+        let lo = line.saturating_sub(MARKER_WINDOW);
+        self.comments
+            .iter()
+            .any(|(l, t)| (lo..=line).contains(l) && t.contains(marker))
+    }
+
+    fn push(&mut self, line: usize, rule: Rule, message: String) {
+        self.out.push(Violation {
+            file: self.file.to_string(),
+            line,
+            rule: rule.name(),
+            message,
+        });
+    }
+
+    fn rule_float_ord(&mut self) {
+        let code = self.code;
+        for p in ident_occurrences(code, "partial_cmp") {
+            let line = self.line_of(p);
+            let before = code[..p].trim_end();
+            let is_def = before.ends_with("fn")
+                && !before[..before.len() - 2]
+                    .ends_with(|ch: char| ch.is_alphanumeric() || ch == '_');
+            if is_def {
+                let mut end = (p + 240).min(code.len());
+                while !code.is_char_boundary(end) {
+                    end -= 1;
+                }
+                let window: String = code[p..end].split_whitespace().collect();
+                if !window.contains("Some(self.cmp(") {
+                    self.push(
+                        line,
+                        Rule::FloatOrd,
+                        "partial_cmp definition must delegate via Some(self.cmp(..))".to_string(),
+                    );
+                }
+            } else {
+                self.push(
+                    line,
+                    Rule::FloatOrd,
+                    "partial-order comparison; floats must compare via total_cmp".to_string(),
+                );
+            }
+        }
+        const COMPARATOR_METHODS: [&str; 6] = [
+            "sort_by",
+            "sort_unstable_by",
+            "select_nth_unstable_by",
+            "max_by",
+            "min_by",
+            "binary_search_by",
+        ];
+        for m in COMPARATOR_METHODS {
+            for p in ident_occurrences(code, m) {
+                let after = p + m.len();
+                if code.as_bytes().get(after) != Some(&b'(') {
+                    continue;
+                }
+                let args = paren_args(code, after);
+                if (args.contains('<') || args.contains('>')) && !args.contains("cmp") {
+                    let line = self.line_of(p);
+                    self.push(
+                        line,
+                        Rule::FloatOrd,
+                        format!("`{m}` comparator uses `<`/`>`; use total_cmp or integer keys"),
+                    );
+                }
+            }
+        }
+    }
+
+    fn rule_narrowing_cast(&mut self) {
+        const TARGETS: [&str; 3] = ["i32", "u32", "u16"];
+        let code = self.code;
+        let b = code.as_bytes();
+        for p in ident_occurrences(code, "as") {
+            if self.in_tests(p) {
+                continue;
+            }
+            let mut k = p + 2;
+            while k < b.len() && (b[k] == b' ' || b[k] == b'\n' || b[k] == b'\t' || b[k] == b'\r')
+            {
+                k += 1;
+            }
+            let start = k;
+            while k < b.len() && is_ident_byte(b[k]) {
+                k += 1;
+            }
+            let ty = &code[start..k];
+            if TARGETS.contains(&ty) {
+                let line = self.line_of(p);
+                self.push(
+                    line,
+                    Rule::NarrowingCast,
+                    format!("bare `as {ty}` narrowing; use util::ids checked conversions"),
+                );
+            }
+        }
+    }
+
+    fn rule_determinism(&mut self) {
+        if !DETERMINISM_MODULES.iter().any(|m| self.file.ends_with(m)) {
+            return;
+        }
+        const BANNED: [&str; 5] = ["HashMap", "HashSet", "Instant", "SystemTime", "ThreadId"];
+        let code = self.code;
+        for t in BANNED {
+            for p in ident_occurrences(code, t) {
+                if self.in_tests(p) {
+                    continue;
+                }
+                let line = self.line_of(p);
+                self.push(
+                    line,
+                    Rule::Determinism,
+                    format!("`{t}` in a report module; reports must be byte-identical"),
+                );
+            }
+        }
+        let mut from = 0usize;
+        while let Some(p) = find_from(code, from, "thread::current") {
+            if !self.in_tests(p) {
+                let line = self.line_of(p);
+                self.push(
+                    line,
+                    Rule::Determinism,
+                    "thread identity in a report module; reports must be byte-stable".to_string(),
+                );
+            }
+            from = p + 1;
+        }
+    }
+
+    fn rule_atomic_justify(&mut self) {
+        if self.kind == SourceKind::Tests {
+            return;
+        }
+        let code = self.code;
+        let mut lines = BTreeSet::new();
+        for p in ident_occurrences(code, "Ordering::Relaxed") {
+            if in_test_region(&self.regions, p) {
+                continue;
+            }
+            lines.insert(self.line_of(p));
+        }
+        for line in lines {
+            if !self.has_marker(line, "ordering:") {
+                self.push(
+                    line,
+                    Rule::AtomicJustify,
+                    "Ordering::Relaxed without an adjacent `// ordering:` rationale".to_string(),
+                );
+            }
+        }
+    }
+
+    fn rule_safety_comment(&mut self) {
+        let code = self.code;
+        let mut lines = BTreeSet::new();
+        for p in ident_occurrences(code, "unsafe") {
+            lines.insert(self.line_of(p));
+        }
+        for line in lines {
+            if !self.has_marker(line, "SAFETY:") {
+                self.push(
+                    line,
+                    Rule::SafetyComment,
+                    "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+                );
+            }
+        }
+    }
+}
+
+fn parse_waivers(file: &str, comments: &[(usize, String)]) -> (Vec<Waiver>, Vec<Violation>) {
+    let mut waivers = Vec::new();
+    let mut errors = Vec::new();
+    for (line, text) in comments {
+        let t = text.trim_start_matches(['/', '*', '!', ' ', '\t']);
+        let Some(rest) = t.strip_prefix("lint:allow(") else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            errors.push(Violation {
+                file: file.to_string(),
+                line: *line,
+                rule: "waiver",
+                message: "malformed lint waiver: missing closing paren".to_string(),
+            });
+            continue;
+        };
+        let name = rest[..close].trim();
+        let after = rest[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        match Rule::from_name(name) {
+            None => errors.push(Violation {
+                file: file.to_string(),
+                line: *line,
+                rule: "waiver",
+                message: format!("unknown rule `{name}` in lint waiver"),
+            }),
+            Some(_) if reason.is_empty() => errors.push(Violation {
+                file: file.to_string(),
+                line: *line,
+                rule: "waiver",
+                message: "lint waiver missing reason after the colon".to_string(),
+            }),
+            Some(rule) => waivers.push(Waiver {
+                line: *line,
+                rule,
+                reason: reason.to_string(),
+            }),
+        }
+    }
+    (waivers, errors)
+}
+
+/// Lint result for one source file.
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    pub waived: Vec<(Violation, String)>,
+}
+
+/// Run all five rules plus waiver processing over one source string.
+/// `file` is the display label and drives the `determinism` module
+/// scoping; `kind` marks integration-test sources.
+pub fn lint_source(file: &str, source: &str, kind: SourceKind) -> FileReport {
+    let stripped = strip(source);
+    let starts = line_starts(&stripped.code);
+    let regions = test_regions(&stripped.code);
+    let mut cx = FileCx {
+        file,
+        code: &stripped.code,
+        comments: &stripped.comments,
+        starts,
+        regions,
+        kind,
+        out: Vec::new(),
+    };
+    cx.rule_float_ord();
+    cx.rule_narrowing_cast();
+    cx.rule_determinism();
+    cx.rule_atomic_justify();
+    cx.rule_safety_comment();
+    let found = cx.out;
+    let (waivers, mut errors) = parse_waivers(file, &stripped.comments);
+    let mut used = vec![false; waivers.len()];
+    let mut kept = Vec::new();
+    let mut waived = Vec::new();
+    for v in found {
+        let slot = waivers
+            .iter()
+            .position(|w| w.rule.name() == v.rule && (w.line == v.line || w.line + 1 == v.line));
+        match slot {
+            Some(ix) => {
+                used[ix] = true;
+                waived.push((v, waivers[ix].reason.clone()));
+            }
+            None => kept.push(v),
+        }
+    }
+    for (ix, w) in waivers.iter().enumerate() {
+        if !used[ix] {
+            errors.push(Violation {
+                file: file.to_string(),
+                line: w.line,
+                rule: "waiver",
+                message: format!("unused lint waiver for `{}`", w.rule.name()),
+            });
+        }
+    }
+    kept.append(&mut errors);
+    kept.sort_by_key(|v| (v.line, v.rule));
+    FileReport {
+        violations: kept,
+        waived,
+    }
+}
+
+/// Aggregate result over a crate tree.
+#[derive(Default)]
+pub struct LintReport {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+    pub waived: Vec<(Violation, String)>,
+}
+
+impl LintReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!("{}:{}: [{}] {}\n", v.file, v.line, v.rule, v.message));
+        }
+        for (v, reason) in &self.waived {
+            out.push_str(&format!(
+                "{}:{}: [{}] waived: {}\n",
+                v.file, v.line, v.rule, reason
+            ));
+        }
+        out.push_str(&format!(
+            "bp-lint: {} file(s) scanned, {} unwaived violation(s), {} waiver(s)\n",
+            self.files,
+            self.violations.len(),
+            self.waived.len(),
+        ));
+        out
+    }
+}
+
+fn collect_rs(
+    dir: &Path,
+    kind: SourceKind,
+    out: &mut Vec<(PathBuf, SourceKind)>,
+) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, kind, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push((path, kind));
+        }
+    }
+    Ok(())
+}
+
+/// Walk `<crate_dir>/src` (as crate sources) and `<crate_dir>/tests`
+/// (as test sources) and lint every `.rs` file, in deterministic
+/// path order.
+pub fn lint_crate(crate_dir: &Path) -> io::Result<LintReport> {
+    let mut files: Vec<(PathBuf, SourceKind)> = Vec::new();
+    collect_rs(&crate_dir.join("src"), SourceKind::Lib, &mut files)?;
+    collect_rs(&crate_dir.join("tests"), SourceKind::Tests, &mut files)?;
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut report = LintReport::default();
+    for (path, kind) in files {
+        let source = fs::read_to_string(&path)?;
+        let label = path
+            .strip_prefix(crate_dir)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let fr = lint_source(&label, &source, kind);
+        report.files += 1;
+        report.violations.extend(fr.violations);
+        report.waived.extend(fr.waived);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_nested_block_comments() {
+        let s = strip("let a = 1; /* x /* y */ z */ let b = 2;\n");
+        assert!(s.code.contains("let a = 1;"));
+        assert!(s.code.contains("let b = 2;"));
+        assert!(!s.code.contains('x'));
+        assert!(!s.code.contains('z'));
+        assert_eq!(s.comments.len(), 1);
+        assert!(s.comments[0].1.contains('y'));
+    }
+
+    #[test]
+    fn strips_raw_strings_without_fake_comments() {
+        let src = "let s = r#\"// not a comment\n'\"' as i32\"#;\nlet x = 1;\n";
+        let s = strip(src);
+        assert!(s.comments.is_empty());
+        assert!(s.code.contains("let x = 1;"));
+        assert!(!s.code.contains("as i32"));
+        // Line structure preserved: `let x` sits on line 3.
+        let starts = line_starts(&s.code);
+        let pos = s.code.find("let x").unwrap();
+        assert_eq!(line_of(&starts, pos), 3);
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        let src = "let q = '\"'; let l: &'static str = \"s\"; // tail\n";
+        let s = strip(src);
+        assert!(s.code.contains("&'static str"));
+        assert!(s.code.contains("let l:"));
+        assert_eq!(s.comments.len(), 1);
+        assert!(s.comments[0].1.contains("tail"));
+    }
+
+    #[test]
+    fn escaped_quote_chars_and_strings() {
+        let src = "let a = '\\''; let b = \"x\\\"y // z\"; let c = 9;\n";
+        let s = strip(src);
+        assert!(s.comments.is_empty());
+        assert!(s.code.contains("let c = 9;"));
+    }
+
+    #[test]
+    fn byte_and_raw_prefixes() {
+        let src = "let a = b\"bytes\"; let c = b'x'; let d = r#type_name; let e = 1;\n";
+        let s = strip(src);
+        assert!(!s.code.contains("bytes"));
+        assert!(s.code.contains("type_name"));
+        assert!(s.code.contains("let e = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped_for_narrowing() {
+        let src = concat!(
+            "pub fn live() -> usize { 7 }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { let x = 5usize; let _ = x as u32; }\n",
+            "}\n",
+        );
+        let fr = lint_source("src/sample.rs", src, SourceKind::Lib);
+        assert!(fr.violations.is_empty(), "{:?}", fr.violations);
+    }
+
+    #[test]
+    fn waiver_requires_reason() {
+        let src = "// lint:allow(narrowing-cast)\nfn f(e: usize) -> i32 { e as i32 }\n";
+        let fr = lint_source("src/sample.rs", src, SourceKind::Lib);
+        let rules: Vec<&str> = fr.violations.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"narrowing-cast"), "{rules:?}");
+        assert!(rules.contains(&"waiver"), "{rules:?}");
+    }
+
+    #[test]
+    fn waiver_with_reason_covers_next_line() {
+        let src = concat!(
+            "// lint:allow(narrowing-cast): same-width bit fold, wrap intended\n",
+            "fn f(e: usize) -> i32 { e as i32 }\n",
+        );
+        let fr = lint_source("src/sample.rs", src, SourceKind::Lib);
+        assert!(fr.violations.is_empty(), "{:?}", fr.violations);
+        assert_eq!(fr.waived.len(), 1);
+        assert!(fr.waived[0].1.contains("bit fold"));
+    }
+
+    #[test]
+    fn unknown_rule_and_unused_waivers_are_reported() {
+        let src = concat!(
+            "// lint:allow(bogus-rule): whatever\n",
+            "// lint:allow(float-ord): nothing here to waive\n",
+            "fn g() {}\n",
+        );
+        let fr = lint_source("src/sample.rs", src, SourceKind::Lib);
+        assert_eq!(fr.violations.len(), 2, "{:?}", fr.violations);
+        assert!(fr.violations.iter().all(|v| v.rule == "waiver"));
+    }
+
+    #[test]
+    fn marker_window_bounds() {
+        // ordering comment 6 lines above the use: accepted.
+        let near = concat!(
+            "fn f(a: &std::sync::atomic::AtomicU32) {\n",
+            "    // ordering: counter, no payload published\n",
+            "    //\n    //\n    //\n    //\n    //\n",
+            "    a.store(1, std::sync::atomic::Ordering::Relaxed);\n",
+            "}\n",
+        );
+        let fr = lint_source("src/sample.rs", near, SourceKind::Lib);
+        assert!(fr.violations.is_empty(), "{:?}", fr.violations);
+    }
+}

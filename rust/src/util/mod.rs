@@ -1,10 +1,13 @@
 //! Small self-contained substrates: deterministic RNG, statistics,
-//! JSON emission, wallclock timing, and a scoped parallel map.
+//! JSON emission, wallclock timing, a scoped parallel map, checked
+//! id narrowings, and the `bp-lint` repo scanner.
 //!
 //! All hand-rolled: the build is fully offline and vendored, so the usual
 //! crates (rand, serde, rayon) are intentionally not dependencies.
 
+pub mod ids;
 pub mod json;
+pub mod lint;
 pub mod parallel;
 pub mod rng;
 pub mod stats;

@@ -50,6 +50,9 @@ where
                 // disjoint capture would otherwise move only the (non-Send)
                 // raw-pointer field into the closure.
                 let slots_ptr = &slots_ptr;
+                // ordering: work-index claim only; RMWs on one atomic
+                // serialize at any ordering, and results are read
+                // after the scope join, which synchronizes.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -159,6 +162,8 @@ pub fn par_rows_layout<S, Mk, F>(
                 let res_ptr = &res_ptr;
                 let mut scratch = mk_scratch();
                 loop {
+                    // ordering: chunk-index claim only; see par_map —
+                    // outputs are read after the scope join.
                     let c = next.fetch_add(1, Ordering::Relaxed);
                     let start = c * chunk;
                     if start >= n {
@@ -179,6 +184,9 @@ pub fn par_rows_layout<S, Mk, F>(
                             )
                         };
                         let r = f(&mut scratch, i, row);
+                        // SAFETY: slot i belongs to this worker's
+                        // chunk (disjoint ranges, claimed once); the
+                        // scope join orders this write before any read.
                         unsafe {
                             *res_ptr.0.add(i) = r;
                         }
@@ -199,7 +207,14 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
+// SAFETY: SendPtr only smuggles an address across the thread::scope
+// boundary; every dereference happens inside the callers above, which
+// guarantee disjoint writes (one owner per slot/chunk) and read the
+// buffers only after the scope joins. The wrapper itself carries no
+// aliasing or lifetime claims beyond those call sites.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared references to SendPtr expose only the raw address
+// (field reads), never a dereference; see the Send argument above.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]
